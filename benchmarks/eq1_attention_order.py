@@ -1,0 +1,34 @@
+"""Eq. 1 / Fig. 11: softmax-free attention optimal-order speedup.
+
+Verifies the h/w MAC-count ratio analytically (exact) and measures the wall
+speedup of Q(K^T V) vs (Q K^T)V on this host at the paper's dims (h=128, w=8)
+and at LM-scale dims.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.softmax_free_attention import (
+    attention_mac_counts,
+    softmax_free_attention,
+    softmax_free_attention_quadratic,
+)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    for (L, D, tag) in ((128, 8, "paper_dims"), (4096, 128, "lm_dims")):
+        orig, new = attention_mac_counts(L, D)
+        q, k, v = (jax.random.normal(kk, (8, 4, L, D)) for kk in jax.random.split(key, 3))
+        f_new = jax.jit(softmax_free_attention)
+        f_old = jax.jit(lambda a, b, c: softmax_free_attention_quadratic(a, b, c))
+        t_new = time_fn(f_new, q, k, v)
+        t_old = time_fn(f_old, q, k, v)
+        emit(f"eq1/{tag}", t_new,
+             f"mac_ratio={orig / new:.1f} (paper 16x at h=128,w=8) measured_speedup={t_old / t_new:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

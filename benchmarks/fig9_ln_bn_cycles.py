@@ -1,0 +1,40 @@
+"""Fig. 9: LN vs BN normalization schedule (ASIC cycle model + host timing).
+
+The paper claims the LN->BN swap cuts normalization cycles by ~2/3 (LN needs
+3 serial passes: mean, variance, normalize; BN is one constant-affine pass)
+and, after folding, BN costs nothing. We reproduce the cycle model exactly
+and measure LN vs BN-affine vs folded on this host.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.bn import BatchNorm, bn_cycle_model, fold_bn_into_linear, ln_cycle_model
+from repro import nn
+
+
+def run() -> None:
+    L = 128
+    ln_c, bn_c = ln_cycle_model(L), bn_cycle_model(L)
+    emit("fig9/cycle_model", 0.0,
+         f"ln_cycles={ln_c} bn_cycles={bn_c} saving={1 - bn_c / ln_c:.3f} (paper 0.66)")
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 128, 64))
+    w = jax.random.normal(key, (64, 64)) * 0.1
+    lnp = nn.init_layernorm(64)
+    bn = BatchNorm(64)
+    bnp = bn.init()
+
+    t_ln = time_fn(jax.jit(lambda a: nn.layernorm(lnp, a @ w)), x)
+    t_bn = time_fn(jax.jit(lambda a: bn(bnp, a @ w)), x)
+    w2, b2 = fold_bn_into_linear(w, None, bnp)
+    t_fold = time_fn(jax.jit(lambda a: a @ w2 + b2), x)
+    emit("fig9/host_timing", t_ln, f"ln={t_ln:.0f}us bn={t_bn:.0f}us bn_folded={t_fold:.0f}us")
+
+
+if __name__ == "__main__":
+    run()

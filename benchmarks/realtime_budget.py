@@ -1,0 +1,21 @@
+"""§IV-A real-time accounting: MMAC/frame vs the 16-MAC @ 62.5 MHz budget."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.streaming import RealTimeBudget
+from repro.models.tftnn import macs_per_frame, tftnn_config, tstnn_config
+
+
+def run() -> None:
+    budget = RealTimeBudget()
+    emit("realtime/required_clock", 0.0,
+         f"paper_workload=15.86MMAC/frame -> clock={budget.required_clock_hz / 1e6:.1f}MHz (paper 62.5)")
+    for cfg in (tftnn_config(), tstnn_config()):
+        mf = macs_per_frame(cfg) / 1e6
+        ok = budget.real_time_ok(mf * 1e6, clock_hz=62.5e6, num_macs=16)
+        emit(f"realtime/{cfg.name}", 0.0, f"mmac_per_frame={mf:.2f} fits_16MAC@62.5MHz={ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Roofline report: aggregates results/dryrun/*.json into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run(results_dir: str = RESULTS) -> None:
+    files = sorted(glob.glob(os.path.join(results_dir, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no dry-run results yet (run python -m repro.launch.dryrun)")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        name = os.path.basename(f).replace(".json", "")
+        if r.get("skipped"):
+            emit(f"roofline/{name}", 0.0, "SKIP " + r["reason"][:60])
+            continue
+        emit(
+            f"roofline/{name}",
+            r["bound_time"] * 1e6,
+            f"dom={r['dominant']} tc={r['t_compute']*1e3:.2f}ms tm={r['t_memory']*1e3:.2f}ms "
+            f"tcoll={r['t_collective']*1e3:.2f}ms frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_flop_fraction']:.2f} mem/dev={r['bytes_per_device']/1e9:.2f}GB",
+        )
+
+
+if __name__ == "__main__":
+    run()

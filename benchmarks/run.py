@@ -1,0 +1,64 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Trained-ablation tables
+(II/III/IV/VI) run short CPU trainings of reduced models — pass --quick to
+shrink them further, --full for the paper-faithful step counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer training steps")
+    ap.add_argument("--only", default=None, help="comma-separated table names")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        eq1_attention_order,
+        fig9_ln_bn_cycles,
+        realtime_budget,
+        roofline_report,
+        table1_models,
+        table2_domain,
+        table3_blocks,
+        table4_bn_ln,
+        table6_quant,
+        table7_compression,
+    )
+
+    steps2 = 12 if args.quick else 60
+    steps3 = 8 if args.quick else 40
+    suites = [
+        ("table1", table1_models.run),
+        ("table2", lambda: table2_domain.run(steps2)),
+        ("table3", lambda: table3_blocks.run(steps3)),
+        ("table4", lambda: table4_bn_ln.run(steps3)),
+        ("table6", lambda: table6_quant.run(steps2)),
+        ("table7", table7_compression.run),
+        ("eq1", eq1_attention_order.run),
+        ("fig9", fig9_ln_bn_cycles.run),
+        ("realtime", realtime_budget.run),
+        ("roofline", roofline_report.run),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    failed = []
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — report all suites
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

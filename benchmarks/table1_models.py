@@ -1,0 +1,44 @@
+"""Table I: model size / computation comparison (TSTNN vs TFTNN).
+
+Reproduces the paper's headline numbers: parameters and GMAC/s (1 s of 8 kHz
+audio) for the baseline and the compressed model, plus forward wall time on
+this host for reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.models.tftnn import (
+    apply_tft, gmacs_per_second, init_tft, param_count, tftnn_config, tstnn_config,
+)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    spec = jax.random.normal(key, (1, 257, 63, 2))  # 1 s at 8 kHz
+    for cfg, paper_params, paper_gmac in (
+        (tstnn_config(), 922.9e3, 9.87),
+        (tftnn_config(), 55.9e3, 0.496),
+    ):
+        params = init_tft(key, cfg)
+        n = param_count(params)
+        g = gmacs_per_second(cfg)
+        fwd = jax.jit(lambda p, x: apply_tft(p, x, cfg)[0])
+        us = time_fn(fwd, params, spec)
+        emit(
+            f"table1/{cfg.name}",
+            us,
+            f"params={n} (paper {paper_params:.0f}) gmacs={g:.3f} (paper {paper_gmac})",
+        )
+    tst, tft = param_count(init_tft(key, tstnn_config())), param_count(init_tft(key, tftnn_config()))
+    emit("table1/size_reduction", 0.0,
+         f"reduction={1 - tft / tst:.3f} (paper 0.939)")
+    emit("table1/gmac_reduction", 0.0,
+         f"reduction={1 - gmacs_per_second(tftnn_config()) / gmacs_per_second(tstnn_config()):.3f} (paper 0.949)")
+
+
+if __name__ == "__main__":
+    run()

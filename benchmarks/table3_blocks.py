@@ -1,0 +1,31 @@
+"""Table III: transformer-block-count ablation (1/2/3/4 blocks)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import emit
+from repro.models.tftnn import init_tft, param_count, tftnn_config
+from benchmarks.table2_domain import _score, _train
+
+STEPS = 40
+
+
+def run(steps: int = STEPS) -> None:
+    base = dataclasses.replace(
+        tftnn_config(), freq_bins=64, channels=16, att_dim=8, num_heads=1, gru_hidden=16,
+        dilation_rates=(1, 2),
+    )
+    for blocks in (1, 2, 3, 4):
+        cfg = dataclasses.replace(base, num_transformer_blocks=blocks)
+        state = _train(cfg, "t+f", steps, seed=blocks)
+        s = _score(cfg, state)
+        n = param_count(init_tft(jax.random.PRNGKey(0), cfg))
+        emit(f"table3/blocks={blocks}", 0.0,
+             f"params={n} si_snr={s['si_snr']:.2f} stoi_proxy={s['stoi_proxy']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Table IV: LN vs BN vs BN+extra-BN-in-MHA ablation.
+
+Paper ordering: LN best, plain BN drops, BN + extra BN in MHA recovers most
+of the gap. Short trained runs on synthetic data, relative ordering only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.models.tftnn import tftnn_config
+from benchmarks.table2_domain import _score, _train
+
+STEPS = 40
+
+
+def run(steps: int = STEPS) -> None:
+    base = dataclasses.replace(
+        tftnn_config(), freq_bins=64, channels=16, att_dim=8, num_heads=1, gru_hidden=16,
+        dilation_rates=(1, 2),
+    )
+    arms = (
+        ("LN", dataclasses.replace(base, norm="ln", softmax_free=False, extra_bn=False)),
+        ("BN", dataclasses.replace(base, norm="bn", softmax_free=False, extra_bn=False)),
+        ("BN+extraBN", dataclasses.replace(base, norm="bn", softmax_free=True, extra_bn=True)),
+    )
+    for tag, cfg in arms:
+        state = _train(cfg, "t+f", steps, seed=42)
+        s = _score(cfg, state)
+        emit(f"table4/{tag}", 0.0,
+             f"si_snr={s['si_snr']:.2f} stoi_proxy={s['stoi_proxy']:.3f} snr={s['snr']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

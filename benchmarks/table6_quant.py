@@ -1,0 +1,59 @@
+"""Table VI: post-training quantization ladder FP{32,16,10,9,8} / FxP{16,10,9,8}.
+
+Trains one tiny TFTNN, then post-quantizes weights+activations per scheme and
+scores enhancement quality — reproducing the paper's finding that FP10
+(1-5-4) is nearly lossless while FxP<=10 collapses (dynamic range 1e-8..30).
+Activation quantization is applied to the model input/output paths; weight
+quantization to every parameter leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import emit
+from repro.audio.metrics import all_metrics
+from repro.audio.synthetic import batch_for_step
+from repro.core import quant
+from repro.core.quant import quantize_tree
+from repro.train.train_loop import make_se_eval_step
+from benchmarks.table2_domain import BATCH, SAMPLES, _train
+
+STEPS = 60
+
+LADDER = (
+    ("fp32", quant.NONE),
+    ("fp16", quant.FP16),
+    ("fp10", quant.FP10),
+    ("fp9", quant.FP9),
+    ("fp8", quant.FP8),
+    ("fxp16", quant.FXP16),
+    ("fxp10", quant.FXP10),
+    ("fxp9", quant.FXP9),
+    ("fxp8", quant.FXP8),
+)
+
+
+def run(steps: int = STEPS) -> None:
+    from repro.models.tftnn import tftnn_config
+
+    cfg = dataclasses.replace(
+        tftnn_config(), freq_bins=64, channels=16, att_dim=8, num_heads=1, gru_hidden=16,
+        dilation_rates=(1, 2, 4),
+    )
+    state = _train(cfg, "t+f", steps)
+    ev = make_se_eval_step(cfg)
+    noisy, clean = batch_for_step(123, 0, batch=8, num_samples=SAMPLES)
+    for tag, spec in LADDER:
+        params = quantize_tree(state["params"], spec)
+        est = ev(params, quant.quantize(noisy, spec))
+        est = quant.quantize(est, spec)
+        s = {k: float(v) for k, v in all_metrics(est, clean).items()}
+        emit(f"table6/{tag}", 0.0,
+             f"si_snr={s['si_snr']:.2f} stoi_proxy={s['stoi_proxy']:.3f} snr={s['snr']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

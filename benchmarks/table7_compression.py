@@ -1,0 +1,41 @@
+"""Table VII: the four main compression methods' size/GMAC ladder."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.pruning import apply_ladder
+from repro.models.tftnn import gmacs_per_second, init_tft, param_count, tstnn_config
+
+PAPER = {
+    "baseline": (922.87, 9.87),
+    "R": (449.95, 3.83),
+    "R+S": (348.58, 3.01),
+    "R+S+halfch": (89.30, 0.782),
+    "R+S+halfch+halfTr": (55.92, 0.496),
+}
+
+LADDER = [
+    ("baseline", []),
+    ("R", ["R"]),
+    ("R+S", ["R", "S"]),
+    ("R+S+halfch", ["R", "S", "half_ch"]),
+    ("R+S+halfch+halfTr", ["R", "S", "half_ch", "half_blocks", "K", "G", "P"]),
+]
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    base = tstnn_config()
+    for name, steps in LADDER:
+        cfg = apply_ladder(base, steps)
+        n = param_count(init_tft(key, cfg)) / 1e3
+        g = gmacs_per_second(cfg)
+        pn, pg = PAPER[name]
+        emit(f"table7/{name}", 0.0,
+             f"size_k={n:.2f} (paper {pn}) gmac={g:.3f} (paper {pg})")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's pipeline end to end in ~2 minutes on CPU.
+
+1. Build TFTNN (the paper's 65k-param streaming enhancement model, reduced).
+2. Train a few dozen steps on synthetic noisy speech (2.5 dB SNR mixing).
+3. Enhance offline and verify the streaming (16 ms/frame) path produces the
+   SAME mask as the offline path — the paper's core deployment property.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.audio.metrics import all_metrics
+from repro.audio.stft import stft
+from repro.audio.synthetic import batch_for_step
+from repro.models import tftnn as tft
+from repro.train.train_loop import TrainSettings, make_se_eval_step, make_se_train_step, make_train_state
+
+cfg = dataclasses.replace(
+    tft.tftnn_config(), freq_bins=64, channels=16, att_dim=8, num_heads=1,
+    gru_hidden=16, dilation_rates=(1, 2, 4),
+)
+print(f"TFTNN (reduced): {tft.param_count(tft.init_tft(jax.random.PRNGKey(0), cfg))} params, "
+      f"causal={cfg.is_causal}")
+
+state = make_train_state(tft.init_tft(jax.random.PRNGKey(0), cfg), TrainSettings())
+train = jax.jit(make_se_train_step(cfg))
+for step in range(40):
+    noisy, clean = batch_for_step(0, step, batch=4, num_samples=8192)
+    state, m = train(state, noisy, clean)
+    if step % 10 == 0:
+        print(f"step {step:3d} loss={float(m['loss']):.4f} (F={float(m['loss_F']):.4f} T={float(m['loss_T']):.4f})")
+
+# offline enhancement
+noisy, clean = batch_for_step(99, 0, batch=2, num_samples=8192)
+est = make_se_eval_step(cfg)(state["params"], noisy)
+print("quality:", {k: round(float(v), 3) for k, v in all_metrics(est, clean).items()})
+
+# streaming == offline (the paper's streaming-aware-pruning invariant)
+spec = stft(noisy, n_fft=cfg.n_fft, hop=cfg.hop)
+offline_mask, _ = tft.apply_tft(state["params"], spec, cfg)
+st = tft.init_stream_state(state["params"], cfg, 2)
+frames = spec.transpose(2, 0, 1, 3)
+_, masks = jax.lax.scan(lambda s, f: tft.stream_step(state["params"], s, f, cfg), st, frames)
+streamed_mask = masks.transpose(1, 2, 0, 3)
+err = float(jnp.abs(streamed_mask - offline_mask).max())
+print(f"streaming-vs-offline max |err| = {err:.2e}  (exact: {'YES' if err < 1e-4 else 'NO'})")

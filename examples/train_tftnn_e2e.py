@@ -1,0 +1,83 @@
+"""End-to-end driver (the paper's kind: streaming SE): train the FULL 65k-param
+TFTNN for a few hundred steps on synthetic VoiceBank+UrbanSound stand-ins with
+the paper's recipe — cross-domain loss (Eq. 2, alpha=0.2), Adam @ 1e-3,
+ReduceLROnPlateau(0.5), checkpoint/restart, preemption-safe — then evaluate
+SNR / SI-SNR / STOI-proxy against the noisy baseline and run the Table VI
+post-training FP10 quantization check on the trained weights.
+
+Run:  PYTHONPATH=src python examples/train_tftnn_e2e.py [--steps 300]
+(~20-40 min on this CPU; --steps 60 for a faster pass)
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.audio.metrics import all_metrics
+from repro.audio.synthetic import batch_for_step
+from repro.core import quant
+from repro.core.quant import quantize_tree
+from repro.models import tftnn as tft
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import PreemptionGuard, StragglerMonitor
+from repro.train.optimizer import ReduceLROnPlateau
+from repro.train.train_loop import (
+    TrainSettings, make_se_eval_step, make_se_train_step, make_train_state,
+)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=4)  # the paper's batch size
+ap.add_argument("--samples", type=int, default=24000)  # 3 s @ 8 kHz, as in the paper
+ap.add_argument("--ckpt-dir", default="checkpoints/tftnn_e2e")
+args = ap.parse_args()
+
+cfg = tft.tftnn_config()  # the FULL model (65k params / 0.55 GMAC/s)
+params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+print(f"TFTNN full: {tft.param_count(params)} params "
+      f"(paper: 55.9k), {tft.gmacs_per_second(cfg):.3f} GMAC/s (paper: 0.496)")
+
+state = make_train_state(params, TrainSettings())
+ck = Checkpointer(args.ckpt_dir, keep_last_k=2)
+start = 0
+if ck.latest_step() is not None:
+    start, state = ck.restore(state)
+    print(f"resumed from step {start}")
+
+train = jax.jit(make_se_train_step(cfg))
+sched = ReduceLROnPlateau(lr=1e-3, factor=0.5, patience=8)
+mon = StragglerMonitor()
+t0 = time.time()
+with PreemptionGuard() as guard:
+    for step in range(start, args.steps):
+        mon.start_step()
+        noisy, clean = batch_for_step(0, step, batch=args.batch, num_samples=args.samples)
+        state, m = train(state, noisy, clean, jnp.asarray(sched.lr))
+        mon.end_step(step)
+        if (step + 1) % 20 == 0:
+            loss = float(m["loss"])
+            sched.update(loss)
+            print(f"step {step + 1:4d} loss {loss:.4f} lr {sched.lr:.1e} "
+                  f"({(time.time() - t0) / (step + 1 - start):.1f} s/step)")
+        if (step + 1) % 100 == 0 or guard.should_stop:
+            ck.save(step + 1, state)
+            if guard.should_stop:
+                print("preempted — checkpointed cleanly")
+                ck.wait()
+                raise SystemExit(0)
+ck.save(args.steps, state)
+ck.wait()
+
+ev = make_se_eval_step(cfg)
+noisy, clean = batch_for_step(123, 0, batch=8, num_samples=args.samples)
+est = ev(state["params"], noisy)
+print("enhanced:", {k: round(float(v), 3) for k, v in all_metrics(est, clean).items()})
+print("noisy in:", {k: round(float(v), 3) for k, v in all_metrics(noisy, clean).items()})
+
+# Table VI spot check on the trained model: FP10 PTQ should be near-lossless
+for spec in (quant.FP16, quant.FP10, quant.FXP10):
+    qp = quantize_tree(state["params"], spec)
+    qe = ev(qp, noisy)
+    print(f"PTQ {spec}:", {k: round(float(v), 3) for k, v in all_metrics(qe, clean).items()})

@@ -1,0 +1,34 @@
+"""Render results/dryrun + results/hillclimb JSONs as the EXPERIMENTS.md tables."""
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_cell(r):
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh'].split('(')[0]} | "
+        f"{r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+        f"{r['dominant'][:4]} | {r['model_gflops']/1e3:.1f} | {r['hlo_gflops']*r['chips']/1e3:.1f} | "
+        f"{r['useful_flop_fraction']:.2f} | {r['roofline_fraction']:.3f} | "
+        f"{r['bytes_per_device']/1e9:.1f} |"
+    )
+
+
+def main(d):
+    print("| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | dom | model TF | HLO TF (glob) | useful | roofline | GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | skip | — | — | — | — | — |")
+        else:
+            rows.append(fmt_cell(r))
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

@@ -1,0 +1,8 @@
+"""repro: low-power streaming speech-enhancement framework (TFTNN) in JAX.
+
+Reproduction + framework-scale extension of
+"A Low-Power Streaming Speech Enhancement Accelerator For Edge Devices"
+(Wu & Chang, cs.AR 2025).
+"""
+
+__version__ = "1.0.0"

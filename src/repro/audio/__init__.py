@@ -1,0 +1,5 @@
+"""Audio substrate: STFT/iSTFT, synthetic data, quality metrics."""
+
+from repro.audio.stft import istft, stft
+
+__all__ = ["istft", "stft"]

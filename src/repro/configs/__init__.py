@@ -1,0 +1,93 @@
+"""Config registry: ``get_config('<arch-id>')`` + shape sets + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — consumed
+by the multi-pod dry-run (launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import archs as _archs
+from repro.configs.shapes import LM_SHAPES, ShapeSpec, get_shape
+from repro.models.lm_common import LMConfig
+
+ARCH_IDS = tuple(_archs.ARCHS.keys())
+SUBQUADRATIC = _archs.SUBQUADRATIC
+
+
+def get_config(name: str) -> LMConfig:
+    if name in _archs.ARCHS:
+        return _archs.ARCHS[name]()
+    raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS} (+ tftnn/tstnn via repro.models.tftnn)")
+
+
+def reduced_config(name: str) -> LMConfig:
+    return _archs.reduced(get_config(name))
+
+
+def cell_is_applicable(arch: str, shape: ShapeSpec) -> bool:
+    """long_500k only runs for sub-quadratic archs (DESIGN.md §3)."""
+    if shape.name == "long_500k":
+        return arch in SUBQUADRATIC
+    return True
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec, *, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for the given (arch x shape) cell.
+
+    train/prefill: token ids (B, S) (or stub embeddings for audio/vlm).
+    decode: one new token (B,) + position, against a seq_len-deep cache/state
+    (the cache itself is built inside the lowered function from its spec).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.mode in ("train", "prefill"):
+        if cfg.embed_inputs:
+            return {
+                "tokens": sds((B, S, cfg.d_model), dtype),
+                "targets": sds((B, S), jnp.int32),
+            }
+        return {"tokens": sds((B, S), jnp.int32)}
+    # decode
+    if cfg.embed_inputs:
+        tok = sds((B, cfg.d_model), dtype)
+    else:
+        tok = sds((B,), jnp.int32)
+    return {"token": tok, "position": sds((), jnp.int32)}
+
+
+def decode_state_specs(cfg: LMConfig, shape: ShapeSpec, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the decode cache/state for a decode-mode cell."""
+    from repro.models.transformer_lm import init_decode_state
+
+    return jax.eval_shape(
+        functools.partial(init_decode_state, cfg, shape.global_batch, shape.seq_len, dtype)
+    )
+
+
+def param_specs(cfg: LMConfig, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the model parameters (no allocation)."""
+    from repro.models.transformer_lm import init_lm
+
+    return jax.eval_shape(functools.partial(init_lm, jax.random.PRNGKey(0), cfg, dtype))
+
+
+__all__ = [
+    "ARCH_IDS",
+    "LM_SHAPES",
+    "SUBQUADRATIC",
+    "ShapeSpec",
+    "cell_is_applicable",
+    "decode_state_specs",
+    "get_config",
+    "get_shape",
+    "input_specs",
+    "param_specs",
+    "reduced_config",
+]

@@ -1,0 +1,34 @@
+"""Core: the paper's algorithmic contributions as composable JAX modules.
+
+- bn: batch-norm with constant inference statistics + folding into conv/linear
+- softmax_free_attention: BN-normalized softmax-free (linear) attention with
+  the paper's optimal matmul order Q.(K^T V) (Eq. 1 / Fig. 10)
+- bn_transformer: the BN-based transformer block (Fig. 7 / Fig. 8b)
+- pruning: domain-aware + streaming-aware structured pruning
+- quant: minifloat (FP10 = 1-5-4) and fixed-point emulated quantization
+- streaming: stateful frame-at-a-time causal inference
+- masking: cross-domain (time-frequency) masking and loss (Eq. 2)
+"""
+
+from repro.core import bn, masking, pruning, quant, streaming
+from repro.core.bn import BatchNorm, fold_bn_into_linear
+from repro.core.masking import cross_domain_loss
+from repro.core.quant import QuantSpec, quantize
+from repro.core.softmax_free_attention import (
+    softmax_free_attention,
+    softmax_free_attention_causal,
+)
+
+__all__ = [
+    "BatchNorm",
+    "QuantSpec",
+    "bn",
+    "cross_domain_loss",
+    "fold_bn_into_linear",
+    "masking",
+    "pruning",
+    "quant",
+    "quantize",
+    "softmax_free_attention",
+    "softmax_free_attention_causal",
+]

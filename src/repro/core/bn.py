@@ -1,0 +1,155 @@
+"""Batch normalization with constant inference statistics + folding.
+
+The paper replaces all LayerNorms with BatchNorms (Section III-F): BN uses
+statistics that are *constant at inference*, so (a) no online accumulation is
+needed (Fig. 9: 66% normalization-cycle saving on the ASIC) and (b) the affine
+transform folds into the adjacent convolution/linear layer, making the
+normalization literally free.
+
+On TPU the same transformation deletes the normalization ops from the HLO
+entirely (see DESIGN.md §5.7). We implement:
+
+- init/apply for train mode (batch statistics + running-stat update)
+- apply for inference mode (constant running stats)
+- fold_bn_into_linear / fold_bn_into_conv: exact algebraic folding
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNorm:
+    """Feature-axis batch normalization.
+
+    Normalizes over all axes except ``axis`` (the feature/channel axis).
+    """
+
+    num_features: int
+    axis: int = -1
+    eps: float = 1e-5
+    momentum: float = 0.1
+
+    def init(self, dtype: Any = jnp.float32) -> Params:
+        f = self.num_features
+        return {
+            "scale": jnp.ones((f,), dtype),
+            "bias": jnp.zeros((f,), dtype),
+            "mean": jnp.zeros((f,), dtype),
+            "var": jnp.ones((f,), dtype),
+        }
+
+    def _reshape(self, v: jax.Array, ndim: int) -> jax.Array:
+        shape = [1] * ndim
+        shape[self.axis] = self.num_features
+        return v.reshape(shape)
+
+    def apply(
+        self,
+        params: Params,
+        x: jax.Array,
+        *,
+        train: bool = False,
+    ) -> Tuple[jax.Array, Params]:
+        """Returns (y, new_params). In eval mode new_params is params."""
+        ndim = x.ndim
+        if train:
+            axes = tuple(i for i in range(ndim) if i % ndim != self.axis % ndim)
+            mean = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            m = self.momentum
+            new_params = dict(params)
+            new_params["mean"] = (1 - m) * params["mean"] + m * mean
+            new_params["var"] = (1 - m) * params["var"] + m * var
+        else:
+            mean, var = params["mean"], params["var"]
+            new_params = params
+        inv = jax.lax.rsqrt(var + self.eps) * params["scale"]
+        y = (x - self._reshape(mean, ndim)) * self._reshape(inv, ndim)
+        y = y + self._reshape(params["bias"], ndim)
+        return y, new_params
+
+    def __call__(self, params: Params, x: jax.Array) -> jax.Array:
+        return self.apply(params, x, train=False)[0]
+
+
+def bn_scale_shift(bn_params: Params, eps: float = 1e-5) -> Tuple[jax.Array, jax.Array]:
+    """Collapse BN to a per-channel affine y = a*x + b (inference mode)."""
+    inv = jax.lax.rsqrt(bn_params["var"] + eps) * bn_params["scale"]
+    a = inv
+    b = bn_params["bias"] - bn_params["mean"] * inv
+    return a, b
+
+
+def fold_bn_into_linear(
+    w: jax.Array,
+    b: jax.Array | None,
+    bn_params: Params,
+    *,
+    eps: float = 1e-5,
+    pre: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold an inference-mode BN into an adjacent linear layer.
+
+    ``pre=False`` folds ``BN(x @ w + b)``  -> ``x @ w' + b'``   (BN after)
+    ``pre=True``  folds ``BN(x) @ w + b``  -> ``x @ w' + b'``   (BN before)
+
+    w: (in, out). Returns (w', b').
+    """
+    a, c = bn_scale_shift(bn_params, eps)
+    if b is None:
+        b = jnp.zeros((w.shape[-1],), w.dtype)
+    if pre:
+        # (a*x + c) @ w + b = x @ (a[:,None]*w) + (c @ w + b)
+        w2 = w * a[:, None]
+        b2 = c @ w + b
+    else:
+        # a*(x@w + b) + c = x @ (w*a[None,:]) + (a*b + c)
+        w2 = w * a[None, :]
+        b2 = a * b + c
+    return w2, b2
+
+
+def fold_bn_into_conv1d(
+    w: jax.Array,
+    b: jax.Array | None,
+    bn_params: Params,
+    *,
+    eps: float = 1e-5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold BN after a 1-D conv. w: (k, in, out). Returns (w', b')."""
+    a, c = bn_scale_shift(bn_params, eps)
+    if b is None:
+        b = jnp.zeros((w.shape[-1],), w.dtype)
+    w2 = w * a[None, None, :]
+    b2 = a * b + c
+    return w2, b2
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Reference LN (the op the paper removes), for ablation benchmarks."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def ln_cycle_model(length: int, lanes: int = 16) -> int:
+    """ASIC cycle model for online LN (Fig. 9): 3 serial passes.
+
+    Pass 1 accumulate mean, pass 2 accumulate variance, pass 3 normalize —
+    each pass streams `length` elements through `lanes` MACs.
+    """
+    per_pass = -(-length // lanes)  # ceil
+    return 3 * per_pass
+
+
+def bn_cycle_model(length: int, lanes: int = 16) -> int:
+    """ASIC cycle model for constant BN (Fig. 9): single normalize pass."""
+    return -(-length // lanes)

@@ -1,0 +1,181 @@
+"""The BN-based transformer block (Fig. 7) with softmax-free MHA (Fig. 8b).
+
+Structure (shortcut re-located so BN feeds convolution directly, §III-G):
+
+    y = x + MHA_sf(BN1(x))            # attention sub-block (optional)
+    z = y + W_out . GRU(BN2(y))       # positional/FFN sub-block (GRU-based)
+
+MHA_sf: Q,K,V projections; *extra BN on Q and K* (the paper's replacement for
+SimA's online L1 norm — constant at inference, foldable into the projections);
+attention computed softmax-free in the optimal order Q @ (K^T V); output
+projection. The GRU replaces the positionwise FFN, as in TSTNN.
+
+Everything is functional: ``init_*`` -> params dict, ``apply`` takes
+``train`` and returns (out, new_params) so BN running stats can update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.bn import BatchNorm, bn_scale_shift
+from repro.core.softmax_free_attention import (
+    softmax_free_attention,
+    softmax_free_attention_causal,
+)
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class BNTransformerConfig:
+    d_model: int
+    num_heads: int
+    gru_hidden: int
+    use_attention: bool = True  # False => full-band stage after streaming prune
+    causal: bool = False
+    bidirectional_gru: bool = False
+    softmax_free: bool = True
+    qkv_bias: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def init_bn_transformer(key, cfg: BNTransformerConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {}
+    if cfg.use_attention:
+        p["bn1"] = BatchNorm(d).init(dtype)
+        p["wq"] = nn.init_dense(keys[0], d, d, bias=cfg.qkv_bias, dtype=dtype)
+        p["wk"] = nn.init_dense(keys[1], d, d, bias=cfg.qkv_bias, dtype=dtype)
+        p["wv"] = nn.init_dense(keys[2], d, d, bias=cfg.qkv_bias, dtype=dtype)
+        p["wo"] = nn.init_dense(keys[3], d, d, dtype=dtype)
+        if cfg.softmax_free:
+            # the extra BN on Q and K (Fig. 8b)
+            p["bn_q"] = BatchNorm(d).init(dtype)
+            p["bn_k"] = BatchNorm(d).init(dtype)
+    p["bn2"] = BatchNorm(d).init(dtype)
+    p["gru_f"] = nn.init_gru(keys[4], d, cfg.gru_hidden, dtype)
+    if cfg.bidirectional_gru:
+        p["gru_b"] = nn.init_gru(keys[5], d, cfg.gru_hidden, dtype)
+        p["w_out"] = nn.init_dense(keys[6], 2 * cfg.gru_hidden, d, dtype=dtype)
+    else:
+        p["w_out"] = nn.init_dense(keys[6], cfg.gru_hidden, d, dtype=dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    B, L, D = x.shape
+    return x.reshape(B, L, h, D // h).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    B, H, L, Dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, L, H * Dh)
+
+
+def mha_softmax_free(
+    p: Params,
+    x: jax.Array,
+    cfg: BNTransformerConfig,
+    *,
+    train: bool = False,
+) -> Tuple[jax.Array, Params]:
+    """Softmax-free MHA with extra BN on Q/K. x: (B, L, D)."""
+    d = cfg.d_model
+    bn = BatchNorm(d)
+    q = nn.dense(p["wq"], x)
+    k = nn.dense(p["wk"], x)
+    v = nn.dense(p["wv"], x)
+    new_p = dict(p)
+    if cfg.softmax_free:
+        q, new_p["bn_q"] = bn.apply(p["bn_q"], q, train=train)
+        k, new_p["bn_k"] = bn.apply(p["bn_k"], k, train=train)
+    qh, kh, vh = (_split_heads(t, cfg.num_heads) for t in (q, k, v))
+    if cfg.softmax_free:
+        if cfg.causal:
+            chunk = min(128, qh.shape[2])
+            oh = softmax_free_attention_causal(qh, kh, vh, chunk=chunk)
+        else:
+            oh = softmax_free_attention(qh, kh, vh)
+    else:
+        # reference softmax path (TSTNN baseline / ablations)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, x.dtype))
+        att = jnp.einsum("bhld,bhmd->bhlm", qh, kh) * scale
+        if cfg.causal:
+            L = qh.shape[2]
+            mask = jnp.tril(jnp.ones((L, L), bool))
+            att = jnp.where(mask, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        oh = jnp.einsum("bhlm,bhmd->bhld", att, vh)
+    out = nn.dense(p["wo"], _merge_heads(oh))
+    return out, new_p
+
+
+def apply_bn_transformer(
+    p: Params,
+    x: jax.Array,
+    cfg: BNTransformerConfig,
+    *,
+    train: bool = False,
+) -> Tuple[jax.Array, Params]:
+    """Full block forward. x: (B, L, D) -> (B, L, D)."""
+    d = cfg.d_model
+    bn = BatchNorm(d)
+    new_p = dict(p)
+    y = x
+    if cfg.use_attention:
+        h, new_p["bn1"] = bn.apply(p["bn1"], x, train=train)
+        att, att_p = mha_softmax_free({**p, "bn1": new_p["bn1"]}, h, cfg, train=train)
+        for k in ("bn_q", "bn_k"):
+            if k in att_p:
+                new_p[k] = att_p[k]
+        y = x + att
+    h, new_p["bn2"] = bn.apply(p["bn2"], y, train=train)
+    if cfg.bidirectional_gru:
+        g = nn.bigru(p["gru_f"], p["gru_b"], h)
+    else:
+        g, _ = nn.gru(p["gru_f"], h)
+    z = y + nn.dense(p["w_out"], g)
+    return z, new_p
+
+
+def streaming_gru_substep(
+    p: Params,
+    cfg: BNTransformerConfig,
+    gru_h: jax.Array,
+    y_t: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One-frame update of the GRU sub-block (uni-directional, causal).
+
+    y_t: (B, D) one time frame after the attention sub-block.
+    Returns (new_gru_h, z_t). Used by the streaming TFTNN path.
+    """
+    bn = BatchNorm(cfg.d_model)
+    h_t, _ = bn.apply(p["bn2"], y_t, train=False)
+    gru_h, g_t = nn.gru_step(p["gru_f"], gru_h, h_t)
+    return gru_h, y_t + nn.dense(p["w_out"], g_t)
+
+
+def fold_qk_bn(p: Params, cfg: BNTransformerConfig) -> Params:
+    """Deployment transform: fold the extra Q/K BNs into W_q/W_k (constant at
+    inference, zero-cost — DESIGN.md §5.1). Returns new params without bn_q/k."""
+    from repro.core.bn import fold_bn_into_linear
+
+    if not (cfg.use_attention and cfg.softmax_free):
+        return p
+    new_p = dict(p)
+    for proj, bnk in (("wq", "bn_q"), ("wk", "bn_k")):
+        w, b = p[proj]["w"], p[proj].get("b")
+        w2, b2 = fold_bn_into_linear(w, b, p[bnk])
+        new_p[proj] = {"w": w2, "b": b2}
+        del new_p[bnk]
+    return new_p

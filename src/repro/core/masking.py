@@ -1,0 +1,114 @@
+"""Cross-domain (time-frequency) masking and loss (Section III-C, Eq. 2).
+
+TSTNN masks in the time domain and computes loss in both domains; [22] masks
+in T-F but uses only the frequency loss. The paper's TFTNN uses *both* T-F
+masking and T+F loss — Table II shows this combination recovers the accuracy
+lost to compression (PESQ 2.119 -> 2.746 for TFTNN).
+
+We implement complex-ratio masking on the STFT (mask has real and imaginary
+channels, bounded by tanh) and the combined loss
+
+    loss = alpha * loss_F + (1 - alpha) * loss_T        (Eq. 2, alpha = 0.2)
+
+with loss_F an L1 on compressed magnitudes + complex spectra and loss_T an L1
+on waveforms, matching common practice for the TSTNN family.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.audio.stft import istft, stft
+
+
+def apply_tf_mask(
+    spec_ri: jax.Array,
+    mask_ri: jax.Array,
+    *,
+    bound: float = 2.0,
+) -> jax.Array:
+    """Apply a complex ratio mask in the T-F domain.
+
+    spec_ri, mask_ri: (..., F, T, 2) real/imag stacked on the last axis.
+    The mask is bounded with `bound * tanh(.)` for training stability.
+    Complex multiply: (a+bi) * (c+di).
+    """
+    m = bound * jnp.tanh(mask_ri)
+    a, b = spec_ri[..., 0], spec_ri[..., 1]
+    c, d = m[..., 0], m[..., 1]
+    return jnp.stack([a * c - b * d, a * d + b * c], axis=-1)
+
+
+def apply_time_mask(wave: jax.Array, mask: jax.Array) -> jax.Array:
+    """TSTNN-style time-domain masking (baseline for Table II)."""
+    return wave * jnp.tanh(mask)
+
+
+def magnitude(spec_ri: jax.Array, eps: float = 1e-8) -> jax.Array:
+    return jnp.sqrt(spec_ri[..., 0] ** 2 + spec_ri[..., 1] ** 2 + eps)
+
+
+def spectral_loss(est_ri: jax.Array, ref_ri: jax.Array, compress: float = 0.3) -> jax.Array:
+    """Frequency-domain loss: L1 on power-law-compressed magnitude + complex parts."""
+    em, rm = magnitude(est_ri), magnitude(ref_ri)
+    mag_l = jnp.mean(jnp.abs(em**compress - rm**compress))
+    # phase-aware term on compressed complex spectra
+    ec = est_ri * (em**(compress - 1.0))[..., None]
+    rc = ref_ri * (rm**(compress - 1.0))[..., None]
+    cplx_l = jnp.mean(jnp.abs(ec - rc))
+    return mag_l + cplx_l
+
+
+def time_loss(est: jax.Array, ref: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.abs(est - ref))
+
+
+def cross_domain_loss(
+    est_wave: jax.Array,
+    ref_wave: jax.Array,
+    *,
+    alpha: float = 0.2,
+    n_fft: int = 512,
+    hop: int = 128,
+    est_spec_ri: jax.Array | None = None,
+    ref_spec_ri: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Eq. 2: alpha * loss_F + (1 - alpha) * loss_T.
+
+    Spectra are recomputed from waveforms unless provided.
+    Returns (loss, metrics_dict).
+    """
+    if est_spec_ri is None:
+        est_spec_ri = stft(est_wave, n_fft=n_fft, hop=hop)
+    if ref_spec_ri is None:
+        ref_spec_ri = stft(ref_wave, n_fft=n_fft, hop=hop)
+    lf = spectral_loss(est_spec_ri, ref_spec_ri)
+    lt = time_loss(est_wave, ref_wave)
+    loss = alpha * lf + (1.0 - alpha) * lt
+    return loss, {"loss": loss, "loss_F": lf, "loss_T": lt}
+
+
+def frequency_only_loss(est_wave, ref_wave, *, n_fft: int = 512, hop: int = 128):
+    """The [22]-style F-only loss — Table II ablation arm."""
+    lf = spectral_loss(stft(est_wave, n_fft=n_fft, hop=hop), stft(ref_wave, n_fft=n_fft, hop=hop))
+    return lf, {"loss": lf, "loss_F": lf}
+
+
+def enhance_from_mask(
+    noisy_spec_ri: jax.Array,
+    mask_ri: jax.Array,
+    *,
+    n_fft: int = 512,
+    hop: int = 128,
+    length: int | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mask the noisy spectrogram and reconstruct the waveform.
+
+    Returns (enhanced_wave, enhanced_spec_ri).
+    """
+    est_ri = apply_tf_mask(noisy_spec_ri, mask_ri)
+    wave = istft(est_ri, n_fft=n_fft, hop=hop, length=length)
+    return wave, est_ri

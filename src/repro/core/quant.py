@@ -1,0 +1,135 @@
+"""Emulated quantization: minifloat (FP10 = 1-5-4) and fixed-point.
+
+Table VI of the paper sweeps FP{16,10,9,8} and FxP{16,10,9,8} for weights and
+activations and settles on FP10 (sign 1, exponent 5, mantissa 4). TPUs have no
+10-bit float ALU, so we *emulate* the value grid: round-to-nearest-even onto
+the representable set (including subnormals), saturate to the max finite
+value. Compute stays in bf16/f32 — this is an accuracy model that reproduces
+the paper's quantization ladder, not a performance claim (DESIGN.md §5.5).
+
+A straight-through estimator makes the emulation usable for QAT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A quantization grid.
+
+    kind: 'fp'  -> 1 sign + `exp` exponent + `man` mantissa bits
+          'fxp' -> 1 sign + `exp` integer + `man` fractional bits
+          'none'-> identity
+    """
+
+    kind: str = "none"
+    exp: int = 0
+    man: int = 0
+
+    @property
+    def bits(self) -> int:
+        return 0 if self.kind == "none" else 1 + self.exp + self.man
+
+    def __str__(self) -> str:
+        if self.kind == "none":
+            return "fp32"
+        return f"{self.kind}{self.bits}(s1,e{self.exp},m{self.man})"
+
+
+# The paper's chosen format and its Table VI neighbours.
+FP16 = QuantSpec("fp", 8, 7)
+FP10 = QuantSpec("fp", 5, 4)  # the paper's deployment format
+FP9 = QuantSpec("fp", 4, 4)
+FP8 = QuantSpec("fp", 4, 3)
+FXP16 = QuantSpec("fxp", 8, 7)
+FXP10 = QuantSpec("fxp", 5, 4)
+FXP9 = QuantSpec("fxp", 4, 4)
+FXP8 = QuantSpec("fxp", 4, 3)
+NONE = QuantSpec()
+
+
+def quantize_minifloat(x: jax.Array, exp_bits: int, man_bits: int) -> jax.Array:
+    """Round x (f32) to the nearest minifloat value (RNE), saturating.
+
+    IEEE-like grid: bias = 2^(e-1) - 1, subnormals at the bottom, no inf/nan
+    codes (saturate instead) — matching typical ASIC PE behaviour.
+    """
+    x = x.astype(jnp.float32)
+    bias = 2 ** (exp_bits - 1) - 1
+    min_exp = 1 - bias  # smallest normal exponent
+    max_exp = 2**exp_bits - 2 - bias  # all-ones exponent reserved -> max normal
+    max_val = (2.0 - 2.0**-man_bits) * 2.0**max_exp
+
+    sign = jnp.sign(x)
+    mag = jnp.abs(x)
+
+    # Exponent of each value, clamped so subnormals quantize on the
+    # fixed grid 2^(min_exp - man_bits).
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-45)))
+    e = jnp.clip(e, min_exp, max_exp)
+    # Quantization step at this exponent; RNE via jnp.round on the mantissa grid.
+    step = jnp.exp2(e - man_bits)
+    q = jnp.round(mag / step) * step
+    # Rounding can carry into the next binade (e.g. 1.96 -> 2.0); that is fine
+    # because the next binade's grid contains it exactly.
+    q = jnp.minimum(q, max_val)
+    q = jnp.where(mag == 0, 0.0, q)
+    return (sign * q).astype(x.dtype)
+
+
+def quantize_fixed(x: jax.Array, int_bits: int, frac_bits: int) -> jax.Array:
+    """Round x to signed fixed point with `int_bits`.`frac_bits`, saturating."""
+    x = x.astype(jnp.float32)
+    step = 2.0**-frac_bits
+    max_val = 2.0**int_bits - step
+    q = jnp.round(x / step) * step
+    return jnp.clip(q, -(2.0**int_bits), max_val)
+
+
+def quantize(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    if spec.kind == "none":
+        return x
+    if spec.kind == "fp":
+        return quantize_minifloat(x, spec.exp, spec.man)
+    if spec.kind == "fxp":
+        return quantize_fixed(x, spec.exp, spec.man)
+    raise ValueError(f"unknown quant kind {spec.kind!r}")
+
+
+@jax.custom_vjp
+def quantize_ste(x: jax.Array, exp_bits: int, man_bits: int) -> jax.Array:
+    """Minifloat quantization with a straight-through gradient (QAT)."""
+    return quantize_minifloat(x, exp_bits, man_bits)
+
+
+def _ste_fwd(x, exp_bits, man_bits):
+    return quantize_minifloat(x, exp_bits, man_bits), None
+
+
+def _ste_bwd(_, g):
+    return (g, None, None)
+
+
+quantize_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantize_tree(params, spec: QuantSpec):
+    """Quantize every float leaf of a pytree (post-training quantization)."""
+    def q(leaf):
+        if isinstance(leaf, jax.Array) and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return quantize(leaf, spec).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map(q, params)
+
+
+def quant_error(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Relative L2 quantization error — used by the Table VI benchmark."""
+    q = quantize(x, spec)
+    return jnp.linalg.norm((x - q).ravel()) / (jnp.linalg.norm(x.ravel()) + 1e-12)

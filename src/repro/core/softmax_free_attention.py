@@ -1,0 +1,170 @@
+"""Softmax-free attention with BN-normalized Q/K and optimal matmul order.
+
+The paper (Section III-F, Fig. 8b, Fig. 10, Eq. 1) removes softmax from MHA,
+normalizing Q and K with *constant* batch-norm statistics instead of SimA's
+online L1 norm.  Without softmax, attention is a pure associative chain
+
+    out = Q_bn @ (K_bn^T @ V)            # instead of (Q K^T) V
+
+so the K^T V product (d x d, tiny) is computed first.  With sequence length
+h >> channel width w this cuts MACs by h/w (16x in the paper: h=128, w=8).
+
+This module is the pure-JAX implementation; the Pallas TPU kernel lives in
+``repro.kernels.linear_attention``.  Three execution modes:
+
+- ``softmax_free_attention``          non-causal (sub-band attention in TFTNN)
+- ``softmax_free_attention_causal``   causal, chunked-scan (training / prefill)
+- ``softmax_free_attention_step``     one-token streaming update with constant
+                                      O(H*D*D) state — the framework-scale
+                                      generalization of the paper's streaming
+                                      design (decode cost independent of
+                                      context length; enables long_500k).
+
+Shapes follow (batch, heads, length, head_dim) = (B, H, L, D).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _bn_qk(q: jax.Array, k: jax.Array, qk_stats) -> Tuple[jax.Array, jax.Array]:
+    """Apply constant (inference-mode) BN affine to Q and K per head-dim.
+
+    qk_stats: optional dict with 'q_scale','q_bias','k_scale','k_bias' of
+    shape (D,) — the collapsed BN affine (see core.bn.bn_scale_shift). At
+    inference these are constants and in deployment they are folded into the
+    Q/K projection weights; keeping them explicit here lets train-mode code
+    use the same path.
+    """
+    if qk_stats is None:
+        return q, k
+    q = q * qk_stats["q_scale"] + qk_stats["q_bias"]
+    k = k * qk_stats["k_scale"] + qk_stats["k_bias"]
+    return q, k
+
+
+def softmax_free_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    qk_stats=None,
+    normalize_by_length: bool = True,
+) -> jax.Array:
+    """Non-causal softmax-free attention, optimal order Q @ (K^T @ V).
+
+    q,k,v: (..., L, D) with any leading batch/head dims.
+    Cost: O(L * D^2) instead of O(L^2 * D)  (Eq. 1: ratio = L/D).
+    """
+    q, k = _bn_qk(q, k, qk_stats)
+    scale = 1.0 / k.shape[-2] if normalize_by_length else 1.0
+    # (..., D, D) intermediate — the paper's "compute K^T V first" (Fig. 10b).
+    kv = jnp.einsum("...ld,...le->...de", k, v) * scale
+    return jnp.einsum("...ld,...de->...le", q, kv)
+
+
+def softmax_free_attention_quadratic(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    qk_stats=None,
+    normalize_by_length: bool = True,
+    causal: bool = False,
+) -> jax.Array:
+    """The *unoptimized* order (Q K^T) V — Fig. 10a. Oracle/benchmark only."""
+    q, k = _bn_qk(q, k, qk_stats)
+    scale = 1.0 / k.shape[-2] if normalize_by_length else 1.0
+    att = jnp.einsum("...ld,...md->...lm", q, k) * scale
+    if causal:
+        L = q.shape[-2]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        att = jnp.where(mask, att, 0.0)
+    return jnp.einsum("...lm,...md->...ld", att, v)
+
+
+def softmax_free_attention_causal(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    qk_stats=None,
+    chunk: int = 128,
+    normalize_by_length: bool = True,
+) -> jax.Array:
+    """Causal softmax-free attention via chunked scan.
+
+    y_t = q_t @ S_t,  S_t = sum_{s<=t} k_s v_s^T.  Chunking keeps the work
+    matmul-shaped for the MXU: inter-chunk contributions use the carried
+    (D, D) state; intra-chunk contributions use a lower-triangular-masked
+    (C, C) product.  Total cost O(L*D^2 + L*C*D).
+
+    q,k,v: (B, H, L, D). L must be a multiple of `chunk` (pad upstream).
+    """
+    q, k = _bn_qk(q, k, qk_stats)
+    B, H, L, D = q.shape
+    if L % chunk:
+        raise ValueError(f"L={L} not a multiple of chunk={chunk}")
+    n = L // chunk
+    scale = 1.0 / L if normalize_by_length else 1.0
+
+    qc = q.reshape(B, H, n, chunk, D).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, n, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n, chunk, D).transpose(2, 0, 1, 3, 4)
+    tril = jnp.tril(jnp.ones((chunk, chunk), q.dtype))
+
+    def body(state, xs):
+        qb, kb, vb = xs  # (B, H, C, D)
+        # inter-chunk: everything strictly before this chunk
+        inter = jnp.einsum("bhcd,bhde->bhce", qb, state)
+        # intra-chunk: causal within the chunk
+        att = jnp.einsum("bhcd,bhmd->bhcm", qb, kb) * tril
+        intra = jnp.einsum("bhcm,bhmd->bhcd", att, vb)
+        new_state = state + jnp.einsum("bhcd,bhce->bhde", kb, vb)
+        return new_state, inter + intra
+
+    init = jnp.zeros((B, H, D, D), q.dtype)
+    _, out = jax.lax.scan(body, init, (qc, kc, vc))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, L, D)
+    return out * scale
+
+
+def softmax_free_attention_step(
+    state: jax.Array,
+    q_t: jax.Array,
+    k_t: jax.Array,
+    v_t: jax.Array,
+    *,
+    qk_stats=None,
+    length_so_far: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One streaming decode step with constant-size state.
+
+    state: (B, H, D, D) running K^T V accumulator;
+    q_t, k_t, v_t: (B, H, D) for the new token.
+    Returns (new_state, y_t).  This is the paper's streaming execution model
+    lifted to LM decode: per-token cost and memory are independent of the
+    context length (no KV cache growth).
+    """
+    q_t, k_t = _bn_qk(q_t, k_t, qk_stats)
+    new_state = state + jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+    y = jnp.einsum("bhd,bhde->bhe", q_t, new_state)
+    if length_so_far is not None:
+        y = y / jnp.maximum(length_so_far.astype(y.dtype), 1.0)
+    return new_state, y
+
+
+def attention_mac_counts(L: int, D: int) -> Tuple[int, int]:
+    """(orig, optimal) MAC counts per head for Eq. 1 verification.
+
+    orig   = (L*D*L) + (L*L*D)   — QK^T then (QK^T)V
+    optimal = (D*L*D) + (L*D*D)  — K^T V then Q(K^T V)
+    ratio = L/D (16x for L=128, D=8).
+    """
+    orig = L * D * L + L * L * D
+    new = D * L * D + L * D * D
+    return orig, new

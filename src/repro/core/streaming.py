@@ -1,0 +1,111 @@
+"""Streaming (frame-at-a-time, causal) inference support (Section III-E).
+
+The paper's streaming-aware pruning makes TFTNN a causal system that consumes
+one spectrogram frame per 16 ms hop, with *all* cross-frame context carried in
+tiny recurrent state (uni-directional GRU hidden states). This module provides
+the state plumbing, generalized so the same machinery drives:
+
+- TFTNN frame-by-frame enhancement (GRU states),
+- causal conv buffers (for archs with temporal conv kernels),
+- constant-size linear-attention decode state (the paper's softmax-free
+  attention run as a stream — DESIGN.md §3),
+- SSM/Mamba2/xLSTM recurrent decode states.
+
+The central invariant (property-tested in tests/test_streaming_equiv.py):
+running a causal model frame-by-frame through ``run_streaming`` produces
+outputs identical to the offline whole-utterance forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+State = Any  # arbitrary pytree of arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class CausalConvBuffer:
+    """Ring-free shift buffer holding the (k-1)*d past inputs of a causal
+    temporal conv. The TPU-friendly formulation is a dense roll: buffers here
+    are tiny (a few frames) so the copy is negligible."""
+
+    kernel: int
+    dilation: int = 1
+
+    @property
+    def context(self) -> int:
+        return (self.kernel - 1) * self.dilation
+
+    def init(self, feat_shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+        return jnp.zeros((self.context,) + tuple(feat_shape), dtype)
+
+    def push(self, buf: jax.Array, frame: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Append `frame`; returns (new_buf, window) where window stacks the
+        `kernel` dilated taps ending at the new frame, shape (k, *feat)."""
+        full = jnp.concatenate([buf, frame[None]], axis=0)
+        new_buf = full[1:] if self.context > 0 else buf
+        taps = full[:: -self.dilation][: self.kernel][::-1] if self.dilation > 1 else full[-self.kernel:]
+        return new_buf, taps
+
+
+def gru_init_state(batch: int, hidden: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros((batch, hidden), dtype)
+
+
+def linear_attention_init_state(batch: int, heads: int, head_dim: int, dtype=jnp.float32) -> jax.Array:
+    """The (D x D) running K^T V accumulator per head — constant-size decode
+    state replacing a growing KV cache."""
+    return jnp.zeros((batch, heads, head_dim, head_dim), dtype)
+
+
+def run_streaming(
+    step_fn: Callable[[State, jax.Array], Tuple[State, jax.Array]],
+    init_state: State,
+    frames: jax.Array,
+) -> Tuple[State, jax.Array]:
+    """Drive a per-frame step function over a (T, ...) frame stack with scan."""
+    return jax.lax.scan(step_fn, init_state, frames)
+
+
+def offline_equals_streaming(
+    offline_fn: Callable[[jax.Array], jax.Array],
+    step_fn: Callable[[State, jax.Array], Tuple[State, jax.Array]],
+    init_state: State,
+    frames: jax.Array,
+    *,
+    atol: float = 1e-5,
+) -> bool:
+    """Check the streaming == offline invariant (used by tests/benchmarks)."""
+    offline = offline_fn(frames)
+    _, stream = run_streaming(step_fn, init_state, frames)
+    return bool(jnp.allclose(offline, stream, atol=atol))
+
+
+@dataclasses.dataclass
+class RealTimeBudget:
+    """The paper's real-time accounting (Section IV-A): one 512-sample frame
+    (64 ms window, 16 ms hop at 8 kHz) must finish within the 16 ms hop.
+    15.86 MMAC/frame on 16 MACs -> 62.5 MHz. We reproduce the arithmetic and
+    let benchmarks check a model's MAC/frame count against a budget."""
+
+    sample_rate: int = 8000
+    n_fft: int = 512
+    hop: int = 128
+    macs_per_frame: float = 15.86e6
+    num_macs: int = 16
+
+    @property
+    def hop_seconds(self) -> float:
+        return self.hop / self.sample_rate
+
+    @property
+    def required_clock_hz(self) -> float:
+        # MACs per frame serialized over num_macs lanes, once per hop.
+        return self.macs_per_frame / self.num_macs / self.hop_seconds
+
+    def real_time_ok(self, macs_per_frame: float, clock_hz: float, num_macs: int) -> bool:
+        return macs_per_frame / num_macs / clock_hz <= self.hop_seconds

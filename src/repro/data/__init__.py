@@ -1,0 +1,5 @@
+"""Data pipelines: stateless-seeded synthetic streams (LM tokens + speech)."""
+
+from repro.data.lm_data import lm_batch_for_step
+
+__all__ = ["lm_batch_for_step"]

@@ -1,0 +1,1 @@
+"""Distribution: mesh-axis sharding rules, collectives, parallel layouts."""

@@ -1,0 +1,240 @@
+"""Sharding rules: parameter/activation PartitionSpecs for every arch.
+
+Layout (DESIGN.md §4):
+- 'model' axis: tensor parallelism — Megatron column/row splits for QKV/O
+  and MLP, expert parallelism for MoE (experts sharded over 'model'),
+  head- or head_dim-sharded attention states;
+- 'data' axis: FSDP — every parameter (and its Adam moments, which inherit
+  the parameter spec) additionally sharded over 'data' on a non-TP dim;
+  XLA inserts the all-gather on use / reduce-scatter on grad;
+- 'pod' axis: pure data parallelism — parameters are replicated across pods
+  (specs never name 'pod'); the batch is sharded over ('pod', 'data') and
+  gradients all-reduce across pods (optionally int8-compressed).
+
+Rules are path-pattern based with divisibility guards, so one engine covers
+dense GQA, MLA, MoE, SSM and the TFTNN family.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % _axis_size(mesh, axis) == 0
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel submesh: ('pod','data') when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# (pattern, builder) — builder(shape, mesh, stacked) -> PartitionSpec | None.
+# `stacked` = params carry a leading layer axis (scan-over-layers stacking).
+
+
+def _col(shape, mesh, stacked):  # (…, d_in, d_out): TP on d_out, FSDP on d_in
+    lead = (None,) * (len(shape) - 2)
+    din, dout = shape[-2], shape[-1]
+    return P(*lead,
+             "data" if _div(din, mesh, "data") else None,
+             "model" if _div(dout, mesh, "model") else None)
+
+
+def _row(shape, mesh, stacked):  # (…, d_in, d_out): TP on d_in, FSDP on d_out
+    lead = (None,) * (len(shape) - 2)
+    din, dout = shape[-2], shape[-1]
+    return P(*lead,
+             "model" if _div(din, mesh, "model") else None,
+             "data" if _div(dout, mesh, "data") else None)
+
+
+def _bias_tp(shape, mesh, stacked):  # (…, d_out) of a column-parallel matmul
+    lead = (None,) * (len(shape) - 1)
+    return P(*lead, "model" if _div(shape[-1], mesh, "model") else None)
+
+
+def _expert(shape, mesh, stacked):  # (…, E, d1, d2): EP on E, FSDP on d1
+    lead = (None,) * (len(shape) - 3)
+    e, d1, d2 = shape[-3], shape[-2], shape[-1]
+    return P(*lead,
+             "model" if _div(e, mesh, "model") else None,
+             "data" if _div(d1, mesh, "data") else None,
+             None)
+
+
+def _embed(shape, mesh, stacked):  # (V, D): vocab over model, D over data
+    return P("model" if _div(shape[0], mesh, "model") else None,
+             "data" if _div(shape[1], mesh, "data") else None)
+
+
+def _data_largest(shape, mesh, stacked):  # FSDP fallback: largest divisible dim
+    if not shape:
+        return P()
+    spec = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if i == 0 and stacked:
+            continue  # never shard the scanned layer axis
+        if _div(shape[i], mesh, "data"):
+            spec[i] = "data"
+            break
+    return P(*spec)
+
+
+_RULES = [
+    (r"embed$", _embed),
+    (r"lm_head$", _col),
+    (r"(wq|wk|wv)::w$", _col),
+    (r"(wq|wk|wv)::b$", _bias_tp),
+    (r"wo::w$", _row),
+    (r"mlp::(gate|up|fc1)::w$", _col),
+    (r"mlp::(down|fc2)::w$", _row),
+    (r"mlp::fc1::b$", _bias_tp),
+    (r"moe::(w_gate|w_up|w_down)$", _expert),  # MoE expert stacks (EP)
+    (r"moe::(shared_gate|shared_up)$", _col),
+    (r"moe::shared_down$", _row),
+    (r"router$", _data_largest),
+    # MLA
+    (r"attn::w_uk$", lambda s, m, st: P(*(None,) * (len(s) - 3), None, "model" if _div(s[-2], m, "model") else None, None)),
+    (r"attn::w_uv$", lambda s, m, st: P(*(None,) * (len(s) - 3), None, "model" if _div(s[-2], m, "model") else None, None)),
+    (r"attn::w_o$", lambda s, m, st: P(*(None,) * (len(s) - 3), "model" if _div(s[-3], m, "model") else None, None, "data" if _div(s[-1], m, "data") else None)),
+    (r"attn::(w_q|w_uq)$", _col),
+    (r"attn::(w_dkv|w_dq|w_krope)$",
+     lambda s, m, st: P(*(None,) * (len(s) - 2), "data" if _div(s[-2], m, "data") else None, None)),
+    # xlstm / mamba2 (small archs): FSDP only
+    (r"(w_in|w_out|w_x|w_h|w_up|w_down|w_q|w_k|w_v|w_gates)$", _data_largest),
+]
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh, *, stacked: bool = True) -> P:
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            spec = builder(shape, mesh, stacked)
+            if spec is not None and _spec_fits(spec, shape, mesh):
+                return spec
+    return _data_largest(shape, mesh, stacked)
+
+
+def _spec_fits(spec: P, shape, mesh: Mesh) -> bool:
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if dim % total:
+            return False
+    return True
+
+
+def _path_str(path) -> str:
+    return "::".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def params_shardings(params_shape: Pytree, mesh: Mesh) -> Pytree:
+    """NamedSharding tree for a params(-shaped) tree (works on SDS trees)."""
+    def leaf(path, x):
+        spec = param_pspec(_path_str(path), tuple(x.shape), mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def batch_pspec(mesh: Mesh, ndim: int = 2) -> P:
+    """Token batch: batch dim over ('pod','data'), rest replicated."""
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def decode_state_shardings(state_shape: Pytree, mesh: Mesh) -> Pytree:
+    """Decode caches: batch over ('pod','data'); heads or head_dim over 'model'."""
+    ba = batch_axes(mesh)
+    bsize = int(np.prod([_axis_size(mesh, a) for a in ba]))
+
+    def leaf(path, x):
+        shape = tuple(x.shape)
+        spec = [None] * len(shape)
+        # axis 0 = stacked layers; axis 1 = batch (all decode states follow this)
+        if len(shape) >= 2 and shape[1] % bsize == 0:
+            spec[1] = ba
+        # try to put 'model' on a later axis (heads, rank, or head_dim)
+        for i in range(2, len(shape)):
+            if _div(shape[i], mesh, "model"):
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# In-graph sharding hints (no-ops outside a mesh context)
+# ---------------------------------------------------------------------------
+
+def _context_mesh():
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _batch_axes_fitting(m, dim: int):
+    ba = batch_axes(m)
+    total = int(np.prod([_axis_size(m, a) for a in ba]))
+    return ba if ba and dim % total == 0 else None
+
+
+def hint_residual(x: jax.Array) -> jax.Array:
+    """(B, L, D) residual-stream hint: batch over ('pod','data'), rest free."""
+    m = _context_mesh()
+    if m is None:
+        return x
+    ba = _batch_axes_fitting(m, x.shape[0])
+    if ba is None:
+        return x
+    spec = P(ba, *([P.UNCONSTRAINED] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def hint_attention_heads(x: jax.Array) -> jax.Array:
+    """(B, H, L, Dh) attention-tensor hint: batch over ('pod','data'), heads
+    over 'model' when divisible (TP attention), else heads replicated. This
+    pins the sharding of the O(L^2) score matmuls — without it the SPMD
+    partitioner can pick a heads-only split and replicate the global batch
+    per device (the 11x flops blow-up in EXPERIMENTS.md §Perf iteration 2)."""
+    m = _context_mesh()
+    if m is None:
+        return x
+    ba = _batch_axes_fitting(m, x.shape[0])
+    if ba is None:
+        return x
+    h_axis = "model" if _div(x.shape[1], m, "model") else None
+    spec = P(ba, h_axis, *([P.UNCONSTRAINED] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def hint_last_dim_model(x: jax.Array) -> jax.Array:
+    """Constrain the last dim onto 'model' (vocab-sharded logits), leaving the
+    other dims unconstrained for the partitioner. No-op without a mesh, or
+    when the dim doesn't divide. Keeps the (B, S, V) logits / one-hot / softmax
+    chain from ever materializing unsharded (the 214 GB/device failure mode —
+    see EXPERIMENTS.md §Perf iteration 1)."""
+    m = _context_mesh()
+    if m is None or "model" not in m.shape or x.shape[-1] % m.shape["model"]:
+        return x
+    spec = P(*([P.UNCONSTRAINED] * (x.ndim - 1)), "model")
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- linear_attention: softmax-free attention in the paper's optimal matmul
+  order Q @ (K^T V) (Eq. 1 / Fig. 10b), causal variant with a VMEM-resident
+  running-state accumulator (TPU analogue of the ASIC's local register
+  buffer accumulation).
+- fp10: minifloat (FP10 = 1-5-4) round-to-nearest-even quantization.
+- dilated_conv: channel-split dilated residual 1-D conv (Fig. 2b) with
+  block-level zero skipping (TPU adaptation of the ASIC's zero gating).
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with interpret fallback) and ref.py (pure-jnp oracle).
+"""

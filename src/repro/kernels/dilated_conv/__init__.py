@@ -1,0 +1,3 @@
+from repro.kernels.dilated_conv.ops import dilated_split_conv
+
+__all__ = ["dilated_split_conv"]

@@ -1,0 +1,26 @@
+"""Public wrapper for the channel-split dilated residual conv kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.dilated_conv.kernel import dilated_split_conv_pallas
+from repro.kernels.dilated_conv.ref import dilated_split_conv_ref
+
+
+def dilated_split_conv(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    dilation: int = 1,
+    zero_skip: bool = True,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Fused channel-split dilated residual conv (Fig. 2b). (B, F, C)."""
+    if not use_pallas:
+        return dilated_split_conv_ref(x, w, b, dilation=dilation)
+    interpret = jax.default_backend() != "tpu"
+    return dilated_split_conv_pallas(
+        x, w, b, dilation=dilation, zero_skip=zero_skip, interpret=interpret
+    )

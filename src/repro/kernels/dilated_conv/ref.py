@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the channel-split dilated residual conv (Fig. 2b)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dilated_split_conv_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    dilation: int = 1,
+) -> jax.Array:
+    """Channel-split dilated conv with residual, SAME padding.
+
+    x: (B, F, C); w: (k, C//2, C//2); b: (C//2,).
+    Processes the first C//2 channels (conv + bias + ReLU + residual),
+    bypasses the rest:  out = concat([relu(conv(x_p)) + x_p, x_bypass]).
+    """
+    C = x.shape[-1]
+    xp, xb = x[..., : C // 2], x[..., C // 2 :]
+    k = w.shape[0]
+    pad = (k - 1) * dilation // 2
+    y = jax.lax.conv_general_dilated(
+        xp, w, (1,), [(pad, pad)], rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    ) + b
+    y = jnp.maximum(y, 0.0) + xp
+    return jnp.concatenate([y, xb], axis=-1)

@@ -1,0 +1,3 @@
+from repro.kernels.fp10.ops import fp10_quantize
+
+__all__ = ["fp10_quantize"]

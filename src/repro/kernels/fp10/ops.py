@@ -1,0 +1,22 @@
+"""Public wrapper for the FP10 quantization kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fp10.kernel import fp10_quantize_pallas
+from repro.kernels.fp10.ref import fp10_quantize_ref
+
+
+def fp10_quantize(
+    x: jax.Array,
+    *,
+    exp_bits: int = 5,
+    man_bits: int = 4,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Round to the paper's FP10 (1-5-4) grid (or any minifloat split)."""
+    if not use_pallas:
+        return fp10_quantize_ref(x, exp_bits, man_bits)
+    interpret = jax.default_backend() != "tpu"
+    return fp10_quantize_pallas(x, exp_bits=exp_bits, man_bits=man_bits, interpret=interpret)

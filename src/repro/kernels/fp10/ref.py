@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for FP10 (and general minifloat) quantization."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.quant import quantize_minifloat
+
+
+def fp10_quantize_ref(x: jax.Array, exp_bits: int = 5, man_bits: int = 4) -> jax.Array:
+    return quantize_minifloat(x, exp_bits, man_bits)

@@ -1,0 +1,3 @@
+from repro.kernels.linear_attention.ops import linear_attention, linear_attention_causal
+
+__all__ = ["linear_attention", "linear_attention_causal"]

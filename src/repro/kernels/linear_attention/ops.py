@@ -1,0 +1,49 @@
+"""Public jit'd wrappers for the linear-attention kernels.
+
+On CPU (this container) the Pallas kernels run in interpret mode; on TPU they
+compile natively. ``use_pallas=False`` falls back to the jnp reference (used
+by the dry-run lowering path, where XLA's native fusion is the baseline the
+kernel is hillclimbed against — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.linear_attention import ref
+from repro.kernels.linear_attention.kernel import (
+    linear_attention_causal_pallas,
+    linear_attention_pallas,
+)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def linear_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_l: int = 256,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Softmax-free attention, optimal order Q @ (K^T V) / L. (B,H,L,D)."""
+    if not use_pallas:
+        return ref.linear_attention_ref(q, k, v)
+    return linear_attention_pallas(q, k, v, block_l=block_l, interpret=_interpret_default())
+
+
+def linear_attention_causal(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_l: int = 256,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Causal softmax-free attention with VMEM running-state accumulation."""
+    if not use_pallas:
+        return ref.linear_attention_causal_ref(q, k, v)
+    return linear_attention_causal_pallas(q, k, v, block_l=block_l, interpret=_interpret_default())

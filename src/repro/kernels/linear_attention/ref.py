@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the linear-attention kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Non-causal softmax-free attention, optimal order. (B,H,L,D) -> same.
+
+    out = Q @ (K^T V) / L  (constant 1/L normalizer; the BN normalizers on
+    Q/K are applied by the caller / folded into projections).
+    """
+    L = q.shape[-2]
+    kv = jnp.einsum("bhld,bhle->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    out = jnp.einsum("bhld,bhde->bhle", q.astype(jnp.float32), kv) / L
+    return out.astype(q.dtype)
+
+
+def linear_attention_causal_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal variant: y_t = q_t @ sum_{s<=t} k_s v_s^T / L."""
+    L = q.shape[-2]
+    att = jnp.einsum("bhld,bhmd->bhlm", q.astype(jnp.float32), k.astype(jnp.float32))
+    att = att * jnp.tril(jnp.ones((L, L), jnp.float32))
+    out = jnp.einsum("bhlm,bhmd->bhld", att, v.astype(jnp.float32)) / L
+    return out.astype(q.dtype)

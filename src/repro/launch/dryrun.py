@@ -1,0 +1,220 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — gets 512 host
+placeholder devices so ``jax.make_mesh`` can build the production meshes.
+
+For each cell this script:
+  1. builds the train_step / serve_step with sharded in/out specs
+     (ShapeDtypeStruct stand-ins; nothing is allocated),
+  2. ``jax.jit(...).lower(...)`` then ``.compile()`` against the mesh,
+  3. prints ``compiled.memory_analysis()`` (proves the cell fits 16 GB/chip)
+     and ``compiled.cost_analysis()`` (FLOPs/bytes for the roofline),
+  4. parses collective bytes from the optimized HLO,
+  5. writes one JSON per cell into results/dryrun/ (consumed by
+     EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline_report.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.distributed import sharding as shd
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm_common import LMConfig
+from repro.models.transformer_lm import init_decode_state, init_lm
+from repro.serve.engine import make_serve_step
+from repro.train.train_loop import (
+    TrainSettings,
+    make_lm_train_step,
+    make_train_state,
+    state_shardings,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _batch_sharding(mesh, shape):
+    ba = shd.batch_axes(mesh)
+    import numpy as np
+
+    bsize = int(np.prod([mesh.shape[a] for a in ba]))
+    if shape and shape[0] % bsize == 0:
+        return NamedSharding(mesh, P(ba, *([None] * (len(shape) - 1))))
+    return NamedSharding(mesh, P())
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, dtype=jnp.bfloat16,
+               cfg_override=None, tag: str = "", microbatch: int = 0,
+               mesh_override=None):
+    """Lower + compile one cell; returns (RooflineCell, compile_seconds)."""
+    cfg: LMConfig = cfg_override or C.get_config(arch)
+    shape = C.get_shape(shape_name)
+    mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape) + ("(pod,data,model)" if multi_pod else "(data,model)")
+
+    params_sds = jax.eval_shape(functools.partial(init_lm, jax.random.PRNGKey(0), cfg, dtype))
+
+    if shape.mode in ("train", "prefill"):
+        settings = TrainSettings(remat=True, microbatch=microbatch)
+        if shape.mode == "train":
+            state_sds = jax.eval_shape(functools.partial(make_train_state, settings=settings), params_sds)
+            fn = make_lm_train_step(cfg, settings)
+            st_sh = state_shardings(state_sds, mesh)
+            inputs = C.input_specs(cfg, shape, dtype=dtype)
+            in_args = (state_sds,) + tuple(inputs.values())
+            in_sh = (st_sh,) + tuple(_batch_sharding(mesh, s.shape) for s in inputs.values())
+            out_sh = (st_sh, None)
+            donate = (0,)
+        else:  # prefill: forward only
+            from repro.serve.engine import make_prefill_step
+
+            fn = make_prefill_step(cfg)
+            p_sh = shd.params_shardings(params_sds, mesh)
+            inputs = C.input_specs(cfg, shape, dtype=dtype)
+            tok_sds = inputs["tokens"]
+            in_args = (params_sds, tok_sds)
+            in_sh = (p_sh, _batch_sharding(mesh, tok_sds.shape))
+            out_sh = _batch_sharding(mesh, (shape.global_batch,))
+            donate = ()
+    else:  # decode
+        fn = make_serve_step(cfg)
+        p_sh = shd.params_shardings(params_sds, mesh)
+        state_sds = jax.eval_shape(
+            functools.partial(init_decode_state, cfg, shape.global_batch, shape.seq_len, dtype)
+        )
+        st_sh = shd.decode_state_shardings(state_sds, mesh)
+        inputs = C.input_specs(cfg, shape, dtype=dtype)
+        in_args = (params_sds, state_sds, inputs["token"], inputs["position"])
+        in_sh = (p_sh, st_sh, _batch_sharding(mesh, inputs["token"].shape), NamedSharding(mesh, P()))
+        out_sh = (st_sh, _batch_sharding(mesh, (shape.global_batch,)))
+        donate = (1,)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+        lowered = jitted.lower(*in_args)
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    hlo = compiled.as_text()
+    cell = rf.cell_from_compiled(
+        arch=arch + tag,
+        shape=shape_name,
+        mesh_desc=mesh_desc,
+        chips=chips,
+        compiled=compiled,
+        hlo_text=hlo,
+        model_flops=rf.model_flops_for_cell(cfg, shape),
+    )
+    mem = compiled.memory_analysis()
+    print(f"[{arch}{tag} x {shape_name} x {mesh_desc}] compile {dt:.1f}s")
+    print(f"  memory_analysis: {mem}")
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} bytes={cost.get('bytes accessed', 0):.3e}")
+    print(
+        f"  roofline: compute {cell.t_compute*1e3:.2f} ms | memory {cell.t_memory*1e3:.2f} ms | "
+        f"collective {cell.t_collective*1e3:.2f} ms -> {cell.dominant}-bound; "
+        f"useful-FLOP frac {cell.useful_flop_fraction:.2f}; roofline frac {cell.roofline_fraction:.3f}"
+    )
+    return cell, dt
+
+
+def run_cells(archs, shapes, meshes, out_dir: str, *, skip_existing: bool = True,
+              microbatch: int = 0, variant: str = "", serve_mesh=None):
+    os.makedirs(out_dir, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            shape = C.get_shape(shape_name)
+            applicable = C.cell_is_applicable(arch, shape) or (
+                variant == "linear" and shape.name == "long_500k")
+            if not applicable:
+                rec = {"arch": arch, "shape": shape_name, "skipped": True,
+                       "reason": "full-attention arch; long_500k requires sub-quadratic decode (DESIGN.md §3)"}
+                path = os.path.join(out_dir, f"{arch}__{shape_name}__skip.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[{arch} x {shape_name}] SKIP (full attention)")
+                continue
+            for mesh_kind in meshes:
+                suffix = f"__{variant}" if variant else ""
+                fname = f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+                path = os.path.join(out_dir, fname)
+                if skip_existing and os.path.exists(path):
+                    print(f"[{arch} x {shape_name} x {mesh_kind}{suffix}] cached")
+                    continue
+                try:
+                    cfg_override = None
+                    if variant == "linear":
+                        # beyond-paper: the paper's softmax-free attention at
+                        # LM scale (constant-state decode; sub-quadratic)
+                        cfg_override = dataclasses.replace(
+                            C.get_config(arch), attention="linear")
+                    mesh_override = None
+                    if serve_mesh and C.get_shape(shape_name).mode == "decode":
+                        mesh_override = jax.make_mesh(serve_mesh, ("data", "model"))
+                    cell, dt = lower_cell(
+                        arch, shape_name, multi_pod=(mesh_kind == "multi"),
+                        cfg_override=cfg_override, tag=suffix,
+                        microbatch=microbatch, mesh_override=mesh_override)
+                    rec = cell.to_json()
+                    rec["compile_seconds"] = dt
+                    rec["microbatch"] = microbatch
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:  # noqa: BLE001 — record and continue the sweep
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_kind, str(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run sweep complete")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--variant", default="",
+                    help="'linear' = paper's softmax-free attention variant")
+    ap.add_argument("--serve-mesh", default="",
+                    help="e.g. '32x8' mesh override for decode cells")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(C.ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in C.LM_SHAPES]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    serve_mesh = tuple(int(x) for x in args.serve_mesh.split("x")) if args.serve_mesh else None
+    run_cells(archs, shapes, meshes, args.out, skip_existing=not args.force,
+              microbatch=args.microbatch, variant=args.variant, serve_mesh=serve_mesh)
+
+
+if __name__ == "__main__":
+    main()

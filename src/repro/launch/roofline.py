@@ -1,0 +1,353 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, TPU v5e constants:
+
+    compute    = HLO_FLOPs / (chips * 197e12 FLOP/s)        [bf16 MXU]
+    memory     = HLO_bytes / (chips * 819e9 B/s)            [HBM]
+    collective = collective_bytes / (chips * 50e9 B/s)      [per-link ICI]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum the
+shard-local operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (output shape x dtype size, which for the
+post-SPMD module is the per-device payload).
+
+Caveats recorded with each cell:
+- cost_analysis flops/bytes are *global* (whole-program, pre-partition HLO
+  counts divided over chips here);
+- while-loop bodies (lax.scan) are counted once per iteration by XLA's
+  analysis when trip counts are static — our scans have static trip counts;
+- the collective term is a lower bound on link time (assumes perfect
+  ring/bisection utilization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.  %ag = bf16[4,1024,8192] all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<shape>[\d,]*)\])\S*\s+(?P<op>[\w-]+)\("
+)
+_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, shape: str) -> int:
+    n = 1
+    for d in shape.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from (optimized) HLO text, with each
+    op weighted by how many times its computation executes (while-loop trip
+    counts from ``known_trip_count`` annotations; see HloCostModel)."""
+    return HloCostModel(hlo_text).collectives
+
+
+class HloCostModel:
+    """Execution-count-aware cost extraction from optimized HLO text.
+
+    XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+    under-counts scan-over-layers models by the layer count. This model
+    rebuilds the computation call graph (to_apply / calls / body / condition
+    edges), reads each while op's ``known_trip_count`` annotation, and weights
+    every op by its true execution multiplier. It extracts:
+
+    - flops: 2 * K * prod(out_shape) for every dot op (matmul-dominated
+      models; elementwise flops are ignored — sub-1% here),
+    - collectives: per-kind byte totals (per-device payloads),
+    - approx_bytes: sum of op output sizes x2 (read+write) — an HBM-traffic
+      proxy consistent across cells (exact operand accounting would need full
+      cross-computation dataflow; outputs x2 tracks it within ~2x).
+    """
+
+    _COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\) -> .+ \{\s*$")
+    _DEF_RE = re.compile(r"^\s+(?:ROOT )?%?([\w.\-]+) = (\w+)\[([\d,]*)\]")
+    _DEF_TUPLE_RE = re.compile(r"^\s+(?:ROOT )?%?([\w.\-]+) = \(")
+    _OPNAME_RE = re.compile(r"\]\S*\s+([\w\-]+)\(|\)\s+([\w\-]+)\(")
+    _CALL_RE = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+    _TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, list] = {}
+        self._parse(hlo_text)
+        self._resolve_multipliers()
+        self._accumulate()
+
+    def _parse(self, txt: str):
+        cur = None
+        self.entry = None
+        self.fusion_bodies = set()
+        for raw in txt.splitlines():
+            m = self._COMP_RE.match(raw.strip()) if raw and not raw.startswith(" ") else None
+            if m and ("->" in raw):
+                cur = m.group(1)
+                self.comps[cur] = []
+                if raw.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if raw.startswith("}"):
+                cur = None
+                continue
+            if cur is not None and "=" in raw:
+                self.comps[cur].append(raw)
+                # computations called by fusion ops never touch HBM internally
+                if " fusion(" in raw:
+                    for callee in self._CALL_RE.findall(raw):
+                        self.fusion_bodies.add(callee)
+
+    @staticmethod
+    def _op_of(line: str):
+        m = re.search(r"=\s*(?:\([^=]*?\)|\w+\[[\d,]*\]\S*)\s+([\w\-]+)\(", line)
+        return m.group(1) if m else None
+
+    def _resolve_multipliers(self):
+        # caller edges: (callee, trip_multiplier_from_this_site, caller)
+        edges: Dict[str, list] = {c: [] for c in self.comps}
+        for comp, lines in self.comps.items():
+            for line in lines:
+                calls = self._CALL_RE.findall(line)
+                if not calls:
+                    continue
+                trip = 1
+                tm = self._TRIP_RE.search(line)
+                is_while = " while(" in line
+                if is_while and tm:
+                    trip = int(tm.group(1))
+                for callee in calls:
+                    # condition runs trip+1 times; close enough to trip
+                    t = trip if is_while else 1
+                    if callee in edges:
+                        edges[callee].append((comp, t))
+        self.mult: Dict[str, float] = {}
+
+        def mult_of(c, seen=()):
+            if c in self.mult:
+                return self.mult[c]
+            if c == self.entry:
+                return 1.0
+            if c in seen:
+                return 1.0
+            total = 0.0
+            for caller, t in edges.get(c, []):
+                total += mult_of(caller, seen + (c,)) * t
+            self.mult[c] = total if total > 0 else 1.0
+            return self.mult[c]
+
+        for c in self.comps:
+            mult_of(c)
+        self.mult[self.entry] = 1.0
+
+    def _accumulate(self):
+        self.flops = 0.0
+        self.approx_bytes = 0.0
+        self.collectives = {k: 0 for k in _COLLECTIVES}
+        for comp, lines in self.comps.items():
+            mult = self.mult.get(comp, 1.0)
+            count_bytes = comp not in self.fusion_bodies
+            local_shapes: Dict[str, list] = {}
+            for line in lines:
+                dm = self._DEF_RE.match(line)
+                out_elems = 0
+                out_bytes = 0
+                if dm:
+                    name, dtype, shape = dm.groups()
+                    dims = [int(x) for x in shape.split(",") if x]
+                    local_shapes[name] = dims
+                    out_elems = 1
+                    for d in dims:
+                        out_elems *= d
+                    out_bytes = out_elems * _DTYPE_BYTES.get(dtype, 4)
+                else:
+                    # tuple output: sum components
+                    for dt, shp in _TUPLE_RE.findall(line.split("=", 1)[-1].split("(", 1)[0]):
+                        n = 1
+                        for x in shp.split(","):
+                            if x:
+                                n *= int(x)
+                        out_bytes += n * _DTYPE_BYTES.get(dt, 4)
+                op = self._op_of(line)
+                if op is None:
+                    continue
+                # zero-cost ops: views / tuple plumbing, no HBM traffic
+                free = op in (
+                    "get-tuple-element", "bitcast", "tuple", "parameter",
+                    "constant", "while", "conditional", "after-all",
+                    "opt-barrier", "custom-call", "broadcast", "iota", "copy-start",
+                )
+                if count_bytes and not free:
+                    # bytes accessed = output write + resolvable operand reads
+                    opnd_bytes = 0
+                    paren = line.find(op + "(")
+                    if paren >= 0:
+                        args = line[paren + len(op) + 1 : line.find(")", paren)]
+                        for nm in re.findall(r"%([\w.\-]+)", args):
+                            dims = local_shapes.get(nm)
+                            if dims is not None:
+                                n = 1
+                                for d in dims:
+                                    n *= d
+                                # stacked-over-iterations operand inside a loop
+                                # body (e.g. (L_layers, ...) remat/weight stacks
+                                # consumed via fused dynamic-slice): each
+                                # iteration touches one slice, not the stack.
+                                if mult > 1 and len(dims) >= 2 and dims[0] > 4 and mult % dims[0] == 0:
+                                    n //= dims[0]
+                                opnd_bytes += n * 2  # dtype unknown; bf16-dominant
+                    self.approx_bytes += (out_bytes + opnd_bytes) * mult
+                kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+                if kind:
+                    self.collectives[kind] += int(out_bytes * mult)
+                if op == "dot" and dm:
+                    # contraction size from lhs shape + contracting dims
+                    om = re.search(r"dot\(%?([\w.\-]+), %?([\w.\-]+)\)", line)
+                    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                    if om and cm:
+                        lhs_dims = local_shapes.get(om.group(1))
+                        if lhs_dims is None:
+                            continue
+                        k_size = 1
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                k_size *= lhs_dims[int(ci)]
+                        self.flops += 2.0 * k_size * out_elems * mult
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    """All HLO-derived quantities are PER-DEVICE (the compiled module is the
+    per-device SPMD program; while-loop bodies are weighted by trip count via
+    HloCostModel). model_gflops is the GLOBAL useful-model FLOPs."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float  # per-device, trip-count-corrected dot flops
+    hlo_gbytes: float  # per-device HBM-traffic proxy (op outputs x2)
+    collective_gbytes: float  # per-device collective payload
+    collective_breakdown: Dict[str, float]
+    bytes_per_device: float  # peak memory from memory_analysis
+    model_gflops: float  # global: 6*N(_active)*D (+ attention term)
+    xla_raw_gflops: float = 0.0  # uncorrected cost_analysis value, for reference
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def __post_init__(self):
+        self.t_compute = self.hlo_gflops * 1e9 / PEAK_FLOPS
+        self.t_memory = self.hlo_gbytes * 1e9 / HBM_BW
+        self.t_collective = self.collective_gbytes * 1e9 / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory, "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much of compiled compute is useful
+        (catches remat/redundancy/replication waste)."""
+        per_dev_model = self.model_gflops / self.chips
+        return per_dev_model / self.hlo_gflops if self.hlo_gflops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak-FLOPs roofline achieved if the cell runs at its
+        bound: (useful FLOP time) / (bound-term time)."""
+        t_useful = self.model_gflops * 1e9 / (self.chips * PEAK_FLOPS)
+        return t_useful / self.bound_time if self.bound_time else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            dominant=self.dominant,
+            bound_time=self.bound_time,
+            useful_flop_fraction=self.useful_flop_fraction,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def cell_from_compiled(
+    *,
+    arch: str,
+    shape: str,
+    mesh_desc: str,
+    chips: int,
+    compiled,
+    hlo_text: str,
+    model_flops: float,
+) -> RooflineCell:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    mem = compiled.memory_analysis()
+    per_dev = float(
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0)
+    )
+    model = HloCostModel(hlo_text)
+    return RooflineCell(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_desc,
+        chips=chips,
+        hlo_gflops=model.flops / 1e9,
+        hlo_gbytes=model.approx_bytes / 1e9,
+        collective_gbytes=sum(model.collectives.values()) / 1e9,
+        collective_breakdown={k: v / 1e9 for k, v in model.collectives.items()},
+        bytes_per_device=per_dev,
+        model_gflops=model_flops / 1e9,
+        xla_raw_gflops=raw_flops / 1e9,
+    )
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode: D = new
+    tokens. Attention's quadratic term is included for softmax archs (it is
+    real model compute, not overhead)."""
+    n = cfg.active_params()
+    attn_quad = 0.0
+    if getattr(cfg, "attention", "softmax") == "softmax" and not any(
+        k in ("mlstm", "slstm", "mamba2") for k, _ in cfg.pattern
+    ):
+        # 2 matmuls (QK^T, AV) x 2 flops x H*Dh per token-pair, causal halves it
+        attn_layers = sum(c for k, c in cfg.pattern if k not in ("mamba2",))
+        attn_quad = 2.0 * attn_layers * shape.seq_len * (cfg.num_heads * cfg.resolved_head_dim)
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return (6.0 * n + 3.0 * attn_quad) * tokens
+    if shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return (2.0 * n + attn_quad) * tokens  # forward only
+    # decode: one token per sequence attends to the whole cache (linear term)
+    per_tok_attn = 4.0 * sum(c for k, c in cfg.pattern if k not in ("mamba2", "mlstm", "slstm")) \
+        * shape.seq_len * (cfg.num_heads * cfg.resolved_head_dim) if attn_quad else 0.0
+    return (2.0 * n + per_tok_attn) * shape.global_batch

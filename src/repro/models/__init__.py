@@ -1,0 +1,3 @@
+"""Model zoo: the paper's models (TFTNN, TSTNN baseline) and the assigned
+LM-family architectures (dense GQA, MLA+MoE, SSM, hybrid, audio/VLM backbones).
+"""

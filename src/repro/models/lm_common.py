@@ -1,0 +1,146 @@
+"""Shared config + building blocks for the assigned LM-family architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASettings:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0  # 0 => full-rank Q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """One config class covering all 10 assigned architectures.
+
+    ``block_pattern`` chooses the layer stack: a tuple of (kind, count) runs,
+    each run scanned over stacked params. Kinds: 'attn' (dense transformer),
+    'local'/'global' (sliding-window / full attention, gemma3), 'mla_dense',
+    'mla_moe' (deepseek), 'mlstm', 'slstm' (xlstm), 'mamba2', 'zamba_shared'
+    (mamba2 run + one shared-weight attention block application).
+    """
+
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // num_heads
+    block_pattern: Tuple[Tuple[str, int], ...] = ()
+    qkv_bias: bool = False
+    mlp_type: str = "swiglu"  # | "gelu"
+    norm: str = "rmsnorm"  # | "layernorm" | "batchnorm" (paper technique)
+    attention: str = "softmax"  # | "linear" (paper's softmax-free attention)
+    sliding_window: int = 0  # for 'local' layers
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # chatglm applies RoPE to half the dims
+    tie_embeddings: bool = False
+    moe: Optional[MoESettings] = None
+    mla: Optional[MLASettings] = None
+    ssm_state: int = 64  # mamba2 / xlstm state size
+    ssm_head_dim: int = 64
+    conv_kernel: int = 4  # mamba2 local conv
+    mtp: bool = False  # deepseek-v3 multi-token prediction head
+    embed_inputs: bool = False  # audio/vlm stubs feed embeddings directly
+    logit_softcap: float = 0.0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def pattern(self) -> Tuple[Tuple[str, int], ...]:
+        return self.block_pattern or (("attn", self.num_layers),)
+
+    def active_params(self) -> int:
+        """Approximate active (per-token) parameter count, for 6*N*D."""
+        return _param_estimate(self, active_only=True)
+
+    def total_params(self) -> int:
+        return _param_estimate(self, active_only=False)
+
+
+def _param_estimate(cfg: LMConfig, active_only: bool) -> int:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    n_q = cfg.num_heads * hd
+    n_kv = cfg.num_kv_heads * hd
+    total = cfg.vocab_size * d  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d
+    for kind, count in cfg.pattern:
+        if kind in ("attn", "local", "global", "gemma"):
+            attn = d * n_q + 2 * d * n_kv + n_q * d
+            mlp = 3 * d * cfg.d_ff if cfg.mlp_type == "swiglu" else 2 * d * cfg.d_ff
+            total += count * (attn + mlp)
+        elif kind in ("mla_dense", "mla_moe"):
+            m = cfg.mla
+            attn = d * m.kv_lora_rank + d * m.qk_rope_head_dim
+            attn += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            if m.q_lora_rank:
+                attn += d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * (
+                    m.qk_nope_head_dim + m.qk_rope_head_dim
+                )
+            else:
+                attn += d * cfg.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+            attn += cfg.num_heads * m.v_head_dim * d
+            if kind == "mla_dense":
+                mlp = 3 * d * cfg.d_ff
+            else:
+                e = cfg.moe
+                expert = 3 * d * e.d_ff_expert
+                experts = e.top_k if active_only else e.num_experts
+                mlp = (experts + e.num_shared) * expert + d * e.num_experts  # + router
+            total += count * (attn + mlp)
+        elif kind == "mlstm":
+            # q,k,v,o + gates + up/down proj (xlstm mLSTM block, factor ~8)
+            total += count * (8 * d * d)
+        elif kind == "slstm":
+            total += count * (8 * d * d)
+        elif kind == "mamba2":
+            d_inner = 2 * d
+            total += count * (d * (2 * d_inner + 2 * cfg.ssm_state) + d_inner * d + d_inner * 3)
+        elif kind == "zamba_shared":
+            # mamba2 run + ONE shared attn+mlp block counted once below
+            d_inner = 2 * d
+            total += count * (d * (2 * d_inner + 2 * cfg.ssm_state) + d_inner * d)
+        else:
+            raise ValueError(kind)
+    if any(k == "zamba_shared" for k, _ in cfg.pattern):
+        attn = d * n_q + 2 * d * n_kv + n_q * d
+        total += attn + 3 * d * cfg.d_ff  # the single shared block
+    return int(total)
+
+
+def causal_mask(L: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.tril(jnp.ones((L, L), bool))
+
+
+def window_mask(L: int, window: jax.Array) -> jax.Array:
+    """Causal sliding-window mask; window < 0 means full causal."""
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    causal = j <= i
+    local = (i - j) < jnp.where(window < 0, jnp.asarray(L + 1), window)
+    return causal & local

@@ -1,0 +1,187 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+K/V are compressed into a shared latent c_kv (rank ``kv_lora_rank``) plus a
+single shared RoPE key head; per-head K_nope/V are up-projected from the
+latent. The decode cache stores only (c_kv, k_rope) — (B, L, rank + rope_dim)
+— which is the technique's memory win and what ``init_mla_cache`` implements.
+
+Note (DESIGN.md §3): the paper's softmax-free rewrite is NOT applied inside
+MLA — the latent decomposition assumes a softmax over combined nope+rope
+logits, and re-deriving a BN-normalized linear variant is out of scope; MLA
+archs keep softmax and skip long_500k.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.models.lm_common import LMConfig
+
+Params = Dict[str, jax.Array]
+
+
+def init_mla(key, cfg: LMConfig, dtype=jnp.float32) -> Params:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    keys = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    p: Params = {
+        "w_dkv": jax.random.normal(keys[0], (d, m.kv_lora_rank), dtype) * s,
+        "w_krope": jax.random.normal(keys[1], (d, m.qk_rope_head_dim), dtype) * s,
+        "w_uk": jax.random.normal(keys[2], (m.kv_lora_rank, H, m.qk_nope_head_dim), dtype)
+        * (1.0 / math.sqrt(m.kv_lora_rank)),
+        "w_uv": jax.random.normal(keys[3], (m.kv_lora_rank, H, m.v_head_dim), dtype)
+        * (1.0 / math.sqrt(m.kv_lora_rank)),
+        "w_o": jax.random.normal(keys[4], (H, m.v_head_dim, d), dtype)
+        * (1.0 / math.sqrt(H * m.v_head_dim)),
+        "kv_norm": nn.init_rmsnorm(m.kv_lora_rank, dtype),
+    }
+    qdim = H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if m.q_lora_rank:
+        p["w_dq"] = jax.random.normal(keys[5], (d, m.q_lora_rank), dtype) * s
+        p["w_uq"] = jax.random.normal(keys[6], (m.q_lora_rank, qdim), dtype) * (
+            1.0 / math.sqrt(m.q_lora_rank)
+        )
+        p["q_norm"] = nn.init_rmsnorm(m.q_lora_rank, dtype)
+    else:
+        p["w_q"] = jax.random.normal(keys[5], (d, qdim), dtype) * s
+    return p
+
+
+def _project_q(p: Params, cfg: LMConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    H = cfg.num_heads
+    if m.q_lora_rank:
+        cq = nn.rmsnorm(p["q_norm"], x @ p["w_dq"])
+        q = cq @ p["w_uq"]
+    else:
+        q = x @ p["w_q"]
+    q = q.reshape(x.shape[:-1] + (H, m.qk_nope_head_dim + m.qk_rope_head_dim))
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    # rope over (…, L, H, rope_dim): move H before L for apply_rope's (…, L, D)
+    q_rope = jnp.swapaxes(
+        nn.apply_rope(jnp.swapaxes(q_rope, -3, -2), positions, cfg.rope_theta), -3, -2
+    )
+    return q_nope, q_rope
+
+
+def _latents(p: Params, cfg: LMConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    c_kv = nn.rmsnorm(p["kv_norm"], x @ p["w_dkv"])  # (B, L, rank)
+    k_rope = x @ p["w_krope"]  # (B, L, rope_dim) — single shared head
+    k_rope = nn.apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _attend_flash(p: Params, cfg: LMConfig, q_nope, q_rope, c_kv, k_rope, *, chunk: int = 512):
+    """Causal MLA attention, online softmax over key chunks, K/V expanded
+    PER CHUNK from the latent.
+
+    The absorbed (latent-space) form used at decode would materialize a
+    (B, H, L, rank) query here — 17 TB for deepseek-v3 train_4k (§Perf
+    iteration 3) — so for training/prefill we up-project each chunk's
+    K_nope/V on the fly: transient (B, chunk, H, d) tensors, an (B, H, L, dv)
+    fp32 accumulator, and no (L, L) scores. This mirrors production DeepSeek
+    implementations (naive/expanded MLA for prefill, absorbed for decode).
+    """
+    m_ = cfg.mla
+    B, L, H, dn = q_nope.shape
+    dv = m_.v_head_dim
+    scale = 1.0 / math.sqrt(m_.qk_nope_head_dim + m_.qk_rope_head_dim)
+    from repro.distributed.sharding import hint_attention_heads
+
+    q_n = hint_attention_heads(jnp.swapaxes(q_nope, 1, 2).astype(jnp.float32))  # (B,H,L,dn)
+    q_r = hint_attention_heads(jnp.swapaxes(q_rope, 1, 2).astype(jnp.float32))  # (B,H,L,dr)
+    n = L // chunk
+    ckv_c = c_kv.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    kr_c = k_rope.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    i_pos = jnp.arange(L)[:, None]
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,H,L,1), (B,H,L,1), (B,H,L,dv)
+        ckv_b, kr_b, ci = inp
+        # expand this chunk's K_nope and V from the latent (transient)
+        k_n = jnp.einsum("bmr,rhd->bhmd", ckv_b, p["w_uk"]).astype(jnp.float32)
+        v_b = jnp.einsum("bmr,rhd->bhmd", ckv_b, p["w_uv"]).astype(jnp.float32)
+        j_pos = ci * chunk + jnp.arange(chunk)[None, :]
+        valid = j_pos <= i_pos
+        s = jnp.einsum("bhld,bhmd->bhlm", q_n, k_n)
+        s = s + jnp.einsum("bhld,bmd->bhlm", q_r, kr_b.astype(jnp.float32))
+        s = jnp.where(valid[None, None], s * scale, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        pmat = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pmat, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bhlm,bhmd->bhld", pmat, v_b)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, H, L, 1), -1e30, jnp.float32),
+        jnp.zeros((B, H, L, 1), jnp.float32),
+        jnp.zeros((B, H, L, dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (ckv_c, kr_c, jnp.arange(n)))
+    v = (acc / jnp.maximum(l, 1e-30)).astype(c_kv.dtype)  # (B,H,L,dv)
+    v = jnp.swapaxes(v, 1, 2)  # (B,L,H,dv)
+    return jnp.einsum("blhd,hdo->blo", v, p["w_o"])
+
+
+def _attend(p: Params, cfg: LMConfig, q_nope, q_rope, c_kv, k_rope, mask):
+    """Softmax attention over latent-expanded K/V.
+
+    q_nope: (B,Lq,H,dn), q_rope: (B,Lq,H,dr); c_kv: (B,Lk,rank), k_rope (B,Lk,dr).
+    The nope logits are computed *in the latent space* (absorbed projection):
+    q_nope @ W_uk^T gives per-head latent queries, dotted against c_kv — this
+    avoids materializing per-head K at decode (the MLA trick).
+    """
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # absorb W_uk into the query: (B,Lq,H,dn) x (rank,H,dn) -> (B,Lq,H,rank)
+    q_lat = jnp.einsum("blhd,rhd->blhr", q_nope, p["w_uk"])
+    logits = jnp.einsum("blhr,bmr->bhlm", q_lat, c_kv)
+    logits = logits + jnp.einsum("blhd,bmd->bhlm", q_rope, k_rope)
+    logits = logits.astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+    # values in latent space: att @ c_kv, then up-project with W_uv
+    ctx = jnp.einsum("bhlm,bmr->blhr", att, c_kv)
+    v = jnp.einsum("blhr,rhd->blhd", ctx, p["w_uv"])  # (B,Lq,H,dv)
+    return jnp.einsum("blhd,hdo->blo", v, p["w_o"])
+
+
+def apply_mla(p: Params, cfg: LMConfig, x: jax.Array, positions: jax.Array, mask: jax.Array) -> jax.Array:
+    """Full-sequence MLA. x: (B, L, D); mask: (L, L) or (B, 1, L, L) bool."""
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    L = x.shape[1]
+    if L >= 2048 and L % 512 == 0:
+        return _attend_flash(p, cfg, q_nope, q_rope, c_kv, k_rope, chunk=512)
+    return _attend(p, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+
+
+def init_mla_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.float32) -> Params:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def apply_mla_decode(
+    p: Params, cfg: LMConfig, x_t: jax.Array, cache: Params, position: jax.Array
+) -> Tuple[jax.Array, Params]:
+    """One-token decode. x_t: (B, 1, D); position: scalar int."""
+    pos = jnp.asarray(position).reshape(1)
+    q_nope, q_rope = _project_q(p, cfg, x_t, pos)
+    c_t, kr_t = _latents(p, cfg, x_t, pos)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_t.astype(cache["c_kv"].dtype), (0, position, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_t.astype(cache["k_rope"].dtype), (0, position, 0))
+    L = c_kv.shape[1]
+    mask = (jnp.arange(L) <= position)[None, None, None, :]
+    y = _attend(p, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

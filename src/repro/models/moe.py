@@ -1,0 +1,120 @@
+"""Mixture-of-Experts MLP (DeepSeek-V2/V3 style: shared + routed top-k).
+
+TPU/pjit-friendly *capacity-gather* formulation (DESIGN.md §4):
+
+- routing is computed per sequence (group = one sequence of S tokens), so the
+  top-C selection axis is unsharded;
+- each expert gathers its top-C tokens (C = S * top_k / E * capacity_factor),
+  runs a stacked SwiGLU via einsum over the expert-stacked weights
+  (E, D, F) — expert axis sharded over the 'model' mesh axis (EP) —
+  and scatter-adds results back;
+- no all-to-all is required: the combine reduces over the expert-sharded
+  axis, which the SPMD partitioner lowers to a reduce-scatter/all-reduce on
+  'model', exactly like a Megatron MLP combine.
+
+Tokens beyond an expert's capacity are dropped (classic Switch behaviour);
+``moe_dense_reference`` computes the exact dropless result for tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm_common import LMConfig, MoESettings
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe(key, cfg: LMConfig, dtype=jnp.float32) -> Params:
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert
+    keys = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": jax.random.normal(keys[0], (d, e.num_experts), jnp.float32) * s,
+        "w_gate": jax.random.normal(keys[1], (e.num_experts, d, f), dtype) * s,
+        "w_up": jax.random.normal(keys[2], (e.num_experts, d, f), dtype) * s,
+        "w_down": jax.random.normal(keys[3], (e.num_experts, f, d), dtype) * (1.0 / math.sqrt(f)),
+    }
+    if e.num_shared:
+        fs = f * e.num_shared
+        p["shared_gate"] = jax.random.normal(keys[4], (d, fs), dtype) * s
+        p["shared_up"] = jax.random.normal(keys[5], (d, fs), dtype) * s
+        p["shared_down"] = jax.random.normal(keys[4], (fs, d), dtype) * (1.0 / math.sqrt(fs))
+    return p
+
+
+def router_weights(p: Params, x: jax.Array, e: MoESettings) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. x: (B, S, D) -> (weights (B,S,K), experts (B,S,K), aux_loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, e.top_k)  # (B,S,K)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)  # renormalize
+    # load-balancing aux loss (Switch style): E * sum_e f_e * P_e
+    E = e.num_experts
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    fe = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    return w, idx, aux
+
+
+def capacity(e: MoESettings, seq_len: int) -> int:
+    return min(seq_len, max(1, int(seq_len * e.top_k / e.num_experts * e.capacity_factor)))
+
+
+def apply_moe(p: Params, cfg: LMConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """MoE MLP. x: (B, S, D) -> (y, aux_loss)."""
+    e = cfg.moe
+    B, S, D = x.shape
+    E, K = e.num_experts, e.top_k
+    C = capacity(e, S)
+    w, idx, aux = router_weights(p, x, e)
+
+    # Per-token per-expert combine weight: (B, S, E), sparse (K nonzero).
+    w_full = jax.vmap(jax.vmap(lambda wi, ii: jnp.zeros((E,), jnp.float32).at[ii].add(wi)))(w, idx)
+
+    # Each expert picks its top-C tokens within the sequence (group-limited).
+    scores = jnp.swapaxes(w_full, 1, 2)  # (B, E, S)
+    sel_w, sel_idx = jax.lax.top_k(scores, C)  # (B, E, C)
+
+    xg = jnp.take_along_axis(
+        x[:, None, :, :], sel_idx[..., None], axis=2
+    )  # (B, E, C, D) — gather each expert's tokens
+    # expert-stacked SwiGLU (E sharded over 'model')
+    g = jnp.einsum("becd,edf->becf", xg, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xg, p["w_up"])
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])  # (B, E, C, D)
+    out = out * sel_w[..., None].astype(out.dtype)
+
+    # scatter-add back to token positions
+    def combine(o_e, i_e):  # (E, C, D), (E, C)
+        return jnp.zeros((S, D), o_e.dtype).at[i_e.reshape(-1)].add(o_e.reshape(-1, D))
+
+    y = jax.vmap(combine)(out, sel_idx)  # (B, S, D)
+
+    if e.num_shared:
+        sg = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        y = y + sg @ p["shared_down"]
+    return y.astype(x.dtype), aux
+
+
+def moe_dense_reference(p: Params, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    """Exact dropless MoE: every expert on every token, top-k combine. Tests only."""
+    e = cfg.moe
+    w, idx, _ = router_weights(p, x, e)
+    g = jnp.einsum("bsd,edf->besf", x, p["w_gate"])
+    u = jnp.einsum("bsd,edf->besf", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("besf,efd->besd", h, p["w_down"])  # (B, E, S, D)
+    w_full = jax.vmap(jax.vmap(lambda wi, ii: jnp.zeros((e.num_experts,), jnp.float32).at[ii].add(wi)))(w, idx)
+    y = jnp.einsum("besd,bse->bsd", out, w_full.astype(out.dtype))
+    if e.num_shared:
+        sg = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
+        y = y + sg @ p["shared_down"]
+    return y.astype(x.dtype)

@@ -1,0 +1,622 @@
+"""Generic decoder-only LM covering all 10 assigned architectures.
+
+One parameterization (``LMConfig``) drives:
+- dense GQA transformers (qwen1.5-110b w/ QKV bias, codeqwen, chatglm3 with
+  half-dim RoPE, pixtral/musicgen backbones with stub embedding frontends),
+- local:global sliding-window stacks (gemma3),
+- MLA + MoE stacks (deepseek-v2/v3, incl. MTP),
+- SSM stacks (xlstm mLSTM/sLSTM, zamba2 mamba2 + shared attention block),
+- the paper's softmax-free *linear* attention as a drop-in attention flavor
+  (``attention='linear'``) and constant BN normalization (``norm='batchnorm'``)
+  — the beyond-paper generalizations of the reproduction (DESIGN.md §3).
+
+Layers are stacked per homogeneous run and executed with ``jax.lax.scan`` so
+the 60-80-layer dry-runs lower to compact HLO. Per-layer attention windows
+ride along as scanned inputs, letting gemma3's 5:1 local:global pattern share
+one scan.
+
+Decode paths (``init_decode_state`` / ``decode_step``) use: KV caches for
+softmax attention, (D x D) running state for linear attention (the paper's
+streaming execution model), latent caches for MLA, and recurrent states for
+SSM blocks — so long_500k decode is O(1) in context length for the
+recurrent/linear archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.softmax_free_attention import (
+    softmax_free_attention_causal,
+    softmax_free_attention_step,
+)
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.lm_common import LMConfig, window_mask
+
+Params = Dict[str, Any]
+
+
+def _shard_logits(logits: jax.Array) -> jax.Array:
+    """Keep the vocab axis 'model'-sharded through the loss (no-op off-mesh)."""
+    from repro.distributed.sharding import hint_last_dim_model
+
+    return hint_last_dim_model(logits)
+
+
+def _shard_heads(x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import hint_attention_heads
+
+    return hint_attention_heads(x)
+
+
+def _shard_residual(x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import hint_residual
+
+    return hint_residual(x)
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch (rmsnorm | layernorm | batchnorm-affine)
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: LMConfig, key, d: int, dtype) -> Params:
+    if cfg.norm == "rmsnorm":
+        return nn.init_rmsnorm(d, dtype)
+    if cfg.norm == "layernorm":
+        return nn.init_layernorm(d, dtype)
+    if cfg.norm == "batchnorm":
+        # constant (inference-mode) BN == per-channel affine; the paper's
+        # LN->BN swap. Stats are folded into scale/bias (DESIGN.md §5.7).
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype), "bn": jnp.ones((1,), dtype)}
+    raise ValueError(cfg.norm)
+
+
+def _apply_norm(cfg: LMConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return nn.rmsnorm(p, x)
+    if cfg.norm == "layernorm":
+        return nn.layernorm(p, x)
+    return x * p["scale"] + p["bias"]  # batchnorm-affine: O(1), foldable
+
+
+# ---------------------------------------------------------------------------
+# Dense attention + MLP block
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: LMConfig, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    keys = jax.random.split(key, 8)
+    p = {
+        "norm1": _init_norm(cfg, keys[0], d, dtype),
+        "wq": nn.init_dense(keys[1], d, nq, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": nn.init_dense(keys[2], d, nkv, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": nn.init_dense(keys[3], d, nkv, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": nn.init_dense(keys[4], nq, d, bias=False, dtype=dtype),
+        "norm2": _init_norm(cfg, keys[5], d, dtype),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["mlp"] = {
+            "gate": nn.init_dense(keys[6], d, cfg.d_ff, bias=False, dtype=dtype),
+            "up": nn.init_dense(keys[7], d, cfg.d_ff, bias=False, dtype=dtype),
+            "down": nn.init_dense(keys[6], cfg.d_ff, d, bias=False, dtype=dtype),
+        }
+    else:
+        p["mlp"] = {
+            "fc1": nn.init_dense(keys[6], d, cfg.d_ff, dtype=dtype),
+            "fc2": nn.init_dense(keys[7], cfg.d_ff, d, dtype=dtype),
+        }
+    return p
+
+
+def _mlp(cfg: LMConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(nn.dense(p["gate"], x)) * nn.dense(p["up"], x)) @ p["down"]["w"]
+    return nn.dense(p["fc2"], nn.gelu(nn.dense(p["fc1"], x)))
+
+
+def _rope(cfg: LMConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """RoPE on a fraction of head dims (chatglm3: half). x: (B,H,L,Dh)."""
+    hd = x.shape[-1]
+    rd = int(hd * cfg.rope_fraction)
+    if rd >= hd:
+        return nn.apply_rope(x, positions, cfg.rope_theta)
+    xr, xp = x[..., :rd], x[..., rd:]
+    return jnp.concatenate([nn.apply_rope(xr, positions, cfg.rope_theta), xp], axis=-1)
+
+
+def _heads(x: jax.Array, h: int) -> jax.Array:
+    B, L, _ = x.shape
+    return x.reshape(B, L, h, -1).transpose(0, 2, 1, 3)  # (B,H,L,Dh)
+
+
+def _gqa_expand(kv: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return kv
+    return jnp.repeat(kv, n_rep, axis=1)
+
+
+def _attend_softmax(q, k, v, mask):
+    """q: (B,Hq,L,Dh); k,v: (B,Hq,L,Dh); mask (L,L) or (B,1,Lq,Lk) bool."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhld,bhmd->bhlm", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhlm,bhmd->bhld", att, v)
+
+
+def _attend_softmax_flash(q, k, v, window, *, chunk: int = 512):
+    """Flash-style causal windowed attention: online softmax over KV chunks.
+
+    Never materializes the (L, L) score matrix or a dense mask — per chunk
+    the working set is (B, H, L, chunk) and masks come from iota arithmetic.
+    This is the memory-bound hillclimb for long-sequence training cells
+    (EXPERIMENTS.md §Perf) and mirrors what the Pallas flash kernel does on
+    real TPUs; in the lowered HLO it is a scan, so HBM traffic scales as
+    O(L * chunk) live bytes instead of O(L^2).
+
+    q,k,v: (B, H, L, Dh); window: scalar int (-1 = full causal).
+    """
+    B, H, L, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    n = L // chunk
+    qf = q.astype(jnp.float32) * scale
+    kc = k.reshape(B, H, n, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    i_pos = jnp.arange(L)[:, None]  # query positions
+    win = jnp.where(window < 0, jnp.asarray(L + 1), window)
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,H,L,1), (B,H,L,1), (B,H,L,Dh)
+        kb, vb, ci = inp
+        j_pos = ci * chunk + jnp.arange(chunk)[None, :]
+        valid = (j_pos <= i_pos) & ((i_pos - j_pos) < win)  # (L, chunk)
+        s = jnp.einsum("bhld,bhmd->bhlm", qf, kb.astype(jnp.float32))
+        s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bhlm,bhmd->bhld", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, H, L, 1), -1e30, jnp.float32),
+        jnp.zeros((B, H, L, 1), jnp.float32),
+        jnp.zeros((B, H, L, Dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, jnp.arange(n)))
+    return (acc / jnp.maximum(l, 1e-30)).astype(v.dtype)
+
+
+def _apply_attn_block(
+    p: Params, cfg: LMConfig, h: jax.Array, positions: jax.Array, window: jax.Array
+) -> jax.Array:
+    B, L, D = h.shape
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    x = _apply_norm(cfg, p["norm1"], h)
+    q = _heads(nn.dense(p["wq"], x), cfg.num_heads)
+    k = _heads(nn.dense(p["wk"], x), cfg.num_kv_heads)
+    v = _heads(nn.dense(p["wv"], x), cfg.num_kv_heads)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    k, v = _gqa_expand(k, n_rep), _gqa_expand(v, n_rep)
+    q, k, v = _shard_heads(q), _shard_heads(k), _shard_heads(v)
+    if cfg.attention == "linear":
+        # the paper's softmax-free attention (BN normalizers folded into wq/wk)
+        chunk = min(256, L)
+        att = softmax_free_attention_causal(q, k, v, chunk=chunk)
+    elif L >= 2048 and L % 512 == 0:
+        att = _attend_softmax_flash(q, k, v, window, chunk=512)
+    else:
+        mask = window_mask(L, window)
+        att = _attend_softmax(q, k, v, mask)
+    att = att.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * hd)
+    h = _shard_residual(h + nn.dense(p["wo"], att))
+    h = _shard_residual(h + _mlp(cfg, p["mlp"], _apply_norm(cfg, p["norm2"], h)))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# MLA (+ optional MoE) block
+# ---------------------------------------------------------------------------
+
+def _init_mla_block(key, cfg: LMConfig, dtype, use_moe: bool) -> Params:
+    keys = jax.random.split(key, 4)
+    p = {
+        "norm1": _init_norm(cfg, keys[0], cfg.d_model, dtype),
+        "attn": mla_mod.init_mla(keys[1], cfg, dtype),
+        "norm2": _init_norm(cfg, keys[2], cfg.d_model, dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.init_moe(keys[3], cfg, dtype)
+    else:
+        p["mlp"] = {
+            "gate": nn.init_dense(keys[3], cfg.d_model, cfg.d_ff, bias=False, dtype=dtype),
+            "up": nn.init_dense(keys[0], cfg.d_model, cfg.d_ff, bias=False, dtype=dtype),
+            "down": nn.init_dense(keys[1], cfg.d_ff, cfg.d_model, bias=False, dtype=dtype),
+        }
+    return p
+
+
+def _apply_mla_block(
+    p: Params, cfg: LMConfig, h: jax.Array, positions: jax.Array, use_moe: bool
+) -> Tuple[jax.Array, jax.Array]:
+    L = h.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    x = _apply_norm(cfg, p["norm1"], h)
+    h = h + mla_mod.apply_mla(p["attn"], cfg, x, positions, mask)
+    x = _apply_norm(cfg, p["norm2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        y, aux = moe_mod.apply_moe(p["moe"], cfg, x)
+    else:
+        y = (jax.nn.silu(nn.dense(p["mlp"]["gate"], x)) * nn.dense(p["mlp"]["up"], x)) @ p["mlp"]["down"]["w"]
+    return h + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+_BLOCK_INIT = {
+    "mlstm": ssm_mod.init_mlstm,
+    "slstm": ssm_mod.init_slstm,
+    "mamba2": ssm_mod.init_mamba2,
+}
+
+
+def resolve_windows(cfg: LMConfig, kind: str, count: int) -> jax.Array:
+    """Per-layer attention window for an 'attn' run (-1 = full causal)."""
+    if kind == "local":
+        return jnp.full((count,), cfg.sliding_window, jnp.int32)
+    if kind == "gemma":  # 5 local : 1 global repeating
+        pat = [cfg.sliding_window] * 5 + [-1]
+        return jnp.asarray([pat[i % 6] for i in range(count)], jnp.int32)
+    return jnp.full((count,), -1, jnp.int32)
+
+
+def init_lm(key, cfg: LMConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8 + len(cfg.pattern))
+    d = cfg.d_model
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, d), dtype) * 0.02,
+        "final_norm": _init_norm(cfg, keys[1], d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(keys[2], (d, cfg.vocab_size), dtype) * 0.02
+
+    runs: List[Params] = []
+    for i, (kind, count) in enumerate(cfg.pattern):
+        rkeys = jax.random.split(keys[3 + i], count)
+        if kind in ("attn", "local", "global", "gemma"):
+            stacked = jax.vmap(lambda k: _init_attn_block(k, cfg, dtype))(rkeys)
+            runs.append({"params": stacked})
+        elif kind in ("mla_dense", "mla_moe"):
+            use_moe = kind == "mla_moe"
+            stacked = jax.vmap(lambda k: _init_mla_block(k, cfg, dtype, use_moe))(rkeys)
+            runs.append({"params": stacked})
+        elif kind in _BLOCK_INIT:
+            stacked = jax.vmap(lambda k: _BLOCK_INIT[kind](k, cfg, dtype))(rkeys)
+            runs.append({"params": stacked})
+        elif kind == "zamba_shared":
+            stacked = jax.vmap(lambda k: ssm_mod.init_mamba2(k, cfg, dtype))(rkeys)
+            runs.append({"params": stacked})
+        else:
+            raise ValueError(kind)
+    p["runs"] = runs
+    if any(k == "zamba_shared" for k, _ in cfg.pattern):
+        p["shared_block"] = _init_attn_block(keys[-1], cfg, dtype)
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": nn.init_dense(keys[-2], 2 * d, d, bias=False, dtype=dtype),
+            "block": _init_attn_block(keys[-3], cfg, dtype),
+            "norm": _init_norm(cfg, keys[-4], d, dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_forward(
+    run: Params,
+    kind: str,
+    raw_kind: str,
+    cfg: LMConfig,
+    h: jax.Array,
+    positions: jax.Array,
+    shared: Optional[Params],
+    remat: bool,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scan one homogeneous run of layers over h. Returns (h, aux_loss_sum)."""
+    if kind in ("local", "global", "gemma"):
+        kind = "attn"
+
+    def layer(h, layer_in):
+        lp = layer_in["p"]
+        if kind == "attn":
+            h = _apply_attn_block(lp, cfg, h, positions, layer_in["w"])
+            aux = jnp.zeros((), jnp.float32)
+        elif kind in ("mla_dense", "mla_moe"):
+            h, aux = _apply_mla_block(lp, cfg, h, positions, kind == "mla_moe")
+        elif kind == "mlstm":
+            h = ssm_mod.apply_mlstm(lp, cfg, h, chunk=min(64, h.shape[1]))
+            aux = jnp.zeros((), jnp.float32)
+        elif kind == "slstm":
+            h = ssm_mod.apply_slstm(lp, cfg, h)
+            aux = jnp.zeros((), jnp.float32)
+        elif kind in ("mamba2", "zamba_shared"):
+            h = h + ssm_mod.apply_mamba2(lp, cfg, _apply_norm_like(cfg, h), chunk=min(64, h.shape[1]))
+            if kind == "zamba_shared":
+                w = jnp.asarray(cfg.sliding_window if cfg.sliding_window else -1, jnp.int32)
+                h = _apply_attn_block(shared, cfg, h, positions, w)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(kind)
+        return h, aux
+
+    body = jax.checkpoint(layer) if remat else layer
+    xs = {"p": run["params"]}
+    count = jax.tree_util.tree_leaves(run["params"])[0].shape[0]
+    xs["w"] = resolve_windows(cfg, raw_kind, count)
+    if unroll:
+        # python-unrolled layers: exact FLOP/byte/collective accounting in
+        # XLA cost_analysis (while-loop bodies are counted once; see
+        # launch/roofline.py). Same math as the scan path.
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(count):
+            xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+            h, aux = body(h, xi)
+            aux_total = aux_total + aux
+        return h, aux_total
+    h, auxs = jax.lax.scan(lambda c, x: body(c, x), h, xs)
+    return h, jnp.sum(auxs)
+
+
+def _apply_norm_like(cfg: LMConfig, h: jax.Array) -> jax.Array:
+    # mamba blocks carry their own rmsnorm on the inner path; pre-norm here is
+    # a plain rms over d_model without learned scale (scale lives in-block)
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + 1e-6).astype(h.dtype))
+
+
+def apply_lm(
+    p: Params,
+    cfg: LMConfig,
+    tokens: jax.Array,
+    *,
+    remat: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward pass.
+
+    tokens: (B, L) int32 token ids, or (B, L, D) float embeddings when
+    cfg.embed_inputs (audio/vlm stub frontends).
+    Returns (logits (B, L, V), aux dict).
+    """
+    if cfg.embed_inputs and tokens.ndim == 3:
+        h = tokens.astype(p["embed"].dtype)
+    else:
+        h = jnp.take(p["embed"], tokens, axis=0)
+        h = h * math.sqrt(cfg.d_model)  # stabilizes tied-embedding archs
+    L = h.shape[1]
+    positions = jnp.arange(L)
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = p.get("shared_block")
+    for run, (kind, count) in zip(p["runs"], cfg.pattern):
+        h, aux = _run_forward(run, kind, kind, cfg, h, positions, shared, remat, unroll)
+        aux_total = aux_total + aux
+    h = _apply_norm(cfg, p["final_norm"], h)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = _shard_logits(h @ head)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    aux = {"moe_aux": aux_total}
+    if cfg.mtp and not cfg.embed_inputs:
+        # DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, emb_{t+1})
+        emb_next = jnp.take(p["embed"], jnp.roll(tokens, -1, axis=1), axis=0)
+        m = jnp.concatenate([_apply_norm(cfg, p["mtp"]["norm"], h), emb_next], axis=-1)
+        m = nn.dense(p["mtp"]["proj"], m)
+        m = _apply_attn_block(p["mtp"]["block"], cfg, m, positions, jnp.asarray(-1, jnp.int32))
+        aux["mtp_logits"] = m @ head
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.float32) -> Params:
+    """Per-run decode state stacked over layers in each run."""
+    hd = cfg.resolved_head_dim
+    states: List[Params] = []
+    for kind, count in cfg.pattern:
+        if kind in ("attn", "local", "global", "gemma"):
+            if cfg.attention == "linear":
+                s = {
+                    "state": jnp.zeros((count, batch, cfg.num_heads, hd, hd), dtype),
+                }
+            else:
+                s = {
+                    "k": jnp.zeros((count, batch, cfg.num_kv_heads, max_len, hd), dtype),
+                    "v": jnp.zeros((count, batch, cfg.num_kv_heads, max_len, hd), dtype),
+                }
+        elif kind in ("mla_dense", "mla_moe"):
+            s = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape),
+                mla_mod.init_mla_cache(cfg, batch, max_len, dtype),
+            )
+        elif kind == "mlstm":
+            s = {"C": jnp.zeros((count, batch, cfg.num_heads, cfg.d_model // cfg.num_heads, cfg.d_model // cfg.num_heads), dtype)}
+        elif kind == "slstm":
+            s = {
+                "h": jnp.zeros((count, batch, cfg.d_model), dtype),
+                "c": jnp.zeros((count, batch, cfg.d_model), dtype),
+            }
+        elif kind in ("mamba2", "zamba_shared"):
+            s = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape),
+                ssm_mod.init_mamba2_state(cfg, batch, dtype),
+            )
+            if kind == "zamba_shared":
+                s = {
+                    "mamba": s,
+                    "shared_k": jnp.zeros((count, batch, cfg.num_kv_heads, max_len, hd), dtype),
+                    "shared_v": jnp.zeros((count, batch, cfg.num_kv_heads, max_len, hd), dtype),
+                }
+        else:
+            raise ValueError(kind)
+        states.append(s)
+    return {"runs": states}
+
+
+def _attn_decode(
+    p: Params, cfg: LMConfig, h_t: jax.Array, k_cache, v_cache, position, window
+) -> Tuple[jax.Array, Any, Any]:
+    """One-token dense-attention decode. h_t: (B, 1, D); caches (B,Hkv,L,Dh)."""
+    B = h_t.shape[0]
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    pos = jnp.asarray(position).reshape(1)
+    x = _apply_norm(cfg, p["norm1"], h_t)
+    q = _rope(cfg, _heads(nn.dense(p["wq"], x), cfg.num_heads), pos)
+    k = _rope(cfg, _heads(nn.dense(p["wk"], x), cfg.num_kv_heads), pos)
+    v = _heads(nn.dense(p["wv"], x), cfg.num_kv_heads)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, 0, position, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, 0, position, 0))
+    L = k_cache.shape[2]
+    j = jnp.arange(L)
+    valid = j <= position
+    if window is not None:
+        valid &= (position - j) < jnp.where(window < 0, L + 1, window)
+    kf = _gqa_expand(k_cache, n_rep)
+    vf = _gqa_expand(v_cache, n_rep)
+    att = _attend_softmax(q, kf, vf, valid[None, None, None, :])
+    att = att.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
+    h_t = h_t + nn.dense(p["wo"], att)
+    h_t = h_t + _mlp(cfg, p["mlp"], _apply_norm(cfg, p["norm2"], h_t))
+    return h_t, k_cache, v_cache
+
+
+def _linear_attn_decode(p, cfg, h_t, state, position):
+    """The paper's streaming softmax-free decode: O(1) state, no KV growth."""
+    B = h_t.shape[0]
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    pos = jnp.asarray(position).reshape(1)
+    x = _apply_norm(cfg, p["norm1"], h_t)
+    q = _rope(cfg, _heads(nn.dense(p["wq"], x), cfg.num_heads), pos)[:, :, 0, :]
+    k = _rope(cfg, _heads(nn.dense(p["wk"], x), cfg.num_kv_heads), pos)[:, :, 0, :]
+    v = _heads(nn.dense(p["wv"], x), cfg.num_kv_heads)[:, :, 0, :]
+    k = _gqa_expand(k[:, :, None, :], n_rep)[:, :, 0, :] if n_rep > 1 else k
+    v = _gqa_expand(v[:, :, None, :], n_rep)[:, :, 0, :] if n_rep > 1 else v
+    length = jnp.asarray(position + 1, jnp.float32)
+    state, y = softmax_free_attention_step(state, q, k, v, length_so_far=length)
+    y = y.reshape(B, 1, cfg.num_heads * hd)
+    h_t = h_t + nn.dense(p["wo"], y)
+    h_t = h_t + _mlp(cfg, p["mlp"], _apply_norm(cfg, p["norm2"], h_t))
+    return h_t, state
+
+
+def decode_step(
+    p: Params,
+    cfg: LMConfig,
+    state: Params,
+    token_t: jax.Array,
+    position: jax.Array,
+) -> Tuple[Params, jax.Array]:
+    """One decode step. token_t: (B,) int32 (or (B, D) embeddings).
+
+    Returns (new_state, logits (B, V)).
+    """
+    if cfg.embed_inputs and token_t.ndim == 2:
+        h = token_t[:, None, :].astype(p["embed"].dtype)
+    else:
+        h = jnp.take(p["embed"], token_t[:, None], axis=0) * math.sqrt(cfg.d_model)
+    shared = p.get("shared_block")
+    new_states = []
+    for run, st, (kind, _) in zip(p["runs"], state["runs"], cfg.pattern):
+        raw_kind = kind
+        if kind in ("local", "global", "gemma"):
+            kind = "attn"
+
+        if kind == "attn":
+            if cfg.attention == "linear":
+                def body(carry, xs):
+                    h = carry
+                    lp, s, w = xs["p"], xs["s"], xs["w"]
+                    h, ns = _linear_attn_decode(lp, cfg, h, s["state"], position)
+                    return h, {"state": ns}
+            else:
+                def body(carry, xs):
+                    h = carry
+                    lp, s, w = xs["p"], xs["s"], xs["w"]
+                    h, kc, vc = _attn_decode(lp, cfg, h, s["k"], s["v"], position, w)
+                    return h, {"k": kc, "v": vc}
+            count = jax.tree_util.tree_leaves(run["params"])[0].shape[0]
+            xs = {"p": run["params"], "s": st, "w": resolve_windows(cfg, raw_kind, count)}
+            h, new_st = jax.lax.scan(body, h, xs)
+        elif kind in ("mla_dense", "mla_moe"):
+            def body(carry, xs):
+                h = carry
+                lp, s = xs["p"], xs["s"]
+                x = _apply_norm(cfg, lp["norm1"], h)
+                y, ns = mla_mod.apply_mla_decode(lp["attn"], cfg, x, s, position)
+                h = h + y
+                x = _apply_norm(cfg, lp["norm2"], h)
+                if kind == "mla_moe":
+                    z, _ = moe_mod.apply_moe(lp["moe"], cfg, x)
+                else:
+                    z = (jax.nn.silu(nn.dense(lp["mlp"]["gate"], x)) * nn.dense(lp["mlp"]["up"], x)) @ lp["mlp"]["down"]["w"]
+                return h + z, ns
+            h, new_st = jax.lax.scan(body, h, {"p": run["params"], "s": st})
+        elif kind == "mlstm":
+            def body(carry, xs):
+                h, = (carry,)
+                h, C = ssm_mod.apply_mlstm_decode(xs["p"], cfg, h, xs["s"]["C"])
+                return h, {"C": C}
+            h, new_st = jax.lax.scan(body, h, {"p": run["params"], "s": st})
+        elif kind == "slstm":
+            def body(carry, xs):
+                h = carry
+                h, (hh, cc) = ssm_mod.apply_slstm_decode(xs["p"], cfg, h, (xs["s"]["h"], xs["s"]["c"]))
+                return h, {"h": hh, "c": cc}
+            h, new_st = jax.lax.scan(body, h, {"p": run["params"], "s": st})
+        elif kind in ("mamba2", "zamba_shared"):
+            if kind == "mamba2":
+                def body(carry, xs):
+                    h = carry
+                    y, ns = ssm_mod.apply_mamba2_decode(xs["p"], cfg, _apply_norm_like(cfg, h), xs["s"])
+                    return h + y, ns
+                h, new_st = jax.lax.scan(body, h, {"p": run["params"], "s": st})
+            else:
+                def body(carry, xs):
+                    h = carry
+                    y, ns = ssm_mod.apply_mamba2_decode(xs["p"], cfg, _apply_norm_like(cfg, h), xs["s"]["mamba"])
+                    h = h + y
+                    h, kc, vc = _attn_decode(
+                        shared, cfg, h, xs["s"]["shared_k"], xs["s"]["shared_v"], position,
+                        jnp.asarray(cfg.sliding_window if cfg.sliding_window else -1, jnp.int32),
+                    )
+                    return h, {"mamba": ns, "shared_k": kc, "shared_v": vc}
+                h, new_st = jax.lax.scan(body, h, {"p": run["params"], "s": st})
+        else:
+            raise ValueError(kind)
+        new_states.append(new_st)
+    h = _apply_norm(cfg, p["final_norm"], h)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = (h @ head)[:, 0, :]
+    return {"runs": new_states}, logits

@@ -1,0 +1,201 @@
+"""Minimal functional NN primitives shared by core/ and models/.
+
+Pure-functional (params-as-pytrees) style: ``init_*`` builds parameter dicts,
+apply functions are plain JAX. No Flax/Haiku dependency — params stay ordinary
+dicts so sharding rules, checkpointing and pruning can address them by path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _fan_in_init(key, shape, fan_in, dtype):
+    bound = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = True, dtype=jnp.float32) -> Params:
+    kw, kb = jax.random.split(key)
+    p = {"w": _fan_in_init(kw, (d_in, d_out), d_in, dtype)}
+    if bias:
+        p["b"] = _fan_in_init(kb, (d_out,), d_in, dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_conv1d(key, k: int, c_in: int, c_out: int, *, bias: bool = True, dtype=jnp.float32) -> Params:
+    kw, kb = jax.random.split(key)
+    p = {"w": _fan_in_init(kw, (k, c_in, c_out), k * c_in, dtype)}
+    if bias:
+        p["b"] = _fan_in_init(kb, (c_out,), k * c_in, dtype)
+    return p
+
+
+def conv1d(
+    p: Params,
+    x: jax.Array,
+    *,
+    stride: int = 1,
+    dilation: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """1-D conv. x: (B, L, C_in) -> (B, L', C_out). w: (k, C_in, C_out)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride,),
+        padding=padding,
+        rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def conv1d_causal(p: Params, x: jax.Array, *, dilation: int = 1) -> jax.Array:
+    """Left-padded causal 1-D conv (streaming-compatible)."""
+    k = p["w"].shape[0]
+    pad = (k - 1) * dilation
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (1,), [(pad, 0)], rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Activations / norms
+# ---------------------------------------------------------------------------
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def prelu(x, alpha):
+    """PReLU with learned slope `alpha` (the op the paper replaces, Fig. 5)."""
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+ACTIVATIONS = {"relu": relu, "silu": silu, "gelu": gelu}
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# GRU (the paper's positional module inside transformer blocks)
+# ---------------------------------------------------------------------------
+
+def init_gru(key, d_in: int, d_hidden: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wi": _fan_in_init(k1, (d_in, 3 * d_hidden), d_in, dtype),
+        "wh": _fan_in_init(k2, (d_hidden, 3 * d_hidden), d_hidden, dtype),
+        "bi": _fan_in_init(k3, (3 * d_hidden,), d_in, dtype),
+        "bh": _fan_in_init(k4, (3 * d_hidden,), d_hidden, dtype),
+    }
+
+
+def gru_step(p: Params, h: jax.Array, x_t: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Standard GRU cell (the paper's 5-step hardware schedule, Fig. 16).
+
+    h: (B, H), x_t: (B, D). Returns (h', h').
+    """
+    H = h.shape[-1]
+    gi = x_t @ p["wi"] + p["bi"]
+    gh = h @ p["wh"] + p["bh"]
+    ir, iz, in_ = gi[..., :H], gi[..., H : 2 * H], gi[..., 2 * H :]
+    hr, hz, hn = gh[..., :H], gh[..., H : 2 * H], gh[..., 2 * H :]
+    r = jax.nn.sigmoid(ir + hr)  # reset gate
+    z = jax.nn.sigmoid(iz + hz)  # update gate
+    n = jnp.tanh(in_ + r * hn)  # new gate
+    h_new = (1.0 - z) * n + z * h
+    return h_new, h_new
+
+
+def gru(p: Params, x: jax.Array, h0: Optional[jax.Array] = None, *, reverse: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Run a GRU over x: (B, L, D) -> (outputs (B, L, H), final h)."""
+    B = x.shape[0]
+    H = p["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, H), x.dtype)
+    xs = jnp.swapaxes(x, 0, 1)  # (L, B, D)
+    h_last, ys = jax.lax.scan(lambda h, xt: gru_step(p, h, xt), h0, xs, reverse=reverse)
+    return jnp.swapaxes(ys, 0, 1), h_last
+
+
+def bigru(p_fwd: Params, p_bwd: Params, x: jax.Array) -> jax.Array:
+    """Bi-directional GRU, concatenated features (TSTNN full-band module)."""
+    yf, _ = gru(p_fwd, x)
+    yb, _ = gru(p_bwd, x, reverse=True)
+    return jnp.concatenate([yf, yb], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (for the assigned LM architectures)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., L, D) with positions (..., L) or (L,)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., L, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return y.astype(x.dtype)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,1 @@
+"""Serving: batched LM decode engine + the paper's streaming SE service."""

@@ -1,0 +1,81 @@
+"""Batched LM serving: prefill + decode steps (the dry-run's serve_step).
+
+decode_32k / long_500k lower ``serve_step`` — one new token against a
+seq_len-deep cache/state. For softmax-attention archs the state is a KV (or
+MLA latent) cache; for linear-attention / SSM archs it is the constant-size
+recurrent state (the paper's streaming execution model), so long-context
+decode is O(1) in context length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm_common import LMConfig
+from repro.models.transformer_lm import apply_lm, decode_step, init_decode_state
+
+Pytree = Any
+
+
+def make_prefill_step(cfg: LMConfig, *, unroll: bool = False) -> Callable:
+    """prefill_step(params, tokens) -> logits — full-sequence forward."""
+
+    def prefill_step(params, tokens):
+        logits, _ = apply_lm(params, cfg, tokens, unroll=unroll)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: LMConfig) -> Callable:
+    """serve_step(params, state, token, position) -> (state, logits)."""
+
+    def serve_step(params, state, token, position):
+        return decode_step(params, cfg, state, token, position)
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array  # (B, steps)
+    logits_last: jax.Array
+
+
+def greedy_generate(
+    params: Pytree,
+    cfg: LMConfig,
+    prompt: jax.Array,
+    *,
+    steps: int,
+    max_len: Optional[int] = None,
+    dtype=jnp.float32,
+) -> GenerationResult:
+    """Reference generation loop (prefill via decode steps; small scale)."""
+    B, P = prompt.shape
+    max_len = max_len or (P + steps)
+    state = init_decode_state(cfg, B, max_len, dtype)
+    serve = make_serve_step(cfg)
+
+    def prefill_body(carry, t):
+        state, _ = carry
+        st, logits = serve(params, state, prompt[:, t], t)
+        return (st, logits), None
+
+    (state, logits), _ = jax.lax.scan(
+        prefill_body, (state, jnp.zeros((B, cfg.vocab_size))), jnp.arange(P)
+    )
+
+    def gen_body(carry, i):
+        state, logits = carry
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        state, logits = serve(params, state, tok, P + i)
+        return (state, logits), tok
+
+    (state, logits), toks = jax.lax.scan(gen_body, (state, logits), jnp.arange(steps))
+    return GenerationResult(tokens=jnp.swapaxes(toks, 0, 1), logits_last=logits)

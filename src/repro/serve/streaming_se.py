@@ -1,0 +1,92 @@
+"""The paper's streaming speech-enhancement service (Section III-E / IV-A).
+
+Consumes raw audio sample-by-sample (hop-sized chunks), maintains the STFT
+analysis window + the TFTNN recurrent state + the overlap-add synthesis tail,
+and emits enhanced audio with one hop (16 ms) of algorithmic latency — the
+software twin of the ASIC's real-time loop (512-sample window, 128 hop,
+8 kHz).
+
+The synthesis side uses weighted overlap-add with the same Hann window; the
+COLA normalizer for hop = n_fft/4 is constant once 4 windows overlap, so each
+emitted hop is final (no lookahead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.audio.stft import hann
+from repro.models import tftnn as tft_mod
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StreamState:
+    analysis: jax.Array  # (B, n_fft) rolling input window
+    synthesis: jax.Array  # (B, n_fft) overlap-add accumulator
+    wsum: jax.Array  # (n_fft,) window-square accumulator
+    model: Pytree  # TFTNN recurrent state
+
+
+def init_stream(params: Pytree, cfg: tft_mod.TFTConfig, batch: int) -> StreamState:
+    return StreamState(
+        analysis=jnp.zeros((batch, cfg.n_fft)),
+        synthesis=jnp.zeros((batch, cfg.n_fft)),
+        wsum=jnp.zeros((cfg.n_fft,)),
+        model=tft_mod.init_stream_state(params, cfg, batch),
+    )
+
+
+def stream_hop(
+    params: Pytree,
+    cfg: tft_mod.TFTConfig,
+    state: StreamState,
+    hop_samples: jax.Array,  # (B, hop) new audio
+) -> Tuple[StreamState, jax.Array]:
+    """Push one hop of audio; emit one hop of enhanced audio."""
+    n_fft, hop = cfg.n_fft, cfg.hop
+    w = hann(n_fft, hop_samples.dtype)
+    analysis = jnp.concatenate([state.analysis[:, hop:], hop_samples], axis=1)
+    frame = analysis * w
+    spec = jnp.fft.rfft(frame, axis=-1)  # (B, F)
+    frame_ri = jnp.stack([spec.real, spec.imag], axis=-1)  # (B, F, 2)
+
+    model_state, mask = tft_mod.stream_step(params, state.model, frame_ri, cfg)
+
+    a, b = frame_ri[..., 0], frame_ri[..., 1]
+    m = 2.0 * jnp.tanh(mask)
+    mc, md = m[..., 0], m[..., 1]
+    est = (a * mc - b * md) + 1j * (a * md + b * mc)
+    y = jnp.fft.irfft(est, n=n_fft, axis=-1) * w
+
+    synthesis = state.synthesis + y
+    wsum = state.wsum + w * w
+    out = synthesis[:, :hop] / jnp.maximum(wsum[:hop], 1e-8)
+    new_state = StreamState(
+        analysis=analysis,
+        synthesis=jnp.concatenate([synthesis[:, hop:], jnp.zeros_like(synthesis[:, :hop])], axis=1),
+        wsum=jnp.concatenate([wsum[hop:], jnp.zeros((hop,), wsum.dtype)]),
+        model=model_state,
+    )
+    return new_state, out
+
+
+def enhance_streaming(params: Pytree, cfg: tft_mod.TFTConfig, wave: jax.Array) -> jax.Array:
+    """Run the full streaming loop over (B, S) audio via scan; returns (B, S)."""
+    B, S = wave.shape
+    hop = cfg.hop
+    n = S // hop
+    hops = wave[:, : n * hop].reshape(B, n, hop).transpose(1, 0, 2)  # (n, B, hop)
+    st = init_stream(params, cfg, B)
+
+    def body(s, x):
+        return stream_hop(params, cfg, s, x)
+
+    _, outs = jax.lax.scan(body, st, hops)
+    return outs.transpose(1, 0, 2).reshape(B, n * hop)

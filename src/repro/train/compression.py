@@ -1,0 +1,93 @@
+"""Gradient compression for slow (inter-pod) links.
+
+Int8 per-chunk-scaled quantization with error feedback (1-bit-Adam-family
+residual accumulation): the quantization error of step t is added back to the
+gradient at step t+1, which keeps SGD/Adam convergence unaffected while
+cutting the `pod`-axis all-reduce payload 4x vs f32 (2x vs bf16).
+
+Used by the train loop as a wrapper around the cross-pod gradient reduction:
+    g_local -> quantize (int8 + f32 scale/chunk) -> psum over 'pod' -> dequant
+The within-pod reduction stays full precision (fast ICI links).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+CHUNK = 1024
+
+
+def _quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-chunk symmetric int8: returns (q int8 (n_chunks, CHUNK), scale (n_chunks,))."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % CHUNK
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(chunks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda g: _quantize_leaf(g), grads)
+
+
+def quantize_dequantize(g: jax.Array) -> jax.Array:
+    """Straight quantize-dequantize (the lossy channel without the transport)."""
+    q, s = _quantize_leaf(g)
+    return _dequantize_leaf(q, s, g.shape, g.dtype)
+
+
+def compressed_psum(grads: Pytree, axis_name: str) -> Pytree:
+    """Mean-reduce over `axis_name` with int8 payload.
+
+    Two-phase: (1) psum-max the per-chunk scales (tiny f32 payload:
+    1/CHUNK of the gradient) so every shard quantizes on a SHARED grid;
+    (2) int8 payload summed in int32 — exact given the shared grid. Total
+    bytes ~ (1 + 4/CHUNK)/4 of an f32 all-reduce. Call inside shard_map
+    with the cross-pod axis bound.
+    """
+
+    def reduce_leaf(g):
+        flat = g.astype(jnp.float32).reshape(-1)
+        n_el = flat.shape[0]
+        pad = (-n_el) % CHUNK
+        chunks = jnp.pad(flat, (0, pad)).reshape(-1, CHUNK)
+        local_scale = jnp.max(jnp.abs(chunks), axis=1) / 127.0 + 1e-12
+        scale = jax.lax.pmax(local_scale, axis_name)  # shared grid
+        q = jnp.clip(jnp.round(chunks / scale[:, None]), -127, 127).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return _dequantize_leaf(qsum.astype(jnp.float32) / n, scale, g.shape, g.dtype)
+
+    return jax.tree_util.tree_map(reduce_leaf, grads)
+
+
+def with_error_feedback(grads: Pytree, residual: Pytree) -> Tuple[Pytree, Pytree]:
+    """Apply error feedback: g' = quantize(g + r); r' = (g + r) - g'."""
+    def leaf(g, r):
+        total = g.astype(jnp.float32) + r
+        qd = quantize_dequantize(total)
+        return qd.astype(g.dtype), total - qd.astype(jnp.float32)
+
+    flat = jax.tree_util.tree_map(leaf, grads, residual)
+    new_g = jax.tree_util.tree_map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree_util.tree_map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r
+
+
+def init_residual(grads_like: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

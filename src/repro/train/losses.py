@@ -1,0 +1,64 @@
+"""Losses: next-token cross-entropy (LM archs) + the paper's cross-domain SE loss."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import cross_domain_loss  # re-export for SE training
+
+__all__ = ["cross_domain_loss", "lm_loss", "lm_loss_from_logits"]
+
+
+def lm_loss_from_logits(
+    logits: jax.Array, targets: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Mean next-token cross entropy. logits: (B, L, V); targets: (B, L).
+
+    Vocabulary-sharding-friendly (Megatron-style TP cross entropy): the gold
+    logit is extracted with a one-hot contraction (fuses into a sharded dot +
+    psum) and logsumexp reduces the sharded axis — the full logits tensor is
+    never gathered onto one shard.
+    """
+    from repro.distributed.sharding import hint_last_dim_model
+
+    lg = hint_last_dim_model(logits.astype(jnp.float32))
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    shifted = lg - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = hint_last_dim_model(jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32))
+    gold = jnp.einsum("blv,blv->bl", lg, onehot)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(
+    apply_fn, params, cfg, tokens: jax.Array, *, targets: jax.Array | None = None,
+    mtp_weight: float = 0.3, remat: bool = False, unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token LM loss (+ MoE aux + optional DeepSeek MTP term).
+
+    tokens: (B, L) ids — predicts tokens[:, 1:]; for embed-input archs pass
+    float embeddings and integer `targets`.
+    """
+    logits, aux = apply_fn(params, cfg, tokens, remat=remat, unroll=unroll)
+    if targets is None:
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1]
+    else:
+        tgt = targets[:, 1:]
+        lg = logits[:, :-1]
+    loss = lm_loss_from_logits(lg, tgt)
+    metrics = {"xent": loss, "moe_aux": aux.get("moe_aux", jnp.zeros(()))}
+    total = loss + 0.01 * metrics["moe_aux"]
+    if "mtp_logits" in aux:
+        t2 = (targets if targets is not None else tokens)[:, 2:]
+        mtp = lm_loss_from_logits(aux["mtp_logits"][:, :-2], t2)
+        metrics["mtp"] = mtp
+        total = total + mtp_weight * mtp
+    metrics["loss"] = total
+    return total, metrics

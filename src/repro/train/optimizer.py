@@ -1,0 +1,128 @@
+"""Optimizers and schedules (pure-pytree, no optax dependency).
+
+Adam / AdamW with global-norm clipping; warmup-cosine and the paper's
+ReduceLROnPlateau (factor 0.5) schedules. Optimizer state is an ordinary
+pytree, so it shards/checkpoints with the same machinery as params (FSDP:
+moments sharded like their parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3  # the paper's initial LR
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # AdamW when > 0
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adam_init(params: Pytree, cfg: AdamConfig) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adam_update(
+    grads: Pytree,
+    state: AdamState,
+    params: Pytree,
+    cfg: AdamConfig,
+    lr: Optional[jax.Array] = None,
+) -> Tuple[Pytree, AdamState]:
+    """Returns (new_params, new_state)."""
+    if cfg.clip_norm > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cfg.lr if lr is None else lr
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(cfg.moment_dtype)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            delta = delta + lr * cfg.weight_decay * p.astype(cfg.moment_dtype)
+        return (p.astype(cfg.moment_dtype) - delta).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(step: jax.Array, *, peak: float, warmup: int, total: int, floor: float = 0.0):
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+@dataclasses.dataclass
+class ReduceLROnPlateau:
+    """The paper's schedule: halve LR when the monitored loss plateaus."""
+
+    lr: float = 1e-3
+    factor: float = 0.5
+    patience: int = 5
+    min_lr: float = 1e-6
+    best: float = float("inf")
+    bad_epochs: int = 0
+
+    def update(self, metric: float) -> float:
+        if metric < self.best - 1e-6:
+            self.best = metric
+            self.bad_epochs = 0
+        else:
+            self.bad_epochs += 1
+            if self.bad_epochs > self.patience:
+                self.lr = max(self.lr * self.factor, self.min_lr)
+                self.bad_epochs = 0
+        return self.lr

@@ -1,0 +1,195 @@
+"""Core technique tests: BN folding, softmax-free attention algebra,
+quantization grids, pruning ladder, cross-domain loss."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import quant
+from repro.core.bn import (
+    BatchNorm,
+    bn_cycle_model,
+    fold_bn_into_conv1d,
+    fold_bn_into_linear,
+    ln_cycle_model,
+)
+from repro.core.pruning import apply_ladder, prune_conv1d, prune_linear
+from repro.core.softmax_free_attention import (
+    attention_mac_counts,
+    softmax_free_attention,
+    softmax_free_attention_causal,
+    softmax_free_attention_quadratic,
+    softmax_free_attention_step,
+)
+
+
+# --- BN --------------------------------------------------------------------
+
+def test_bn_train_updates_running_stats(rng):
+    bn = BatchNorm(8)
+    p = bn.init()
+    x = jax.random.normal(rng, (32, 8)) * 3 + 1
+    _, p2 = bn.apply(p, x, train=True)
+    assert not np.allclose(np.asarray(p2["mean"]), 0)
+    assert not np.allclose(np.asarray(p2["var"]), 1)
+
+
+def test_bn_fold_into_linear_post(rng):
+    """BN(x @ w + b) == x @ w' + b' exactly (the paper's free normalization)."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    w = jax.random.normal(k1, (16, 8))
+    b = jax.random.normal(k2, (8,))
+    bn = BatchNorm(8)
+    p = bn.init()
+    p["mean"] = jax.random.normal(k3, (8,))
+    p["var"] = jax.random.uniform(k3, (8,), minval=0.5, maxval=2.0)
+    p["scale"] = jax.random.normal(k1, (8,)) * 0.5 + 1
+    p["bias"] = jax.random.normal(k2, (8,)) * 0.2
+    x = jax.random.normal(rng, (4, 16))
+    ref = bn(p, x @ w + b)
+    w2, b2 = fold_bn_into_linear(w, b, p)
+    np.testing.assert_allclose(np.asarray(x @ w2 + b2), np.asarray(ref), atol=1e-5)
+
+
+def test_bn_fold_into_linear_pre(rng):
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (16, 8))
+    bn = BatchNorm(16)
+    p = bn.init()
+    p["mean"] = jax.random.normal(k2, (16,))
+    p["var"] = jax.random.uniform(k2, (16,), minval=0.5, maxval=2.0)
+    x = jax.random.normal(rng, (4, 16))
+    ref = bn(p, x) @ w
+    w2, b2 = fold_bn_into_linear(w, None, p, pre=True)
+    np.testing.assert_allclose(np.asarray(x @ w2 + b2), np.asarray(ref), atol=1e-5)
+
+
+def test_bn_fold_into_conv(rng):
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (5, 4, 6)) * 0.3
+    b = jax.random.normal(k2, (6,)) * 0.1
+    bn = BatchNorm(6)
+    p = bn.init()
+    p["mean"] = jax.random.normal(k2, (6,))
+    p["var"] = jax.random.uniform(k1, (6,), minval=0.5, maxval=2.0)
+    x = jax.random.normal(rng, (2, 32, 4))
+    ref = bn(p, nn.conv1d({"w": w, "b": b}, x))
+    w2, b2 = fold_bn_into_conv1d(w, b, p)
+    out = nn.conv1d({"w": w2, "b": b2}, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_ln_bn_cycle_model_two_thirds_saving():
+    """Fig. 9: replacing LN with BN saves 2/3 of normalization cycles."""
+    ln, bn = ln_cycle_model(128), bn_cycle_model(128)
+    assert ln == 3 * bn
+
+
+# --- softmax-free attention --------------------------------------------------
+
+def test_attention_order_equivalence(rng):
+    """(Q K^T) V == Q (K^T V) — the associativity the paper exploits."""
+    q, k, v = (jax.random.normal(kk, (2, 4, 128, 8)) for kk in jax.random.split(rng, 3))
+    a = softmax_free_attention(q, k, v)
+    b = softmax_free_attention_quadratic(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_attention_mac_ratio_is_16x():
+    """Eq. 1: ratio = h/w = 128/8 = 16 for the paper's dims."""
+    orig, new = attention_mac_counts(128, 8)
+    assert orig / new == pytest.approx(16.0)
+
+
+def test_causal_chunked_equals_quadratic(rng):
+    q, k, v = (jax.random.normal(kk, (1, 2, 256, 16)) for kk in jax.random.split(rng, 3))
+    a = softmax_free_attention_causal(q, k, v, chunk=64)
+    b = softmax_free_attention_quadratic(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_streaming_step_equals_causal(rng):
+    """Token-by-token decode with constant state == full causal attention."""
+    B, H, L, D = 1, 2, 32, 8
+    q, k, v = (jax.random.normal(kk, (B, H, L, D)) for kk in jax.random.split(rng, 3))
+    full = softmax_free_attention_quadratic(q, k, v, causal=True)
+    state = jnp.zeros((B, H, D, D))
+    outs = []
+    for t in range(L):
+        state, y = softmax_free_attention_step(
+            state, q[:, :, t], k[:, :, t], v[:, :, t],
+            length_so_far=jnp.asarray(L, jnp.float32),
+        )
+        outs.append(y)
+    stream = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(full), atol=1e-4)
+
+
+# --- quantization -------------------------------------------------------------
+
+def test_fp10_grid_values():
+    x = jnp.asarray([1.0, 1.04, 1.0625, 0.0, -2.0, 65504.0])
+    q = quant.quantize(x, quant.FP10)
+    # 1.0 exact; 1.04 rounds up to 1.0625 (mantissa step 1/16); 1.0625 exact
+    np.testing.assert_allclose(np.asarray(q)[:3], [1.0, 1.0625, 1.0625])
+    assert float(q[3]) == 0.0 and float(q[4]) == -2.0
+    # saturation at max normal = (2 - 2^-4) * 2^15 = 63488
+    assert float(q[5]) == pytest.approx(63488.0)
+
+
+def test_quant_ladder_monotone_error(rng):
+    """Table VI ordering: more bits => less error; FxP much worse than FP."""
+    x = jax.random.normal(rng, (4096,)) * jnp.exp(jax.random.normal(rng, (4096,)) * 3)
+    errs = {s: float(quant.quant_error(x, s)) for s in
+            [quant.FP16, quant.FP10, quant.FP9, quant.FP8, quant.FXP10]}
+    assert errs[quant.FP16] < errs[quant.FP10] < errs[quant.FP8]
+    assert errs[quant.FXP10] > errs[quant.FP10]  # dynamic range loss
+
+
+def test_ste_gradient_is_identity(rng):
+    x = jax.random.normal(rng, (64,))
+    g = jax.grad(lambda t: jnp.sum(quant.quantize_ste(t, 5, 4) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * quant.quantize_ste(x, 5, 4)), atol=1e-5)
+
+
+# --- structured pruning --------------------------------------------------------
+
+def test_prune_linear_keeps_top_channels(rng):
+    w = jnp.ones((8, 16)) * jnp.arange(16)[None, :]
+    w2, b2, idx = prune_linear(w, jnp.arange(16.0), 0.5)
+    assert w2.shape == (8, 8)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(8, 16))
+
+
+def test_prune_conv_consumer_consistency(rng):
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (5, 4, 12))
+    w2, _, idx = prune_conv1d(w, None, 0.5)
+    consumer = jax.random.normal(k2, (5, 12, 6))
+    from repro.core.pruning import prune_consumer
+
+    c2 = prune_consumer(consumer, idx, in_axis=1)
+    assert w2.shape[-1] == c2.shape[1] == 6
+
+
+def test_table7_ladder_monotone():
+    """Each prune rung must strictly shrink the model (Table VII)."""
+    from repro.models.tftnn import gmacs_per_second, init_tft, param_count, tstnn_config
+
+    key = jax.random.PRNGKey(0)
+    cfg = tstnn_config()
+    sizes, macs = [], []
+    for steps in [[], ["R"], ["R", "S"], ["R", "S", "half_ch"],
+                  ["R", "S", "half_ch", "half_blocks", "K", "G", "P"]]:
+        c = apply_ladder(cfg, steps)
+        sizes.append(param_count(init_tft(key, c)))
+        macs.append(gmacs_per_second(c))
+    assert sizes == sorted(sizes, reverse=True)
+    assert macs == sorted(macs, reverse=True)
+    # headline claims: ~94% size reduction, ~94% MAC reduction
+    assert 1 - sizes[-1] / sizes[0] > 0.90
+    assert 1 - macs[-1] / macs[0] > 0.90

@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline: synthetic noisy speech -> STFT -> TFTNN mask ->
+cross-domain loss training -> offline & streaming enhancement -> FP10 PTQ.
+Plus the LM serving engine and a subprocess dry-run on a small mesh.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.audio.metrics import all_metrics, snr_db
+from repro.audio.synthetic import batch_for_step
+from repro.core import quant
+from repro.core.quant import quantize_tree
+from repro.models import tftnn as tft
+from repro.serve.streaming_se import enhance_streaming
+from repro.train.train_loop import (
+    TrainSettings,
+    make_se_eval_step,
+    make_se_train_step,
+    make_train_state,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return dataclasses.replace(
+        tft.tftnn_config(), freq_bins=64, channels=8, att_dim=8, num_heads=1,
+        gru_hidden=8, dilation_rates=(1, 2),
+    )
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_cfg):
+    state = make_train_state(tft.init_tft(jax.random.PRNGKey(0), tiny_cfg), TrainSettings())
+    step = jax.jit(make_se_train_step(tiny_cfg))
+    losses = []
+    for i in range(25):
+        noisy, clean = batch_for_step(0, i, batch=2, num_samples=4096)
+        state, m = step(state, noisy, clean)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_training_reduces_loss(trained):
+    _, losses = trained
+    assert losses[-1] < losses[0] * 0.9
+    assert all(np.isfinite(losses))
+
+
+def test_enhancement_improves_over_training(tiny_cfg, trained):
+    """Trained model must beat the untrained model on unseen data."""
+    state, _ = trained
+    ev = make_se_eval_step(tiny_cfg)
+    noisy, clean = batch_for_step(7, 0, batch=4, num_samples=4096)
+    est = ev(state["params"], noisy)
+    est0 = ev(tft.init_tft(jax.random.PRNGKey(3), tiny_cfg), noisy)
+    assert float(jnp.mean(snr_db(est, clean))) > float(jnp.mean(snr_db(est0, clean)))
+
+
+def test_streaming_service_end_to_end(tiny_cfg, trained):
+    """The hop-by-hop service runs and emits finite audio of the right shape."""
+    state, _ = trained
+    noisy, _ = batch_for_step(9, 0, batch=2, num_samples=2048)
+    out = enhance_streaming(state["params"], tiny_cfg, noisy)
+    assert out.shape == (2, 2048)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_fp10_ptq_preserves_quality_fxp10_degrades(tiny_cfg, trained):
+    """Table VI system-level check on a trained model."""
+    state, _ = trained
+    ev = make_se_eval_step(tiny_cfg)
+    noisy, clean = batch_for_step(11, 0, batch=4, num_samples=4096)
+    ref = float(jnp.mean(snr_db(ev(state["params"], noisy), clean)))
+    fp10 = float(jnp.mean(snr_db(ev(quantize_tree(state["params"], quant.FP10), noisy), clean)))
+    fxp8 = float(jnp.mean(snr_db(ev(quantize_tree(state["params"], quant.FXP8), noisy), clean)))
+    assert abs(ref - fp10) < 1.0  # near-lossless
+    assert fxp8 < fp10  # fixed point degrades (paper Table VI ordering)
+
+
+def test_lm_greedy_generation():
+    import repro.configs as C
+    from repro.models.transformer_lm import init_lm
+    from repro.serve.engine import greedy_generate
+
+    cfg = C.reduced_config("gemma3-1b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    out = greedy_generate(params, cfg, jnp.ones((2, 4), jnp.int32), steps=8)
+    assert out.tokens.shape == (2, 8)
+    assert int(out.tokens.max()) < cfg.vocab_size
+
+
+def test_dryrun_cell_subprocess():
+    """One real dry-run cell (reduced device count) lowers + compiles."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+        import functools, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import repro.configs as C
+        from repro.distributed import sharding as shd
+        from repro.models.transformer_lm import init_lm
+        from repro.serve.engine import make_prefill_step
+
+        cfg = C.reduced_config("qwen1.5-110b")
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+        params_sds = jax.eval_shape(functools.partial(init_lm, jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+        p_sh = shd.params_shardings(params_sds, mesh)
+        tok = jax.ShapeDtypeStruct((8, 64), jnp.int32)
+        with mesh:
+            c = jax.jit(make_prefill_step(cfg),
+                        in_shardings=(p_sh, NamedSharding(mesh, P("data", None)))).lower(params_sds, tok).compile()
+        assert c.memory_analysis().temp_size_in_bytes >= 0
+        print("dryrun-cell-ok")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                         env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "dryrun-cell-ok" in out.stdout
