@@ -1,0 +1,109 @@
+"""Multi-session server throughput: sessions x RTF curve.
+
+Sweeps the number of concurrent streams served by ONE fixed-capacity
+``SessionPool`` (one compiled batched hop step, no recompilation across sweep
+points — the server's core scaling property) and reports, per point:
+
+- aggregate RTF: total compute seconds per total audio seconds (< 1 means the
+  whole batch is served in real time),
+- per-session RTF (mean),
+- pool step latency p50/p95 in ms against the 16 ms hop budget.
+
+CSV on stdout via benchmarks.common.emit. Designed to finish well inside
+2 minutes on a laptop CPU (reduced trunk, ~1 s of audio per session).
+
+Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--quant] [--seconds S]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from common import emit  # noqa: E402
+
+from repro.audio.synthetic import batch_for_step  # noqa: E402
+from repro.core.quant import FP10  # noqa: E402
+from repro.models import tftnn as tft  # noqa: E402
+from repro.serve import SessionPool  # noqa: E402
+
+
+def bench_cfg() -> tft.TFTConfig:
+    """Paper front end (512/128 @ 8 kHz), reduced trunk for CPU wall-clock."""
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        freq_bins=64,
+        channels=16,
+        att_dim=8,
+        num_heads=1,
+        gru_hidden=16,
+        dilation_rates=(1, 2, 4),
+    )
+
+
+def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
+    sessions = [pool.attach() for _ in range(n_sessions)]
+    pool.step_seconds.clear()
+    for i, s in enumerate(sessions):
+        pool.feed(s, audio[i % audio.shape[0]])
+    pool.pump()
+    hop, sr = pool.cfg.hop, pool.sample_rate
+    proc = float(sum(pool.step_seconds))
+    audio_sec = sum(s.stats.hops for s in sessions) * hop / sr
+    rtfs = [s.stats.rtf(sr, hop) for s in sessions]
+    pct = pool.latency_percentiles()
+    for s in sessions:
+        pool.detach(s)
+    return {
+        "aggregate_rtf": proc / audio_sec,
+        "mean_session_rtf": float(np.mean(rtfs)),
+        "p50_ms": pct[50],
+        "p95_ms": pct[95],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--capacity", type=int, default=16)
+    ap.add_argument("--seconds", type=float, default=1.0, help="audio per session")
+    ap.add_argument("--quant", action="store_true", help="serve on the FP10 grid")
+    args = ap.parse_args()
+
+    cfg = bench_cfg()
+    params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    pool = SessionPool(params, cfg, capacity=args.capacity, quant=FP10 if args.quant else None)
+
+    samples = int(args.seconds * pool.sample_rate) // cfg.hop * cfg.hop
+    noisy, _ = batch_for_step(1, 0, batch=4, num_samples=samples)
+    audio = np.asarray(noisy, np.float32)
+
+    # warm up the single compilation the whole sweep reuses
+    w = pool.attach()
+    pool.feed(w, audio[0][: 4 * cfg.hop])
+    pool.pump()
+    pool.detach(w)
+
+    budget_ms = cfg.hop / pool.sample_rate * 1e3
+    print(f"# capacity={args.capacity} audio/session={args.seconds}s "
+          f"hop_budget={budget_ms:.1f}ms quant={'fp10' if args.quant else 'fp32'}")
+    print("name,us_per_call,derived")
+    sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
+    for n in sweep:
+        r = run_point(pool, n, audio)
+        emit(
+            f"sessions={n}",
+            r["p50_ms"] * 1e3,
+            f"aggregate_rtf={r['aggregate_rtf']:.3f} "
+            f"mean_session_rtf={r['mean_session_rtf']:.3f} "
+            f"p95_ms={r['p95_ms']:.2f} real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
+        )
+
+
+if __name__ == "__main__":
+    main()

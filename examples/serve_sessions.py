@@ -1,0 +1,69 @@
+"""Multi-session streaming enhancement server demo.
+
+Three clients with different habits share one fixed-capacity SessionPool:
+
+- client A streams steadily, one 16 ms hop at a time (a live call),
+- client B dumps ragged 100-sample chunks (a jittery network),
+- client C connects mid-way, runs briefly, and hangs up (churn).
+
+One jit-compiled batched hop step serves all of them; attach/detach never
+recompiles. At the end we verify client A's audio is bit-identical to a solo
+run — neighbours can't perturb a stream — and print the pool's accounting.
+
+Run:  PYTHONPATH=src python examples/serve_sessions.py
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.audio.synthetic import batch_for_step
+from repro.models import tftnn as tft
+from repro.serve import SessionPool
+
+cfg = dataclasses.replace(
+    tft.tftnn_config(), freq_bins=64, channels=16, att_dim=8, num_heads=1,
+    gru_hidden=16, dilation_rates=(1, 2, 4),
+)
+params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+hop = cfg.hop
+
+noisy, _ = batch_for_step(1, 0, batch=3, num_samples=8000)
+audio = np.asarray(noisy, np.float32)
+
+pool = SessionPool(params, cfg, capacity=4)
+a, b = pool.attach(), pool.attach()
+print(f"attached clients A(slot {a.slot}) and B(slot {b.slot})")
+
+out_a = []
+c = None
+fed_b = 0
+n_hops = audio.shape[1] // hop
+for i in range(n_hops):
+    pool.feed(a, audio[0, i * hop : (i + 1) * hop])  # steady hops
+    while fed_b < (i + 1) * hop:  # ragged 100-sample chunks for B, no gaps
+        pool.feed(b, audio[1, fed_b : fed_b + 100])
+        fed_b += min(100, audio.shape[1] - fed_b)
+    if i == n_hops // 3:
+        c = pool.attach()
+        print(f"client C attached mid-stream (slot {c.slot})")
+    if c is not None and not c.detached:
+        pool.feed(c, audio[2, i * hop : (i + 1) * hop])
+        if i == 2 * n_hops // 3:
+            tail = pool.detach(c)
+            print(f"client C hung up with {tail.size} enhanced samples")
+    pool.pump()
+    out_a.append(pool.read(a))
+
+got_a = np.concatenate(out_a)
+
+# a solo run of the same pool produces bit-identical audio for client A
+solo = SessionPool(params, cfg, capacity=4)
+s = solo.attach()
+solo.feed(s, audio[0, : n_hops * hop])
+solo.pump()
+ref_a = solo.detach(s)
+assert np.array_equal(got_a, ref_a), "churn perturbed client A!"
+print(f"client A: {got_a.size} samples, bit-identical to a solo run ✓")
+print(pool.report())

@@ -1,0 +1,1 @@
+"""Fallbacks for optional third-party dependencies (kept import-light)."""

@@ -1,0 +1,240 @@
+"""A deterministic stand-in for `hypothesis` when it is not installed.
+
+The test suite is property-based (`@given` over drawn hop counts, shapes,
+seeds). Real hypothesis is a dev dependency (``pip install -e .[dev]``, used
+in CI), but the bare container this repo targets ships without it, and the
+tier-1 suite must still collect and run there. ``install()`` registers this
+module under ``sys.modules['hypothesis']`` so the tests' imports resolve.
+
+Semantics: each ``@given`` test runs ``max_examples`` times with examples
+drawn from a PRNG seeded by the test's qualified name — deterministic across
+runs, no shrinking, no failure database. That is strictly weaker than real
+hypothesis (use the real thing for exploration); it is a floor, not a
+replacement.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the example is skipped."""
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any], label: str = "strategy"):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda r: f(self._draw(r)), f"{self.label}.map")
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(r: random.Random):
+            for _ in range(1000):
+                v = self._draw(r)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+
+        return SearchStrategy(draw, f"{self.label}.filter")
+
+    def __repr__(self) -> str:
+        return f"<{self.label}>"
+
+
+def integers(min_value: int | None = None, max_value: int | None = None) -> SearchStrategy:
+    lo = -(2**31) if min_value is None else min_value
+    hi = 2**31 - 1 if max_value is None else max_value
+
+    def draw(r: random.Random) -> int:
+        # Bias toward the boundaries, where streaming/COLA edge cases live.
+        roll = r.random()
+        if roll < 0.15:
+            return lo
+        if roll < 0.3:
+            return hi
+        return r.randint(lo, hi)
+
+    return SearchStrategy(draw, f"integers({lo}, {hi})")
+
+
+def floats(
+    min_value: float | None = None,
+    max_value: float | None = None,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    width: int = 64,
+) -> SearchStrategy:
+    lo = -1e6 if min_value is None else float(min_value)
+    hi = 1e6 if max_value is None else float(max_value)
+
+    def draw(r: random.Random) -> float:
+        roll = r.random()
+        if roll < 0.1:
+            return lo
+        if roll < 0.2:
+            return hi
+        return r.uniform(lo, hi)
+
+    return SearchStrategy(draw, f"floats({lo}, {hi})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: r.random() < 0.5, "booleans()")
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda r: value, f"just({value!r})")
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda r: r.choice(elements), f"sampled_from({len(elements)})")
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.choice(strategies).draw(r), "one_of")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: tuple(s.draw(r) for s in strategies), "tuples")
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int | None = None) -> SearchStrategy:
+    hi = (min_size + 8) if max_size is None else max_size
+
+    def draw(r: random.Random):
+        return [elements.draw(r) for _ in range(r.randint(min_size, hi))]
+
+    return SearchStrategy(draw, "lists")
+
+
+class settings:
+    """Decorator/config object; only max_examples is honoured here."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline: Any = None, **_: Any):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, f: Callable) -> Callable:
+        f._fallback_settings = self  # read by @given at call time
+        return f
+
+
+class HealthCheck:
+    """API-compat shell; the fallback performs no health checks."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    all = classmethod(lambda cls: [])
+
+
+def given(*given_args: SearchStrategy, **given_kwargs: SearchStrategy) -> Callable:
+    if not given_args and not given_kwargs:
+        raise TypeError("given() requires at least one strategy")
+
+    def decorate(f: Callable) -> Callable:
+        sig = inspect.signature(f)
+        params = list(sig.parameters.values())
+        # Strategies fill the TRAILING positional params (hypothesis rule);
+        # kwargs strategies fill their named params. What remains is the
+        # pytest-visible signature (fixtures like `rng`).
+        n_pos = len(given_args)
+        filled = {p.name for p in params[len(params) - n_pos :]} if n_pos else set()
+        filled |= set(given_kwargs)
+        visible = [p for p in params if p.name not in filled]
+
+        @functools.wraps(f)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            cfg = getattr(wrapper, "_fallback_settings", None) or getattr(
+                f, "_fallback_settings", None
+            )
+            max_examples = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            seed = zlib.crc32(f.__qualname__.encode())
+            rnd = random.Random(seed)
+            ran = 0
+            for attempt in itertools.count():
+                if ran >= max_examples or attempt >= max_examples * 20:
+                    break
+                try:
+                    # draw errors other than _Unsatisfied propagate raw: they
+                    # are strategy bugs, not falsifying examples
+                    drawn = [s.draw(rnd) for s in given_args]
+                    drawn_kw = {k: s.draw(rnd) for k, s in given_kwargs.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    f(*args, *drawn, **kwargs, **drawn_kw)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback-hypothesis, attempt {attempt}): "
+                        f"args={drawn!r} kwargs={drawn_kw!r}"
+                    ) from e
+                ran += 1
+            if ran == 0:
+                raise _Unsatisfied(f"could not satisfy assumptions in {f.__qualname__}")
+
+        wrapper.__signature__ = sig.replace(parameters=visible)
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `hypothesis.strategies`)."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__version__ = "0.0.0-fallback"
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers",
+        "floats",
+        "booleans",
+        "just",
+        "none",
+        "sampled_from",
+        "one_of",
+        "tuples",
+        "lists",
+    ):
+        setattr(st_mod, name, globals()[name])
+    st_mod.SearchStrategy = SearchStrategy
+
+    hyp.strategies = st_mod
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -9,6 +9,7 @@ kernel is hillclimbed against — see EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.linear_attention import ref
 from repro.kernels.linear_attention.kernel import (
@@ -21,6 +22,24 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pad_length(q: jax.Array, k: jax.Array, v: jax.Array, block_l: int):
+    """Zero-pad the length axis up to a block_l multiple.
+
+    Zero K/V rows contribute nothing to the K^T V state (and, causally,
+    padded positions sit after every real query), so the only correction
+    needed is the 1/L normalizer: the kernel divides by the padded length,
+    which the caller undoes with the returned scale factor.
+    """
+    L = q.shape[-2]
+    block_l = min(block_l, L)
+    pad = (-L) % block_l
+    if pad == 0:
+        return q, k, v, block_l, 1.0
+    widths = [(0, 0)] * (q.ndim - 2) + [(0, pad), (0, 0)]
+    q, k, v = (jnp.pad(x, widths) for x in (q, k, v))
+    return q, k, v, block_l, (L + pad) / L
+
+
 def linear_attention(
     q: jax.Array,
     k: jax.Array,
@@ -29,10 +48,19 @@ def linear_attention(
     block_l: int = 256,
     use_pallas: bool = True,
 ) -> jax.Array:
-    """Softmax-free attention, optimal order Q @ (K^T V) / L. (B,H,L,D)."""
+    """Softmax-free attention, optimal order Q @ (K^T V) / L. (B,H,L,D).
+
+    Lengths that are not a multiple of ``block_l`` are zero-padded and
+    renormalized, so any (B, H, L, D) shape is accepted.
+    """
     if not use_pallas:
         return ref.linear_attention_ref(q, k, v)
-    return linear_attention_pallas(q, k, v, block_l=block_l, interpret=_interpret_default())
+    L = q.shape[-2]
+    qp, kp, vp, block_l, scale = _pad_length(q, k, v, block_l)
+    out = linear_attention_pallas(qp, kp, vp, block_l=block_l, interpret=_interpret_default())
+    if scale != 1.0:
+        out = (out[..., :L, :].astype(jnp.float32) * scale).astype(q.dtype)
+    return out
 
 
 def linear_attention_causal(
@@ -43,7 +71,15 @@ def linear_attention_causal(
     block_l: int = 256,
     use_pallas: bool = True,
 ) -> jax.Array:
-    """Causal softmax-free attention with VMEM running-state accumulation."""
+    """Causal softmax-free attention with VMEM running-state accumulation.
+
+    Non-multiple-of-block lengths are zero-padded and renormalized.
+    """
     if not use_pallas:
         return ref.linear_attention_causal_ref(q, k, v)
-    return linear_attention_causal_pallas(q, k, v, block_l=block_l, interpret=_interpret_default())
+    L = q.shape[-2]
+    qp, kp, vp, block_l, scale = _pad_length(q, k, v, block_l)
+    out = linear_attention_causal_pallas(qp, kp, vp, block_l=block_l, interpret=_interpret_default())
+    if scale != 1.0:
+        out = (out[..., :L, :].astype(jnp.float32) * scale).astype(q.dtype)
+    return out

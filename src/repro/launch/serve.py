@@ -59,6 +59,31 @@ def serve_se(args) -> None:
     print(f"quality vs clean: {scores}")
 
 
+def serve_pool(args) -> None:
+    """Multi-session server: --batch concurrent streams through one SessionPool."""
+    from repro.audio.synthetic import batch_for_step
+    from repro.core.quant import FP10
+    from repro.models import tftnn as tft
+    from repro.serve import SessionPool
+
+    cfg = tft.tftnn_config()
+    if args.reduced:
+        cfg = dataclasses.replace(cfg, freq_bins=64, channels=16, att_dim=8,
+                                  num_heads=1, gru_hidden=16, dilation_rates=(1, 2, 4))
+    params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
+                       quant=FP10 if args.quant else None)
+    noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
+    audio = jnp.asarray(noisy)
+    sessions = [pool.attach() for _ in range(args.batch)]
+    for i, s in enumerate(sessions):
+        pool.feed(s, audio[i])
+    pool.pump()
+    print(pool.report())
+    for s in sessions:
+        pool.detach(s)
+
+
 def serve_lm(args) -> None:
     import repro.configs as C
     from repro.models.transformer_lm import init_lm
@@ -77,7 +102,9 @@ def serve_lm(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", choices=["se", "lm"], default="se")
+    ap.add_argument("--task", choices=["se", "pool", "lm"], default="se")
+    ap.add_argument("--quant", action="store_true",
+                    help="pool task: serve on the paper's FP10 grid")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=1)
@@ -85,7 +112,7 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
-    (serve_se if args.task == "se" else serve_lm)(args)
+    {"se": serve_se, "pool": serve_pool, "lm": serve_lm}[args.task](args)
 
 
 if __name__ == "__main__":

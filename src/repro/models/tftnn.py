@@ -424,12 +424,17 @@ def apply_tft(
 # ---------------------------------------------------------------------------
 
 def init_stream_state(p: Params, cfg: TFTConfig, batch: int, dtype=jnp.float32) -> Params:
-    """Streaming state = the full-band GRU hidden per block, per (B, F')."""
+    """Streaming state = the full-band GRU hidden per block, per (B, F').
+
+    Layout is (batch, F', hidden) with batch as the leading axis so a server
+    holding many sessions in one batched state can reset/select single slots
+    (``state[k]``) without knowing the model internals.
+    """
     if not cfg.is_causal:
         raise ValueError(f"{cfg.name} is not causal; streaming unsupported")
     Fp = cfg.att_len
     return {
-        f"block{i}": jnp.zeros((batch * Fp, cfg.gru_hidden), dtype)
+        f"block{i}": jnp.zeros((batch, Fp, cfg.gru_hidden), dtype)
         for i in range(cfg.num_transformer_blocks)
     }
 
@@ -456,8 +461,9 @@ def stream_step(
     for i, blk in enumerate(p["blocks"]):
         zs, _ = _apply_stage(cfg, blk["sub"], z, _sub_cfg(cfg), train=False)
         zf = zs.reshape(B * Fp, cfg.att_dim)
-        h, z_out = streaming_gru_substep(blk["full"], _full_cfg(cfg), new_state[f"block{i}"], zf)
-        new_state[f"block{i}"] = h
+        h0 = state[f"block{i}"].reshape(B * Fp, cfg.gru_hidden)
+        h, z_out = streaming_gru_substep(blk["full"], _full_cfg(cfg), h0, zf)
+        new_state[f"block{i}"] = h.reshape(B, Fp, cfg.gru_hidden)
         z = z_out.reshape(B, Fp, cfg.att_dim)
     tr = nn.dense(p["att_out"], z)[:, :, None, :]
     mask = _mask_and_decode(cfg, p, new_p, enc, tr, train=False)  # (B, F, 1, 2)

@@ -1,1 +1,23 @@
-"""Serving: batched LM decode engine + the paper's streaming SE service."""
+"""Serving: batched LM decode engine + the paper's streaming SE service.
+
+``streaming_se`` holds the pure batched hop math (one implementation shared
+by the offline scan, the quantized path, and the server); ``session_server``
+multiplexes many client sessions onto that hop step.
+"""
+
+from repro.serve.session_server import (  # noqa: F401
+    PoolFullError,
+    Session,
+    SessionError,
+    SessionPool,
+    SessionStats,
+)
+from repro.serve.streaming_se import (  # noqa: F401
+    StreamState,
+    enhance_offline,
+    enhance_streaming,
+    init_stream,
+    make_stream_hop,
+    reset_slots,
+    stream_hop,
+)

@@ -1,0 +1,288 @@
+"""Multi-session streaming enhancement server (the ROADMAP's serving tier).
+
+The paper's deployment story is one ASIC per stream; the serving twin is one
+accelerator per *batch* of streams. This module multiplexes many concurrent
+client sessions onto a single jit-compiled batched hop step
+(``repro.serve.streaming_se.make_stream_hop``):
+
+- **Fixed-capacity ``SessionPool``** — one batched ``StreamState`` whose
+  leading axis is the slot index. Capacity is chosen once; attach/detach only
+  flips per-slot active masks and zeroes slot state (``reset_slots``), so
+  client churn never changes array shapes and never triggers recompilation.
+- **Chunk-size-agnostic ingestion** — each session owns a ring buffer;
+  clients may feed 37-sample dribbles or 10-second blobs. ``pump()`` drains
+  whole hops (16 ms at 8 kHz) across all sessions per batched step.
+- **Donated state** — the batched recurrent state is donated to the jit step,
+  so steady-state serving updates it in place (constant memory traffic, the
+  software analogue of the ASIC's all-on-chip state).
+- **Isolation** — inactive/starved slots are masked inside the jit step:
+  their state is kept bit-for-bit and they emit nothing, so a slot's output
+  depends only on its own history. A session served next to churning
+  neighbours produces the same audio as a solo run (tests/test_session_server.py).
+- **Accounting** — per-session hops/samples processed, processing-time share,
+  and real-time factor (RTF = compute time / audio time); pool-wide step
+  latency percentiles for the 16 ms budget check.
+
+Quantized serving: pass ``quant=repro.core.quant.FP10`` (or FXP8 — the
+"int8-class" fixed-point grid) to run the pool on the paper's deployment
+number formats via the same shared hop step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantSpec
+from repro.models import tftnn as tft_mod
+from repro.serve.streaming_se import (
+    StreamState,
+    init_stream,
+    make_stream_hop,
+    reset_slots,
+)
+
+Pytree = dict
+
+
+class SessionError(RuntimeError):
+    """Invalid session operation (detached handle, unknown session, ...)."""
+
+
+class PoolFullError(SessionError):
+    """attach() on a pool whose every slot is occupied."""
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Per-session serving accounting."""
+
+    hops: int = 0  # hops actually enhanced
+    samples_in: int = 0  # raw samples accepted by feed()
+    samples_out: int = 0  # enhanced samples emitted
+    proc_seconds: float = 0.0  # this session's share of batched step time
+
+    def audio_seconds(self, sample_rate: int, hop: int) -> float:
+        return self.hops * hop / sample_rate
+
+    def rtf(self, sample_rate: int, hop: int) -> float:
+        """Real-time factor: compute seconds per audio second (<1 = real time)."""
+        audio = self.audio_seconds(sample_rate, hop)
+        return self.proc_seconds / audio if audio > 0 else 0.0
+
+
+@dataclasses.dataclass
+class Session:
+    """Client handle returned by ``SessionPool.attach``."""
+
+    sid: int
+    slot: int
+    stats: SessionStats = dataclasses.field(default_factory=SessionStats)
+    detached: bool = False
+
+
+class _RingBuffer:
+    """Per-session ingestion buffer: accepts arbitrary-length float chunks,
+    yields fixed hop-sized blocks."""
+
+    def __init__(self) -> None:
+        self._chunks: List[np.ndarray] = []
+        self._size = 0
+
+    def push(self, samples: np.ndarray) -> None:
+        if samples.size:
+            self._chunks.append(samples)
+            self._size += samples.size
+
+    def __len__(self) -> int:
+        return self._size
+
+    def pop(self, n: int) -> np.ndarray:
+        """Pop exactly n samples (caller checks len() first)."""
+        out = np.empty((n,), np.float32)
+        filled = 0
+        while filled < n:
+            head = self._chunks[0]
+            take = min(n - filled, head.size)
+            out[filled : filled + take] = head[:take]
+            if take == head.size:
+                self._chunks.pop(0)
+            else:
+                self._chunks[0] = head[take:]
+            filled += take
+        self._size -= n
+        return out
+
+
+class SessionPool:
+    """Fixed-capacity multi-session streaming enhancement server.
+
+    One instance = one compiled batched hop step + one batched recurrent
+    state. Typical driver loop::
+
+        pool = SessionPool(params, cfg, capacity=8)
+        s = pool.attach()
+        pool.feed(s, chunk)          # any chunk size, any time
+        pool.pump()                  # run batched hop steps while audio waits
+        audio = pool.read(s)         # enhanced samples ready so far
+        pool.detach(s)
+    """
+
+    def __init__(
+        self,
+        params: Pytree,
+        cfg: tft_mod.TFTConfig,
+        capacity: int,
+        *,
+        quant: Optional[QuantSpec] = None,
+        sample_rate: int = 8000,
+        donate: bool = True,
+    ) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.sample_rate = sample_rate
+        self.quant = quant
+        self._step = make_stream_hop(params, cfg, quant=quant, donate=donate)
+        self._state: StreamState = init_stream(params, cfg, capacity)
+        self._slot_session: List[Optional[Session]] = [None] * capacity
+        self._sessions: Dict[int, Session] = {}
+        self._rings: List[_RingBuffer] = [_RingBuffer() for _ in range(capacity)]
+        self._out: List[List[np.ndarray]] = [[] for _ in range(capacity)]
+        self._sid_counter = itertools.count()
+        self._hop_buf = np.zeros((capacity, cfg.hop), np.float32)
+        self.step_seconds: List[float] = []  # pool-wide per-step latency
+
+    # -- session lifecycle --------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return len(self._sessions)
+
+    def attach(self) -> Session:
+        """Claim a free slot for a new stream; O(1), no recompilation."""
+        try:
+            slot = self._slot_session.index(None)
+        except ValueError:
+            raise PoolFullError(
+                f"pool is full ({self.capacity} sessions); detach one first"
+            ) from None
+        mask = jnp.zeros((self.capacity,), bool).at[slot].set(True)
+        self._state = reset_slots(self._state, mask)
+        sess = Session(sid=next(self._sid_counter), slot=slot)
+        self._slot_session[slot] = sess
+        self._sessions[sess.sid] = sess
+        self._rings[slot] = _RingBuffer()
+        self._out[slot] = []
+        return sess
+
+    def detach(self, sess: Session) -> np.ndarray:
+        """Release the session's slot; returns any unread enhanced audio."""
+        self._check(sess)
+        tail = self.read(sess)
+        sess.detached = True
+        self._slot_session[sess.slot] = None
+        del self._sessions[sess.sid]
+        return tail
+
+    def _check(self, sess: Session) -> None:
+        if sess.detached or self._sessions.get(sess.sid) is not sess:
+            raise SessionError(f"session {sess.sid} is not attached to this pool")
+
+    # -- audio I/O ----------------------------------------------------------
+
+    def feed(self, sess: Session, samples) -> None:
+        """Queue raw audio for a session. Any chunk length is accepted."""
+        self._check(sess)
+        # copy: callers often reuse one capture buffer between feed() calls
+        arr = np.array(samples, np.float32, copy=True).reshape(-1)
+        self._rings[sess.slot].push(arr)
+        sess.stats.samples_in += arr.size
+
+    def read(self, sess: Session) -> np.ndarray:
+        """Pop all enhanced audio produced for this session so far."""
+        self._check(sess)
+        chunks = self._out[sess.slot]
+        self._out[sess.slot] = []
+        if not chunks:
+            return np.zeros((0,), np.float32)
+        out = np.concatenate(chunks)
+        sess.stats.samples_out += out.size
+        return out
+
+    # -- the batched hop loop ----------------------------------------------
+
+    def step(self) -> int:
+        """Run ONE batched hop step over every session with a full hop queued.
+
+        Returns the number of sessions stepped (0 = nothing ready, no compute
+        spent). Starved and empty slots are masked: their state is untouched.
+        """
+        hop = self.cfg.hop
+        active = np.zeros((self.capacity,), bool)
+        for slot, sess in enumerate(self._slot_session):
+            if sess is not None and len(self._rings[slot]) >= hop:
+                self._hop_buf[slot] = self._rings[slot].pop(hop)
+                active[slot] = True
+        n_active = int(active.sum())
+        if n_active == 0:
+            return 0
+
+        t0 = time.perf_counter()
+        self._state, out = self._step(
+            self._state, jnp.asarray(self._hop_buf), jnp.asarray(active)
+        )
+        out = np.asarray(jax.block_until_ready(out))
+        dt = time.perf_counter() - t0
+        self.step_seconds.append(dt)
+
+        share = dt / n_active
+        for slot in np.flatnonzero(active):
+            sess = self._slot_session[slot]
+            self._out[slot].append(out[slot])
+            sess.stats.hops += 1
+            sess.stats.proc_seconds += share
+        return n_active
+
+    def pump(self) -> int:
+        """Step until no session has a full hop buffered; returns total steps."""
+        steps = 0
+        while self.step():
+            steps += 1
+        return steps
+
+    # -- reporting ----------------------------------------------------------
+
+    def latency_percentiles(self, qs=(50, 95, 99)) -> Dict[int, float]:
+        """Pool-step wall-clock percentiles in milliseconds."""
+        if not self.step_seconds:
+            return {q: 0.0 for q in qs}
+        arr = np.asarray(self.step_seconds) * 1e3
+        return {q: float(np.percentile(arr, q)) for q in qs}
+
+    def report(self) -> str:
+        hop = self.cfg.hop
+        lines = [
+            f"SessionPool(capacity={self.capacity}, active={self.num_active}, "
+            f"quant={self.quant or 'fp32'})"
+        ]
+        pct = self.latency_percentiles()
+        budget_ms = hop / self.sample_rate * 1e3
+        lines.append(
+            f"  step latency ms: p50={pct[50]:.2f} p95={pct[95]:.2f} "
+            f"p99={pct[99]:.2f} (hop budget {budget_ms:.1f} ms)"
+        )
+        for sess in self._sessions.values():
+            s = sess.stats
+            lines.append(
+                f"  session {sess.sid} slot {sess.slot}: {s.hops} hops, "
+                f"rtf={s.rtf(self.sample_rate, hop):.3f}"
+            )
+        return "\n".join(lines)

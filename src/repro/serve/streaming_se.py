@@ -9,17 +9,33 @@ software twin of the ASIC's real-time loop (512-sample window, 128 hop,
 The synthesis side uses weighted overlap-add with the same Hann window; the
 COLA normalizer for hop = n_fft/4 is constant once 4 windows overlap, so each
 emitted hop is final (no lookahead).
+
+One pure batched ``stream_hop`` is the single implementation of the hop math.
+Three consumers share it:
+
+- ``enhance_streaming`` — the offline scan driver (tests, evaluation),
+- ``repro.serve.session_server.SessionPool`` — the multi-session server,
+  via ``make_stream_hop`` (jit + donated state + per-slot active masking),
+- the quantized inference path (``make_stream_hop(..., quant=FP10)``), which
+  reuses ``repro.core.quant`` to run weights/activations on the paper's
+  deployment grid.
+
+Every per-stream quantity in ``StreamState`` (including the ``wsum`` COLA
+normalizer, which depends on how many hops a stream has seen) carries a
+leading batch axis, so a server can reset or swap individual slots with
+``reset_slots`` while other streams keep running.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.audio.stft import hann
+from repro.core.quant import QuantSpec, quantize, quantize_tree
 from repro.models import tftnn as tft_mod
 
 Pytree = Any
@@ -30,17 +46,32 @@ Pytree = Any
 class StreamState:
     analysis: jax.Array  # (B, n_fft) rolling input window
     synthesis: jax.Array  # (B, n_fft) overlap-add accumulator
-    wsum: jax.Array  # (n_fft,) window-square accumulator
-    model: Pytree  # TFTNN recurrent state
+    wsum: jax.Array  # (B, n_fft) per-stream window-square accumulator
+    model: Pytree  # TFTNN recurrent state, leaves (B, ...)
 
 
 def init_stream(params: Pytree, cfg: tft_mod.TFTConfig, batch: int) -> StreamState:
     return StreamState(
         analysis=jnp.zeros((batch, cfg.n_fft)),
         synthesis=jnp.zeros((batch, cfg.n_fft)),
-        wsum=jnp.zeros((cfg.n_fft,)),
+        wsum=jnp.zeros((batch, cfg.n_fft)),
         model=tft_mod.init_stream_state(params, cfg, batch),
     )
+
+
+def reset_slots(state: StreamState, slot_mask: jax.Array) -> StreamState:
+    """Zero the per-stream state of every slot where ``slot_mask`` is True.
+
+    slot_mask: (B,) bool. All ``StreamState`` leaves have a leading batch
+    axis, so this is a model-agnostic fresh-stream reset (used by the session
+    server on attach).
+    """
+
+    def zero(leaf: jax.Array) -> jax.Array:
+        m = slot_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(leaf), leaf)
+
+    return jax.tree_util.tree_map(zero, state)
 
 
 def stream_hop(
@@ -48,16 +79,28 @@ def stream_hop(
     cfg: tft_mod.TFTConfig,
     state: StreamState,
     hop_samples: jax.Array,  # (B, hop) new audio
+    *,
+    quant: Optional[QuantSpec] = None,
 ) -> Tuple[StreamState, jax.Array]:
-    """Push one hop of audio; emit one hop of enhanced audio."""
+    """Push one hop of audio; emit one hop of enhanced audio.
+
+    ``quant`` (a ``repro.core.quant`` grid, e.g. FP10 or FXP8) additionally
+    rounds the spectral features entering the model and the mask leaving it —
+    the activation half of the paper's Table VI deployment format. Weight
+    quantization is the caller's job (``make_stream_hop`` / ``quantize_tree``).
+    """
     n_fft, hop = cfg.n_fft, cfg.hop
     w = hann(n_fft, hop_samples.dtype)
     analysis = jnp.concatenate([state.analysis[:, hop:], hop_samples], axis=1)
     frame = analysis * w
     spec = jnp.fft.rfft(frame, axis=-1)  # (B, F)
     frame_ri = jnp.stack([spec.real, spec.imag], axis=-1)  # (B, F, 2)
+    if quant is not None:
+        frame_ri = quantize(frame_ri, quant)
 
     model_state, mask = tft_mod.stream_step(params, state.model, frame_ri, cfg)
+    if quant is not None:
+        mask = quantize(mask, quant)
 
     a, b = frame_ri[..., 0], frame_ri[..., 1]
     m = 2.0 * jnp.tanh(mask)
@@ -66,18 +109,63 @@ def stream_hop(
     y = jnp.fft.irfft(est, n=n_fft, axis=-1) * w
 
     synthesis = state.synthesis + y
-    wsum = state.wsum + w * w
-    out = synthesis[:, :hop] / jnp.maximum(wsum[:hop], 1e-8)
+    wsum = state.wsum + (w * w)[None, :]
+    out = synthesis[:, :hop] / jnp.maximum(wsum[:, :hop], 1e-8)
     new_state = StreamState(
         analysis=analysis,
         synthesis=jnp.concatenate([synthesis[:, hop:], jnp.zeros_like(synthesis[:, :hop])], axis=1),
-        wsum=jnp.concatenate([wsum[hop:], jnp.zeros((hop,), wsum.dtype)]),
+        wsum=jnp.concatenate([wsum[:, hop:], jnp.zeros_like(wsum[:, :hop])], axis=1),
         model=model_state,
     )
     return new_state, out
 
 
-def enhance_streaming(params: Pytree, cfg: tft_mod.TFTConfig, wave: jax.Array) -> jax.Array:
+def make_stream_hop(
+    params: Pytree,
+    cfg: tft_mod.TFTConfig,
+    *,
+    quant: Optional[QuantSpec] = None,
+    donate: bool = True,
+) -> Callable[[StreamState, jax.Array, jax.Array], Tuple[StreamState, jax.Array]]:
+    """Build the jit-compiled batched hop step shared by server and benchmarks.
+
+    Returns ``step(state, hops, active) -> (state, out)`` where
+
+    - ``hops``: (B, hop) one hop of audio per slot (garbage for idle slots),
+    - ``active``: (B,) bool — slots where it is False keep their state
+      bit-for-bit and emit zeros, so attach/detach churn in other slots can
+      never perturb a running stream,
+    - the state argument is donated (``donate=True``): the batched recurrent
+      state is updated in place, the steady-state memory traffic the paper's
+      constant-size-state execution model is about.
+
+    ``quant`` switches the whole path onto a ``repro.core.quant`` grid:
+    weights are pre-quantized here (once), activations per hop inside
+    ``stream_hop``.
+    """
+    if quant is not None and quant.kind != "none":
+        params = quantize_tree(params, quant)
+
+    def step(state: StreamState, hops: jax.Array, active: jax.Array):
+        stepped, out = stream_hop(params, cfg, state, hops, quant=quant)
+
+        def merge(new: jax.Array, old: jax.Array) -> jax.Array:
+            m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        merged = jax.tree_util.tree_map(merge, stepped, state)
+        return merged, jnp.where(active[:, None], out, jnp.zeros_like(out))
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def enhance_streaming(
+    params: Pytree,
+    cfg: tft_mod.TFTConfig,
+    wave: jax.Array,
+    *,
+    quant: Optional[QuantSpec] = None,
+) -> jax.Array:
     """Run the full streaming loop over (B, S) audio via scan; returns (B, S)."""
     B, S = wave.shape
     hop = cfg.hop
@@ -86,7 +174,51 @@ def enhance_streaming(params: Pytree, cfg: tft_mod.TFTConfig, wave: jax.Array) -
     st = init_stream(params, cfg, B)
 
     def body(s, x):
-        return stream_hop(params, cfg, s, x)
+        return stream_hop(params, cfg, s, x, quant=quant)
 
     _, outs = jax.lax.scan(body, st, hops)
     return outs.transpose(1, 0, 2).reshape(B, n * hop)
+
+
+def enhance_offline(params: Pytree, cfg: tft_mod.TFTConfig, wave: jax.Array) -> jax.Array:
+    """Offline reference for the streaming loop: framed STFT -> mask -> OLA.
+
+    Frames the signal exactly as the hop loop sees it (zero history of
+    ``n_fft - hop`` samples, window ending at sample ``(k+1)*hop``), runs the
+    model over the whole utterance at once, and synthesizes by weighted
+    overlap-add with the squared-window normalizer. Because every window
+    covering output region [k*hop, (k+1)*hop) has index <= k, the streaming
+    loop's running ``wsum`` equals the full-accumulation normalizer used here
+    — so ``enhance_streaming(x) == enhance_offline(x)`` for every hop,
+    including the warm-up, up to float error. That equality is THE streaming
+    invariant and is property-tested in tests/test_streaming_se.py.
+    """
+    B, S = wave.shape
+    n_fft, hop = cfg.n_fft, cfg.hop
+    n = S // hop
+    w = hann(n_fft, wave.dtype)
+    x = jnp.pad(wave[:, : n * hop], ((0, 0), (n_fft - hop, 0)))
+    starts = jnp.arange(n) * hop
+    idx = starts[:, None] + jnp.arange(n_fft)[None, :]  # (T, n_fft)
+    frames = x[:, idx] * w  # (B, T, n_fft)
+    spec = jnp.fft.rfft(frames, axis=-1)  # (B, T, F)
+    spec_ri = jnp.stack([spec.real, spec.imag], axis=-1).transpose(0, 2, 1, 3)  # (B, F, T, 2)
+
+    mask, _ = tft_mod.apply_tft(params, spec_ri, cfg)
+
+    a, b = spec_ri[..., 0], spec_ri[..., 1]
+    m = 2.0 * jnp.tanh(mask)
+    mc, md = m[..., 0], m[..., 1]
+    est = (a * mc - b * md) + 1j * (a * md + b * mc)  # (B, F, T)
+    y = jnp.fft.irfft(est.transpose(0, 2, 1), n=n_fft, axis=-1) * w  # (B, T, n_fft)
+
+    out_len = n * hop + n_fft
+    flat = y.reshape(-1, n, n_fft)
+
+    def ola(fr):  # fr: (T, n_fft)
+        return jnp.zeros((out_len,), fr.dtype).at[idx].add(fr)
+
+    acc = jax.vmap(ola)(flat)
+    wsq = jnp.zeros((out_len,), y.dtype).at[idx].add(w * w)
+    out = acc / jnp.maximum(wsq, 1e-8)[None, :]
+    return out[:, : n * hop].reshape(B, n * hop)

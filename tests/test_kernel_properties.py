@@ -1,0 +1,112 @@
+"""Property-based kernel parity: interpret-mode Pallas vs the jnp oracles.
+
+tests/test_kernels.py pins a handful of blessed shapes; these tests draw
+shapes, dtypes, and block sizes — crucially including lengths that are NOT a
+multiple of the kernel block (exercising the pad-and-renormalize path in
+kernels/linear_attention/ops.py) and odd feature sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.dilated_conv import dilated_split_conv
+from repro.kernels.dilated_conv.ref import dilated_split_conv_ref
+from repro.kernels.fp10 import fp10_quantize
+from repro.kernels.fp10.ref import fp10_quantize_ref
+from repro.kernels.linear_attention import linear_attention, linear_attention_causal
+from repro.kernels.linear_attention.ref import (
+    linear_attention_causal_ref,
+    linear_attention_ref,
+)
+
+# Small example counts: interpret-mode Pallas is slow, and the fallback shim
+# biases draws toward the boundary values where block-edge bugs live.
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),  # batch
+    st.integers(min_value=1, max_value=3),  # heads
+    st.integers(min_value=3, max_value=160),  # length: rarely block-aligned
+    st.sampled_from([4, 8, 16]),  # head dim
+    st.sampled_from([16, 32, 64, 128]),  # block_l
+    st.sampled_from(["float32", "bfloat16"]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_linear_attention_any_shape(B, H, L, D, block_l, dtype, seed):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, L, D), dt) for kk in ks)
+    tol = 1e-5 if dt == jnp.float32 else 4e-2
+    out = linear_attention(q, k, v, block_l=block_l)
+    ref = linear_attention_ref(q, k, v)
+    assert out.shape == (B, H, L, D)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=2),
+    st.integers(min_value=1, max_value=2),
+    st.integers(min_value=3, max_value=160),
+    st.sampled_from([4, 8, 16]),
+    st.sampled_from([16, 32, 64]),
+    st.sampled_from(["float32", "bfloat16"]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_linear_attention_causal_any_shape(B, H, L, D, block_l, dtype, seed):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, L, D), dt) for kk in ks)
+    tol = 1e-5 if dt == jnp.float32 else 4e-2
+    out = linear_attention_causal(q, k, v, block_l=block_l)
+    ref = linear_attention_causal_ref(q, k, v)
+    assert out.shape == (B, H, L, D)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),  # batch
+    st.integers(min_value=5, max_value=200),  # F: odd sizes welcome
+    st.sampled_from([4, 8, 16, 32]),  # channels (even, split in halves)
+    st.integers(min_value=1, max_value=8),  # dilation
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dilated_conv_any_shape(B, F, C, dilation, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (B, F, C))
+    w = jax.random.normal(ks[1], (5, C // 2, C // 2)) * 0.2
+    b = jax.random.normal(ks[2], (C // 2,)) * 0.1
+    out = dilated_split_conv(x, w, b, dilation=dilation)
+    ref = dilated_split_conv_ref(x, w, b, dilation=dilation)
+    assert out.shape == x.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([(5, 4), (4, 3), (8, 7), (4, 4), (5, 2)]),
+    st.floats(min_value=-6.0, max_value=6.0),  # log10 scale: denormals..overflow
+    st.integers(min_value=1, max_value=5000),  # element count incl. lane tails
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fp10_any_shape_and_scale(fmt, log_scale, n, seed):
+    exp, man = fmt
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10.0**log_scale
+    out = fp10_quantize(x, exp_bits=exp, man_bits=man)
+    ref = fp10_quantize_ref(x, exp, man)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fp10_special_values():
+    x = jnp.array([0.0, -0.0, 1e-45, -1e-45, 65504.0, -65504.0, 1e30, -1e30])
+    np.testing.assert_array_equal(
+        np.asarray(fp10_quantize(x)), np.asarray(fp10_quantize_ref(x, 5, 4))
+    )

@@ -1,0 +1,191 @@
+"""Session-server churn tests (serve/session_server).
+
+The server's contract: a session's enhanced audio depends only on its own
+input stream — never on which slot it landed in, how its audio was chunked,
+or what other sessions attached/detached around it.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import FP10
+from repro.models import tftnn as tft
+from repro.serve import (
+    PoolFullError,
+    SessionError,
+    SessionPool,
+    enhance_streaming,
+)
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=32,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)), np.float32
+    )
+
+
+def _run_solo(audio: np.ndarray, capacity: int) -> np.ndarray:
+    pool = SessionPool(PARAMS, CFG, capacity=capacity)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    return pool.detach(s)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=6, max_value=20),  # hops of audio for the probe
+    st.integers(min_value=1, max_value=97),  # ragged feed chunk size
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_churn_is_bit_identical_to_solo(hops, chunk, seed):
+    """A session attached mid-stream, served next to unrelated churning
+    sessions and fed in ragged chunks, emits BIT-IDENTICAL audio to a solo
+    run of the same pool."""
+    audio = _audio(seed, hops)
+    solo = _run_solo(audio, capacity=4)
+
+    pool = SessionPool(PARAMS, CFG, capacity=4)
+    n1, n2 = pool.attach(), pool.attach()
+    noise = _audio(seed + 1, 40)
+    pool.feed(n1, noise[: 7 * HOP])
+    pool.pump()  # neighbours already mid-stream
+    probe = pool.attach()  # lands on slot 2, not slot 0
+    for start in range(0, audio.size, chunk):
+        pool.feed(probe, audio[start : start + chunk])
+        if start % (3 * chunk) == 0:
+            pool.feed(n2, noise[start % noise.size :][: 2 * HOP + 5])
+        pool.pump()
+    pool.detach(n1)  # churn while the probe still runs
+    fresh = pool.attach()
+    pool.feed(fresh, noise[: 3 * HOP])
+    pool.pump()
+    got = pool.detach(probe)
+
+    assert got.shape == solo.shape == (hops * HOP,)
+    np.testing.assert_array_equal(got, solo)
+
+
+def test_pool_output_matches_single_stream_scan():
+    """Acceptance bound: pool output == enhance_streaming to <= 1e-5."""
+    audio = _audio(11, 16)
+    got = _run_solo(audio, capacity=3)
+    ref = np.asarray(enhance_streaming(PARAMS, CFG, jnp.asarray(audio)[None]))[0]
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_pool_full_and_double_detach_raise():
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s1, s2 = pool.attach(), pool.attach()
+    with pytest.raises(PoolFullError):
+        pool.attach()
+    pool.detach(s1)
+    with pytest.raises(SessionError):
+        pool.detach(s1)
+    with pytest.raises(SessionError):
+        pool.feed(s1, np.zeros(HOP, np.float32))
+    with pytest.raises(SessionError):
+        pool.read(s1)
+    # the freed slot is reusable
+    s3 = pool.attach()
+    assert s3.slot == s1.slot
+    pool.detach(s2)
+    pool.detach(s3)
+    assert pool.num_active == 0
+
+
+def test_slot_reuse_restarts_stream_state():
+    """A session reusing a slot must behave like a brand-new stream, not
+    inherit the previous occupant's warm-started recurrent state."""
+    audio = _audio(21, 10)
+    pool = SessionPool(PARAMS, CFG, capacity=1)
+    old = pool.attach()
+    pool.feed(old, _audio(22, 12))
+    pool.pump()
+    pool.detach(old)
+    fresh = pool.attach()
+    assert fresh.slot == old.slot
+    pool.feed(fresh, audio)
+    pool.pump()
+    np.testing.assert_array_equal(pool.detach(fresh), _run_solo(audio, capacity=1))
+
+
+def test_starved_session_waits_without_state_damage():
+    """Feeding less than one hop produces nothing; the remainder is used
+    once enough samples arrive, with no effect on the final signal."""
+    audio = _audio(31, 8)
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    pool.feed(s, audio[: HOP - 3])
+    assert pool.pump() == 0
+    assert pool.read(s).size == 0
+    pool.feed(s, audio[HOP - 3 :])
+    pool.pump()
+    np.testing.assert_array_equal(pool.detach(s), _run_solo(audio, capacity=2))
+
+
+def test_detach_returns_unread_tail():
+    audio = _audio(41, 6)
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    head = pool.read(s)  # drain what's ready
+    pool.feed(s, audio)
+    pool.pump()
+    tail = pool.detach(s)  # unread remainder comes back from detach
+    assert head.size == tail.size == audio.size
+
+
+def test_stats_accounting():
+    audio = _audio(51, 9)
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    assert s.stats.hops == 9
+    assert s.stats.samples_in == audio.size
+    pool.read(s)
+    assert s.stats.samples_out == audio.size
+    assert s.stats.proc_seconds > 0
+    assert s.stats.rtf(pool.sample_rate, HOP) > 0
+    assert pool.latency_percentiles()[50] > 0
+    assert "rtf=" in pool.report()
+
+
+def test_quantized_pool_serves():
+    """FP10 serving path: runs, finite, and reasonably close to fp32."""
+    audio = _audio(61, 10)
+    pool = SessionPool(PARAMS, CFG, capacity=2, quant=FP10)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    yq = pool.detach(s)
+    assert np.isfinite(yq).all()
+    y32 = _run_solo(audio, capacity=2)
+    rel = np.abs(yq - y32).max() / (np.abs(y32).max() + 1e-9)
+    assert rel < 0.5

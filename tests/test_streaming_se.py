@@ -1,0 +1,168 @@
+"""Property tests for the streaming enhancement core (serve/streaming_se).
+
+The invariant the whole serving stack rests on: pushing audio hop-by-hop
+through ``stream_hop`` (rolling analysis window, recurrent model state,
+weighted overlap-add with the running wsum normalizer) produces the same
+signal as the offline framed STFT -> mask -> iSTFT path, for every emitted
+hop including the warm-up.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.audio.stft import hann
+from repro.core.quant import FP10, FXP8
+from repro.models import tftnn as tft
+from repro.serve.streaming_se import (
+    enhance_offline,
+    enhance_streaming,
+    init_stream,
+    make_stream_hop,
+    reset_slots,
+    stream_hop,
+)
+
+
+def small_cfg() -> tft.TFTConfig:
+    """Small front end (n_fft=64, hop=16) + tiny trunk: fast, same math."""
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=32,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=24),  # hop count
+    st.integers(min_value=1, max_value=3),  # batch size
+    st.floats(min_value=-3.0, max_value=3.0),  # log10 amplitude
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_streaming_equals_offline_property(hops, batch, log_amp, seed):
+    """enhance_streaming == enhance_offline for drawn lengths/batches/scales."""
+    amp = 10.0**log_amp
+    wave = amp * jax.random.normal(jax.random.PRNGKey(seed), (batch, hops * CFG.hop))
+    ys = enhance_streaming(PARAMS, CFG, wave)
+    yo = enhance_offline(PARAMS, CFG, wave)
+    # The mask is bounded (2*tanh), so output scales with the input: compare
+    # relative to the amplitude.
+    np.testing.assert_allclose(
+        np.asarray(ys) / amp, np.asarray(yo) / amp, atol=1e-5, rtol=1e-4
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    st.integers(min_value=5, max_value=20),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_streaming_ragged_tail_ignored(hops, seed):
+    """enhance_streaming only consumes whole hops; a ragged tail is dropped."""
+    wave = jax.random.normal(jax.random.PRNGKey(seed), (1, hops * CFG.hop))
+    ragged = jnp.concatenate([wave, jnp.ones((1, CFG.hop // 2))], axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(enhance_streaming(PARAMS, CFG, wave)),
+        np.asarray(enhance_streaming(PARAMS, CFG, ragged)),
+    )
+
+
+def test_wsum_constant_once_windows_overlap():
+    """COLA: the emitted-hop normalizer is the same constant for every hop
+    once 4 windows overlap (hop = n_fft/4), so late hops need no lookahead."""
+    n_fft, hop = CFG.n_fft, CFG.hop
+    assert n_fft == 4 * hop
+    st_ = init_stream(PARAMS, CFG, 1)
+    w = hann(n_fft)
+    # expected normalizer: sum of w^2 over the 4 overlapping windows
+    wsq = np.asarray(w * w)
+    expected = sum(wsq[m * hop : (m + 1) * hop] for m in range(4))
+    np.testing.assert_allclose(expected, expected[0], atol=1e-6)  # constant in-hop
+    emitted_norms = []
+    for k in range(8):
+        chunk = jnp.ones((1, hop)) * 0.1
+        # the normalizer THIS emit divides by: carried wsum + this window
+        emitted_norms.append(np.asarray(st_.wsum[0, :hop]) + wsq[:hop])
+        st_, _ = stream_hop(PARAMS, CFG, st_, chunk)
+    for k in range(3, 8):  # from the 4th hop on: saturated, constant
+        np.testing.assert_allclose(emitted_norms[k], expected, atol=1e-6)
+    # warm-up hops see a strictly smaller accumulation
+    assert emitted_norms[0].max() < expected.max()
+
+
+def test_wsum_is_per_stream():
+    """A freshly reset slot must re-run its own wsum warm-up while the other
+    slot stays saturated — the reason wsum carries a batch axis."""
+    st_ = init_stream(PARAMS, CFG, 2)
+    hop = CFG.hop
+    for _ in range(6):
+        st_, _ = stream_hop(PARAMS, CFG, st_, jnp.ones((2, hop)))
+    st_ = reset_slots(st_, jnp.array([False, True]))
+    assert float(jnp.abs(st_.wsum[1]).max()) == 0.0
+    st_, _ = stream_hop(PARAMS, CFG, st_, jnp.ones((2, hop)))
+    assert float(st_.wsum[1, :hop].max()) < float(st_.wsum[0, :hop].max())
+
+
+def test_make_stream_hop_masking_freezes_state():
+    step = make_stream_hop(PARAMS, CFG, donate=False)
+    st_ = init_stream(PARAMS, CFG, 2)
+    hops = jax.random.normal(jax.random.PRNGKey(1), (2, CFG.hop))
+    st2, out = step(st_, hops, jnp.array([True, False]))
+    assert bool((out[1] == 0).all())
+    for new, old in zip(
+        jax.tree_util.tree_leaves(st2), jax.tree_util.tree_leaves(st_)
+    ):
+        np.testing.assert_array_equal(np.asarray(new[1]), np.asarray(old[1]))
+
+
+def _run_quantized(spec, seed):
+    wave = 0.3 * jax.random.normal(jax.random.PRNGKey(seed), (1, 10 * CFG.hop))
+    y32 = enhance_streaming(PARAMS, CFG, wave)
+    step = make_stream_hop(PARAMS, CFG, quant=spec, donate=False)
+    st_ = init_stream(PARAMS, CFG, 1)
+    outs = []
+    for i in range(10):
+        st_, y = step(st_, wave[:, i * CFG.hop : (i + 1) * CFG.hop], jnp.ones(1, bool))
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), y32, wave
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_fp10_streaming_close_to_fp32(seed):
+    """The FP10 deployment grid (Table VI) tracks fp32 to the grid's
+    resolution: 4 mantissa bits => a few percent through the model. Compared
+    after the COLA warm-up — the first hops divide by a near-zero wsum, which
+    amplifies rounding error without bound."""
+    yq, y32, _ = _run_quantized(FP10, seed)
+    assert bool(jnp.isfinite(yq).all())
+    warm = 4 * CFG.hop
+    err = float(jnp.abs(yq[:, warm:] - y32[:, warm:]).max()) / (
+        float(jnp.abs(y32[:, warm:]).max()) + 1e-9
+    )
+    assert err < 0.1, f"FP10 path diverged: rel err {err}"
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_fxp8_streaming_stays_bounded(seed):
+    """FXP8's 3 fractional bits are too coarse for accuracy (the paper picks
+    FP10 over it in Table VI) but the path must stay finite and bounded (the
+    mask is bounded by 2, so output energy is bounded by the input's)."""
+    yq, _, wave = _run_quantized(FXP8, seed)
+    assert bool(jnp.isfinite(yq).all())
+    assert float(jnp.abs(yq).max()) < 20.0 * float(jnp.abs(wave).max())
