@@ -1,25 +1,42 @@
-"""Multi-session server throughput: sessions x RTF curve.
+"""Multi-session server throughput: sessions x RTF curve, single or sharded.
 
-Sweeps the number of concurrent streams served by ONE fixed-capacity
-``SessionPool`` (one compiled batched hop step, no recompilation across sweep
-points — the server's core scaling property) and reports, per point:
+Default mode sweeps the number of concurrent streams served by ONE
+fixed-capacity ``SessionPool`` (one compiled batched hop step, no
+recompilation across sweep points — the server's core scaling property) and
+reports, per point:
 
 - aggregate RTF: total compute seconds per total audio seconds (< 1 means the
   whole batch is served in real time),
 - per-session RTF (mean),
 - pool step latency p50/p95 in ms against the 16 ms hop budget.
 
+``--shards N`` instead sweeps SHARD COUNT at full per-shard load through
+``ShardedSessionPool`` (one pool per device, overlapped ``pump_all``) and
+reports aggregate RTF plus ``rt_capacity = 1 / aggregate_rtf`` — the number
+of real-time streams this host could sustain at that shard count. If
+capacity scales linearly with devices, rt_capacity grows ~linearly in the
+shard sweep (faked CPU devices share one core: expect a flat curve there).
+On a CPU-only host, fake devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python benchmarks/server_throughput.py --shards 4
+
 CSV on stdout via benchmarks.common.emit. Designed to finish well inside
 2 minutes on a laptop CPU (reduced trunk, ~1 s of audio per session).
 
-Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--quant] [--seconds S]
+Flags (see also --help): --capacity N (slots: per pool, or per shard when
+--shards > 0), --seconds S (audio per session), --quant (FP10 grid),
+--shards N (sweep 1..N shards; 0 = single-pool sessions sweep).
+
+Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N] \\
+          [--seconds S] [--quant] [--shards N]
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
+import time
 from pathlib import Path
 
 import jax
@@ -30,21 +47,15 @@ from common import emit  # noqa: E402
 
 from repro.audio.synthetic import batch_for_step  # noqa: E402
 from repro.core.quant import FP10  # noqa: E402
+from repro.launch.serve import reduced_cfg  # noqa: E402
 from repro.models import tftnn as tft  # noqa: E402
-from repro.serve import SessionPool  # noqa: E402
+from repro.serve import SessionPool, ShardedSessionPool  # noqa: E402
 
 
 def bench_cfg() -> tft.TFTConfig:
-    """Paper front end (512/128 @ 8 kHz), reduced trunk for CPU wall-clock."""
-    return dataclasses.replace(
-        tft.tftnn_config(),
-        freq_bins=64,
-        channels=16,
-        att_dim=8,
-        num_heads=1,
-        gru_hidden=16,
-        dilation_rates=(1, 2, 4),
-    )
+    """Paper front end (512/128 @ 8 kHz), reduced trunk for CPU wall-clock —
+    the same profile the launcher's --reduced flag uses."""
+    return reduced_cfg(tft.tftnn_config())
 
 
 def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
@@ -68,20 +79,100 @@ def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
     }
 
 
+def run_sharded_point(params, cfg, n_shards: int, per_shard: int,
+                      audio: np.ndarray, quant, step_cache: dict) -> dict:
+    """One shard-sweep point: fill n_shards x per_shard sessions, pump_all.
+
+    ``step_cache`` is shared across sweep points so each device compiles the
+    hop step once for the whole sweep (cfg/capacity/quant are constant)."""
+    pool = ShardedSessionPool(params, cfg, per_shard, shards=n_shards,
+                              quant=quant, step_cache=step_cache)
+    n_sessions = n_shards * per_shard
+    handles = [pool.attach(f"bench-{i}", rebalance_on_full=True)
+               for i in range(n_sessions)]
+    # warm up each shard's one compilation outside the timed window
+    for i, h in enumerate(handles):
+        pool.feed(h, audio[i % audio.shape[0]][: 2 * cfg.hop])
+    pool.pump_all()
+    warm_hops = sum(h.stats.hops for h in handles)  # exclude from timed audio
+    for i, h in enumerate(handles):
+        pool.feed(h, audio[i % audio.shape[0]])
+    t0 = time.perf_counter()
+    pool.pump_all()
+    wall = time.perf_counter() - t0
+    timed_hops = sum(h.stats.hops for h in handles) - warm_hops
+    audio_sec = timed_hops * cfg.hop / pool.sample_rate
+    rtf = wall / audio_sec
+    for h in handles:
+        pool.detach(h)
+    return {
+        "sessions": n_sessions,
+        "aggregate_rtf": rtf,
+        # sustainable real-time streams: total audio seconds / wall second.
+        # rtf's denominator already sums audio over every session, so this is
+        # 1/rtf — NOT sessions/rtf, which would double-count session count.
+        "rt_capacity": 1.0 / rtf if rtf > 0 else float("inf"),
+        "wall_s": wall,
+    }
+
+
+def _shard_sweep(n_max: int) -> list:
+    s, out = 1, []
+    while s < n_max:
+        out.append(s)
+        s *= 2
+    out.append(n_max)
+    return sorted(set(out))
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--capacity", type=int, default=16)
-    ap.add_argument("--seconds", type=float, default=1.0, help="audio per session")
-    ap.add_argument("--quant", action="store_true", help="serve on the FP10 grid")
+    ap = argparse.ArgumentParser(
+        description="Multi-session server throughput: sessions x RTF "
+        "(single pool) or shard-count sweep (--shards, one pool per device)."
+    )
+    ap.add_argument("--capacity", type=int, default=16,
+                    help="slots compiled into each pool (per shard when --shards > 0)")
+    ap.add_argument("--seconds", type=float, default=1.0,
+                    help="seconds of audio fed to each session")
+    ap.add_argument("--quant", action="store_true",
+                    help="serve on the paper's FP10 deployment grid")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="sweep ShardedSessionPool from 1 up to N shards at full "
+                    "per-shard load (0 = single-pool sessions sweep); fake CPU "
+                    "devices with XLA_FLAGS=--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
 
     cfg = bench_cfg()
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
-    pool = SessionPool(params, cfg, capacity=args.capacity, quant=FP10 if args.quant else None)
+    quant = FP10 if args.quant else None
 
-    samples = int(args.seconds * pool.sample_rate) // cfg.hop * cfg.hop
+    sample_rate = 8000
+    # at least one whole hop, else nothing is ever enhanced (div-by-zero)
+    samples = max(cfg.hop, int(args.seconds * sample_rate) // cfg.hop * cfg.hop)
     noisy, _ = batch_for_step(1, 0, batch=4, num_samples=samples)
     audio = np.asarray(noisy, np.float32)
+    budget_ms = cfg.hop / sample_rate * 1e3
+
+    if args.shards > 0:
+        n_dev = len(jax.local_devices())
+        print(f"# shard sweep up to {args.shards}, capacity/shard={args.capacity}, "
+              f"audio/session={args.seconds}s, {n_dev} local device(s), "
+              f"quant={'fp10' if args.quant else 'fp32'}")
+        print("name,us_per_call,derived")
+        step_cache = {}  # one compilation per device across the whole sweep
+        for s in _shard_sweep(args.shards):
+            r = run_sharded_point(params, cfg, s, args.capacity, audio, quant,
+                                  step_cache)
+            emit(
+                f"shards={s}",
+                r["wall_s"] * 1e6,
+                f"sessions={r['sessions']} aggregate_rtf={r['aggregate_rtf']:.3f} "
+                f"rt_capacity={r['rt_capacity']:.1f} "
+                f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
+            )
+        return
+
+    pool = SessionPool(params, cfg, capacity=args.capacity, quant=quant)
 
     # warm up the single compilation the whole sweep reuses
     w = pool.attach()
@@ -89,7 +180,6 @@ def main() -> None:
     pool.pump()
     pool.detach(w)
 
-    budget_ms = cfg.hop / pool.sample_rate * 1e3
     print(f"# capacity={args.capacity} audio/session={args.seconds}s "
           f"hop_budget={budget_ms:.1f}ms quant={'fp10' if args.quant else 'fp32'}")
     print("name,us_per_call,derived")

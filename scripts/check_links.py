@@ -1,0 +1,66 @@
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link target that is not an external URL or a pure
+in-page anchor: the referenced file/directory must exist relative to the
+file containing the link. Run from anywhere:
+
+    python scripts/check_links.py
+
+Exit code 0 = all links resolve; 1 = at least one broken link (listed on
+stderr). Used by the CI ``docs`` job.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# [text](target) or [text](target "title") — the target itself has no
+# whitespace; an optional quoted title may follow it
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def broken_links(md: Path) -> list:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks and inline code spans: snippets may hold
+    # literal brackets/parens (e.g. indexing followed by a call) that would
+    # otherwise parse as links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    text = re.sub(r"`[^`]*`", "", text)
+    for target in LINK.findall(text):
+        if target.startswith(EXTERNAL):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # pure in-page anchor
+            continue
+        if not (md.parent / path).resolve().exists():
+            try:
+                rel = md.relative_to(ROOT)
+            except ValueError:
+                rel = md
+            errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing = [f for f in (ROOT / "README.md", ROOT / "docs") if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"missing: {f.relative_to(ROOT)}", file=sys.stderr)
+        return 1
+    errors = [e for f in files if f.exists() for e in broken_links(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    checked = len([f for f in files if f.exists()])
+    print(f"checked {checked} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,6 +99,26 @@ def floats(
     return SearchStrategy(draw, f"floats({lo}, {hi})")
 
 
+_TEXT_ALPHABET = (
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789-_./: "
+)
+
+
+def text(
+    alphabet: Sequence[str] | None = None,
+    *,
+    min_size: int = 0,
+    max_size: int | None = None,
+) -> SearchStrategy:
+    chars = list(alphabet) if alphabet is not None else list(_TEXT_ALPHABET)
+    hi = (min_size + 16) if max_size is None else max_size
+
+    def draw(r: random.Random) -> str:
+        return "".join(r.choice(chars) for _ in range(r.randint(min_size, hi)))
+
+    return SearchStrategy(draw, f"text({min_size}, {hi})")
+
+
 def booleans() -> SearchStrategy:
     return SearchStrategy(lambda r: r.random() < 0.5, "booleans()")
 
@@ -224,6 +244,7 @@ def install() -> None:
     for name in (
         "integers",
         "floats",
+        "text",
         "booleans",
         "just",
         "none",

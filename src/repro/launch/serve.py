@@ -2,7 +2,11 @@
 
 Loads TFTNN weights (or inits fresh), then enhances audio hop-by-hop with
 16 ms algorithmic latency, reporting per-hop wall time against the real-time
-budget. ``--task lm`` instead runs batched greedy decode on a reduced arch.
+budget. Other tasks: ``--task pool`` serves many sessions through one
+``SessionPool``; ``--task sharded`` runs one pool per device behind the
+consistent-hash router (``--shards N``; fake CPU devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--task lm`` runs
+batched greedy decode on a reduced arch. See docs/serving.md.
 """
 
 from __future__ import annotations
@@ -15,6 +19,14 @@ import jax
 import jax.numpy as jnp
 
 
+def reduced_cfg(cfg):
+    """The CPU-demo trunk shared by every serving task's ``--reduced`` flag
+    (and by ``benchmarks/server_throughput.py``): paper front end, small
+    model."""
+    return dataclasses.replace(cfg, freq_bins=64, channels=16, att_dim=8,
+                               num_heads=1, gru_hidden=16, dilation_rates=(1, 2, 4))
+
+
 def serve_se(args) -> None:
     from repro.audio.metrics import all_metrics
     from repro.audio.synthetic import batch_for_step
@@ -24,8 +36,7 @@ def serve_se(args) -> None:
 
     cfg = tft.tftnn_config()
     if args.reduced:
-        cfg = dataclasses.replace(cfg, freq_bins=64, channels=16, att_dim=8,
-                                  num_heads=1, gru_hidden=16, dilation_rates=(1, 2, 4))
+        cfg = reduced_cfg(cfg)
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     if args.ckpt_dir:
         try:
@@ -68,8 +79,7 @@ def serve_pool(args) -> None:
 
     cfg = tft.tftnn_config()
     if args.reduced:
-        cfg = dataclasses.replace(cfg, freq_bins=64, channels=16, att_dim=8,
-                                  num_heads=1, gru_hidden=16, dilation_rates=(1, 2, 4))
+        cfg = reduced_cfg(cfg)
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
                        quant=FP10 if args.quant else None)
@@ -82,6 +92,36 @@ def serve_pool(args) -> None:
     print(pool.report())
     for s in sessions:
         pool.detach(s)
+
+
+def serve_sharded(args) -> None:
+    """Sharded server: --shards SessionPools behind the consistent-hash router."""
+    from repro.audio.synthetic import batch_for_step
+    from repro.core.quant import FP10
+    from repro.models import tftnn as tft
+    from repro.serve import ShardedSessionPool
+
+    cfg = tft.tftnn_config()
+    if args.reduced:
+        cfg = reduced_cfg(cfg)
+    params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    n_dev = len(jax.local_devices())
+    per_shard = max(1, -(-args.batch // args.shards))  # ceil; hash skew absorbed below
+    pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
+                              quant=FP10 if args.quant else None)
+    print(f"{args.shards} shards x {per_shard} slots over {n_dev} local device(s)")
+    noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
+    audio = jnp.asarray(noisy)
+    # rebalance_on_full: consistent hashing is not perfectly uniform, so a
+    # near-capacity fleet migrates sessions off a hot shard instead of failing
+    handles = [pool.attach(f"client-{i}", rebalance_on_full=True)
+               for i in range(args.batch)]
+    for i, h in enumerate(handles):
+        pool.feed(h, audio[i])
+    pool.pump_all()
+    print(pool.report())
+    for h in handles:
+        pool.detach(h)
 
 
 def serve_lm(args) -> None:
@@ -102,9 +142,11 @@ def serve_lm(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", choices=["se", "pool", "lm"], default="se")
+    ap.add_argument("--task", choices=["se", "pool", "sharded", "lm"], default="se")
     ap.add_argument("--quant", action="store_true",
-                    help="pool task: serve on the paper's FP10 grid")
+                    help="pool/sharded tasks: serve on the paper's FP10 grid")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="sharded task: number of SessionPool shards")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=1)
@@ -112,7 +154,8 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
-    {"se": serve_se, "pool": serve_pool, "lm": serve_lm}[args.task](args)
+    {"se": serve_se, "pool": serve_pool, "sharded": serve_sharded,
+     "lm": serve_lm}[args.task](args)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
 ``streaming_se`` holds the pure batched hop math (one implementation shared
 by the offline scan, the quantized path, and the server); ``session_server``
-multiplexes many client sessions onto that hop step.
+multiplexes many client sessions onto that hop step; ``sharded_pool`` runs
+one such pool per device behind a consistent-hash router. Architecture tour:
+``docs/serving.md``.
 """
 
 from repro.serve.session_server import (  # noqa: F401
@@ -11,6 +13,13 @@ from repro.serve.session_server import (  # noqa: F401
     SessionError,
     SessionPool,
     SessionStats,
+    SessionTicket,
+)
+from repro.serve.sharded_pool import (  # noqa: F401
+    HashRing,
+    ShardedSession,
+    ShardedSessionPool,
+    ShardFullError,
 )
 from repro.serve.streaming_se import (  # noqa: F401
     StreamState,

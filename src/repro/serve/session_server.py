@@ -22,6 +22,13 @@ client sessions onto a single jit-compiled batched hop step
 - **Accounting** — per-session hops/samples processed, processing-time share,
   and real-time factor (RTF = compute time / audio time); pool-wide step
   latency percentiles for the 16 ms budget check.
+- **Sharding seams** — a pool can be pinned to one device (``device=``), its
+  batched step can be split into a non-blocking ``dispatch()`` and a blocking
+  ``collect()`` so a router can overlap many shards' device work
+  (``repro.serve.sharded_pool.ShardedSessionPool.pump_all``), live sessions
+  can be snapshotted/restored across pools (``export_session`` /
+  ``import_session`` — the unit of shard rebalancing), and ``shard_stats()``
+  exports the load counters the router balances on.
 
 Quantized serving: pass ``quant=repro.core.quant.FP10`` (or FXP8 — the
 "int8-class" fixed-point grid) to run the pool on the paper's deployment
@@ -33,7 +40,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,11 +59,24 @@ Pytree = dict
 
 
 class SessionError(RuntimeError):
-    """Invalid session operation (detached handle, unknown session, ...)."""
+    """Invalid session operation.
+
+    Raised when a call references a session that is not live on this pool:
+    a handle that was already detached, a handle belonging to a different
+    pool, or (on the sharded router) an unknown session id. The pool's own
+    state is never modified by a failing call.
+    """
 
 
 class PoolFullError(SessionError):
-    """attach() on a pool whose every slot is occupied."""
+    """``attach()`` on a pool whose every slot is occupied.
+
+    Capacity is fixed at construction (it is baked into the compiled batched
+    step), so the only remedies are detaching a session or creating a pool
+    with a larger capacity. The sharded router raises the subclass
+    ``repro.serve.sharded_pool.ShardFullError`` instead when only the routed
+    shard — not the whole fleet — is out of slots.
+    """
 
 
 @dataclasses.dataclass
@@ -85,6 +105,35 @@ class Session:
     slot: int
     stats: SessionStats = dataclasses.field(default_factory=SessionStats)
     detached: bool = False
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One in-flight batched step (between dispatch() and collect())."""
+
+    out: jax.Array
+    active: np.ndarray
+    t0: float
+    dt: Optional[float] = None  # dispatch->ready, set by wait_ready()
+
+
+@dataclasses.dataclass
+class SessionTicket:
+    """Portable snapshot of one live session — the unit of migration.
+
+    Produced by ``SessionPool.export_session`` and consumed by
+    ``SessionPool.import_session`` (possibly on a pool pinned to a different
+    device): the session's slice of the batched recurrent state (as host
+    numpy arrays, so re-import places them wherever the target pool lives),
+    its queued-but-unprocessed input, its enhanced-but-unread output, and its
+    accounting. Importing a ticket resumes the stream bit-for-bit where the
+    export left off.
+    """
+
+    state: Any  # per-slot StreamState leaves (numpy, no leading batch axis)
+    pending_in: np.ndarray  # raw samples fed but not yet hopped
+    unread_out: np.ndarray  # enhanced samples produced but not yet read
+    stats: SessionStats
 
 
 class _RingBuffer:
@@ -132,6 +181,30 @@ class SessionPool:
         pool.pump()                  # run batched hop steps while audio waits
         audio = pool.read(s)         # enhanced samples ready so far
         pool.detach(s)
+
+    Args:
+        params: TFTNN parameter pytree (weights are quantized once here when
+            ``quant`` is set).
+        cfg: model/front-end config; ``cfg.hop`` fixes the step granularity.
+        capacity: number of slots. Baked into the compiled step — churn never
+            changes it, only a new pool can.
+        quant: optional ``repro.core.quant`` grid (FP10/FXP8) for the paper's
+            deployment number formats.
+        sample_rate: audio sample rate for RTF accounting (paper: 8 kHz).
+        donate: donate the recurrent state to the jit step (in-place update).
+        device: pin params, state, and per-hop inputs to this ``jax.Device``.
+            ``None`` (default) uses JAX's default placement. This is the
+            shard-placement seam: ``ShardedSessionPool`` builds one pool per
+            device so each shard's state lives (and stays) on its own chip.
+        step_fn: a pre-built hop step (from ``make_stream_hop(params, cfg,
+            quant=quant, donate=donate)``) to use instead of compiling a
+            fresh one. Pools that share a device, params, config, quant, and
+            capacity can share ONE compiled step this way — the router uses
+            it so co-located shards don't pay N identical XLA compilations.
+            The caller is responsible for the match.
+
+    Raises:
+        ValueError: ``capacity < 1``.
     """
 
     def __init__(
@@ -143,6 +216,8 @@ class SessionPool:
         quant: Optional[QuantSpec] = None,
         sample_rate: int = 8000,
         donate: bool = True,
+        device: Optional[jax.Device] = None,
+        step_fn=None,
     ) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -150,14 +225,26 @@ class SessionPool:
         self.capacity = capacity
         self.sample_rate = sample_rate
         self.quant = quant
-        self._step = make_stream_hop(params, cfg, quant=quant, donate=donate)
-        self._state: StreamState = init_stream(params, cfg, capacity)
+        self.device = device
+        if device is not None:
+            params = jax.device_put(params, device)
+        self._step = (
+            step_fn
+            if step_fn is not None
+            else make_stream_hop(params, cfg, quant=quant, donate=donate)
+        )
+        state = init_stream(params, cfg, capacity)
+        self._state: StreamState = (
+            jax.device_put(state, device) if device is not None else state
+        )
         self._slot_session: List[Optional[Session]] = [None] * capacity
         self._sessions: Dict[int, Session] = {}
         self._rings: List[_RingBuffer] = [_RingBuffer() for _ in range(capacity)]
         self._out: List[List[np.ndarray]] = [[] for _ in range(capacity)]
         self._sid_counter = itertools.count()
         self._hop_buf = np.zeros((capacity, cfg.hop), np.float32)
+        # in-flight batched step launched by dispatch(), drained by collect()
+        self._pending: Optional[_Pending] = None
         self.step_seconds: List[float] = []  # pool-wide per-step latency
 
     # -- session lifecycle --------------------------------------------------
@@ -167,7 +254,19 @@ class SessionPool:
         return len(self._sessions)
 
     def attach(self) -> Session:
-        """Claim a free slot for a new stream; O(1), no recompilation."""
+        """Claim a free slot for a new stream.
+
+        O(1): only flips the slot's mask and zeroes its state slice via
+        ``reset_slots`` — array shapes never change, so attach/detach churn
+        NEVER triggers recompilation of the batched hop step (the pool's one
+        compilation happens on the first ``step()``/``dispatch()``).
+
+        Returns:
+            A fresh ``Session`` handle (zeroed stream state, empty buffers).
+
+        Raises:
+            PoolFullError: every slot is occupied.
+        """
         try:
             slot = self._slot_session.index(None)
         except ValueError:
@@ -184,7 +283,18 @@ class SessionPool:
         return sess
 
     def detach(self, sess: Session) -> np.ndarray:
-        """Release the session's slot; returns any unread enhanced audio."""
+        """Release the session's slot.
+
+        The slot becomes immediately reusable; the next occupant starts from
+        zeroed state (``attach`` resets it), so no audio leaks between
+        tenants. Queued-but-unprocessed input is dropped.
+
+        Returns:
+            Any enhanced-but-unread audio (may be empty).
+
+        Raises:
+            SessionError: the handle is not live on this pool (double detach).
+        """
         self._check(sess)
         tail = self.read(sess)
         sess.detached = True
@@ -199,7 +309,17 @@ class SessionPool:
     # -- audio I/O ----------------------------------------------------------
 
     def feed(self, sess: Session, samples) -> None:
-        """Queue raw audio for a session. Any chunk length is accepted."""
+        """Queue raw audio for a session.
+
+        Args:
+            sess: a live handle from ``attach``.
+            samples: any array-like of float samples, any length — a 37-sample
+                dribble or a 10-second blob. Ring-buffered; compute happens in
+                whole hops during ``pump()``/``step()``.
+
+        Raises:
+            SessionError: the handle is not live on this pool.
+        """
         self._check(sess)
         # copy: callers often reuse one capture buffer between feed() calls
         arr = np.array(samples, np.float32, copy=True).reshape(-1)
@@ -207,8 +327,18 @@ class SessionPool:
         sess.stats.samples_in += arr.size
 
     def read(self, sess: Session) -> np.ndarray:
-        """Pop all enhanced audio produced for this session so far."""
+        """Pop all enhanced audio produced for this session so far.
+
+        Returns:
+            The enhanced samples not yet read (possibly empty). Each sample is
+            final — the COLA normalizer makes every emitted hop exact with no
+            lookahead — so callers can play/forward it immediately.
+
+        Raises:
+            SessionError: the handle is not live on this pool.
+        """
         self._check(sess)
+        self.collect()  # fold any in-flight dispatch into the output queues
         chunks = self._out[sess.slot]
         self._out[sess.slot] = []
         if not chunks:
@@ -219,12 +349,22 @@ class SessionPool:
 
     # -- the batched hop loop ----------------------------------------------
 
-    def step(self) -> int:
-        """Run ONE batched hop step over every session with a full hop queued.
+    def dispatch(self) -> int:
+        """Launch ONE batched hop step without waiting for its result.
 
-        Returns the number of sessions stepped (0 = nothing ready, no compute
-        spent). Starved and empty slots are masked: their state is untouched.
+        Pops one hop from every session with a full hop queued, enqueues the
+        jit step on the pool's device, and records the in-flight output for a
+        later ``collect()``. Because JAX dispatch is asynchronous, this
+        returns as soon as the work is enqueued — a router can dispatch every
+        shard before blocking on any of them, overlapping all devices' work
+        (``ShardedSessionPool.pump_all``).
+
+        Returns:
+            Number of sessions included in the launched step (0 = nothing
+            ready, no compute enqueued). Starved/empty slots are masked inside
+            the step: their state is kept bit-for-bit.
         """
+        self.collect()  # at most one step in flight per pool
         hop = self.cfg.hop
         active = np.zeros((self.capacity,), bool)
         for slot, sess in enumerate(self._slot_session):
@@ -236,20 +376,74 @@ class SessionPool:
             return 0
 
         t0 = time.perf_counter()
-        self._state, out = self._step(
-            self._state, jnp.asarray(self._hop_buf), jnp.asarray(active)
-        )
-        out = np.asarray(jax.block_until_ready(out))
-        dt = time.perf_counter() - t0
-        self.step_seconds.append(dt)
+        if self.device is not None:
+            hops = jax.device_put(self._hop_buf, self.device)
+            act = jax.device_put(active, self.device)
+        else:
+            hops, act = jnp.asarray(self._hop_buf), jnp.asarray(active)
+        self._state, out = self._step(self._state, hops, act)
+        self._pending = _Pending(out=out, active=active, t0=t0)
+        return n_active
 
-        share = dt / n_active
-        for slot in np.flatnonzero(active):
+    def wait_ready(self) -> None:
+        """Block until the in-flight step's output is ready (no accounting).
+
+        Records the dispatch→ready latency for the later ``collect()``. A
+        router calls this on every shard before collecting any of them, so
+        each shard's recorded step latency is its own completion time — not
+        inflated by the host-side work of draining the other shards.
+        """
+        if self._pending is not None and self._pending.dt is None:
+            jax.block_until_ready(self._pending.out)
+            self._pending.dt = time.perf_counter() - self._pending.t0
+
+    def collect(self, proc_share: Optional[float] = None) -> int:
+        """Block on the in-flight step (if any) and distribute its output.
+
+        Args:
+            proc_share: per-session compute-seconds to charge for this step
+                instead of the default ``latency / n_active``. A router
+                passes ``round_wall / total_sessions_stepped`` here so that
+                summed ``proc_seconds`` across ALL shards equals the round's
+                wall-clock — device work that overlapped is not
+                double-counted into session RTFs.
+
+        Returns:
+            Number of sessions whose output was delivered (0 = nothing was in
+            flight). Safe to call at any time; idempotent until the next
+            ``dispatch()``.
+        """
+        if self._pending is None:
+            return 0
+        self.wait_ready()
+        pending = self._pending
+        self._pending = None
+        out = np.asarray(pending.out)
+        self.step_seconds.append(pending.dt)
+
+        n_active = int(pending.active.sum())
+        share = pending.dt / n_active if proc_share is None else proc_share
+        for slot in np.flatnonzero(pending.active):
             sess = self._slot_session[slot]
             self._out[slot].append(out[slot])
             sess.stats.hops += 1
             sess.stats.proc_seconds += share
         return n_active
+
+    def step(self) -> int:
+        """Run ONE batched hop step over every session with a full hop queued.
+
+        Equivalent to ``dispatch()`` + ``collect()`` back to back.
+
+        Returns:
+            The number of sessions stepped (0 = nothing ready, no compute
+            spent). Starved and empty slots are masked: their state is
+            untouched.
+        """
+        n = self.dispatch()
+        if n:
+            self.collect()
+        return n
 
     def pump(self) -> int:
         """Step until no session has a full hop buffered; returns total steps."""
@@ -257,6 +451,88 @@ class SessionPool:
         while self.step():
             steps += 1
         return steps
+
+    # -- sharding seams: stats export + session migration -------------------
+
+    def shard_stats(self) -> Dict[str, object]:
+        """Shard-local load counters, exported for a router to balance on.
+
+        Returns:
+            dict with ``capacity``, ``active``, ``free`` (slot headroom),
+            ``hops`` (total hops enhanced for currently-live sessions),
+            ``backlog_hops`` (full hops queued but not yet processed —
+            the pressure signal), ``p50_ms`` (median dispatch→ready step
+            latency), and ``device`` (where this shard's state lives).
+        """
+        hop = self.cfg.hop
+        backlog = sum(
+            len(self._rings[slot]) // hop
+            for slot, s in enumerate(self._slot_session)
+            if s is not None
+        )
+        return {
+            "capacity": self.capacity,
+            "active": self.num_active,
+            "free": self.capacity - self.num_active,
+            "hops": sum(s.stats.hops for s in self._sessions.values()),
+            "backlog_hops": backlog,
+            "p50_ms": self.latency_percentiles((50,))[50],
+            "device": str(self.device) if self.device is not None else "default",
+        }
+
+    def export_session(self, sess: Session) -> SessionTicket:
+        """Snapshot a live session and release its slot (migration source).
+
+        Extracts the session's slice of the batched recurrent state to host
+        memory along with its queued input, unread output, and stats, then
+        frees the slot exactly like ``detach`` (without dropping anything).
+        Feed the ticket to another pool's ``import_session`` — same or
+        different device — and the stream resumes bit-for-bit.
+
+        Raises:
+            SessionError: the handle is not live on this pool.
+        """
+        self._check(sess)
+        self.collect()  # the snapshot must include any in-flight step
+        slot = sess.slot
+        state = jax.tree_util.tree_map(lambda leaf: np.asarray(leaf[slot]), self._state)
+        ring = self._rings[slot]
+        pending = ring.pop(len(ring)) if len(ring) else np.zeros((0,), np.float32)
+        chunks = self._out[slot]
+        unread = np.concatenate(chunks) if chunks else np.zeros((0,), np.float32)
+        sess.detached = True
+        self._slot_session[slot] = None
+        self._out[slot] = []
+        del self._sessions[sess.sid]
+        return SessionTicket(
+            state=state, pending_in=pending, unread_out=unread, stats=sess.stats
+        )
+
+    def import_session(self, ticket: SessionTicket) -> Session:
+        """Resume an exported session in this pool (migration target).
+
+        Claims a slot via ``attach`` and overwrites its zeroed state slice
+        with the ticket's snapshot (host numpy → this pool's device), then
+        restores the queued input, unread output, and accounting.
+
+        Returns:
+            A fresh ``Session`` handle for the resumed stream (new sid/slot;
+            the exported handle stays dead).
+
+        Raises:
+            PoolFullError: this pool has no free slot.
+        """
+        sess = self.attach()
+        slot = sess.slot
+        self._state = jax.tree_util.tree_map(
+            lambda leaf, val: leaf.at[slot].set(val), self._state, ticket.state
+        )
+        if ticket.pending_in.size:
+            self._rings[slot].push(ticket.pending_in)
+        if ticket.unread_out.size:
+            self._out[slot] = [ticket.unread_out]
+        sess.stats = ticket.stats
+        return sess
 
     # -- reporting ----------------------------------------------------------
 

@@ -1,0 +1,416 @@
+"""Sharded session pools: one ``SessionPool`` per device behind a router.
+
+The ROADMAP's first scaling step: a single ``SessionPool`` is one compiled
+batched hop step on one device; capacity beyond that comes from running N
+pools ("shards"), each pinned to its own ``jax.Device``, behind a
+**consistent-hash router** keyed on session id.
+
+Why consistent hashing instead of round-robin or least-loaded:
+
+- **Stickiness for free** — a streaming session's recurrent state lives on
+  exactly one shard; the hash makes every ``attach``/``feed``/``read`` for a
+  given session id land on that shard with no routing table to replicate
+  (any front-end holding the same ring routes identically).
+- **Minimal reshuffle** — growing N→N+1 shards remaps only ~1/(N+1) of the
+  key space (each shard contributes ``vnodes`` points to the ring), so a
+  fleet resize migrates few sessions instead of all of them.
+
+The router deliberately does NOT spill a session to a neighbouring shard
+when its home shard is full — that would silently break stickiness. It
+raises ``ShardFullError`` (home shard full, fleet has room: rebalance or
+retry) vs ``PoolFullError`` (every shard full: the fleet is at capacity).
+``rebalance()`` restores balance explicitly by migrating sessions through
+``SessionPool.export_session``/``import_session`` — migrated streams resume
+bit-for-bit on the new shard.
+
+``pump_all()`` is the scaling hot path: it dispatches every shard's batched
+hop step (asynchronous JAX enqueue, non-blocking) before collecting any
+shard's output, so N devices compute concurrently instead of serially.
+
+Capacity therefore scales linearly with device count as long as the host can
+keep the rings fed — measured by ``benchmarks/server_throughput.py
+--shards`` (fake multiple CPU devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+See ``docs/serving.md`` for the full architecture.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import itertools
+import time
+from typing import Dict, Hashable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.quant import QuantSpec
+from repro.models import tftnn as tft_mod
+from repro.serve.session_server import (
+    PoolFullError,
+    Session,
+    SessionError,
+    SessionPool,
+)
+from repro.serve.streaming_se import make_stream_hop
+
+Pytree = dict
+
+
+class ShardFullError(PoolFullError):
+    """``attach()`` routed to a shard with no free slot while other shards
+    still have room.
+
+    Consistent hashing pins a session id to one shard, so the router refuses
+    to place it elsewhere (stickiness would silently break). Callers can
+    ``rebalance()`` and retry, or construct the pool with larger per-shard
+    capacity. When *every* shard is full the router raises plain
+    ``PoolFullError`` instead.
+    """
+
+
+def _hash64(data: bytes) -> int:
+    """Stable 64-bit hash (blake2b) — identical across processes and runs,
+    unlike Python's seeded ``hash()``."""
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(), "big")
+
+
+class HashRing:
+    """Consistent-hash ring mapping session ids to shard indices.
+
+    Each shard owns ``vnodes`` points on a 64-bit ring; a key routes to the
+    first shard point clockwise from its hash. Routing is deterministic
+    (blake2b, not Python's per-process ``hash``), so two ``HashRing(n)``
+    instances — in different processes — agree on every key.
+    """
+
+    def __init__(self, n_shards: int, vnodes: int = 64) -> None:
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        points = sorted(
+            (_hash64(f"shard{s}:vnode{v}".encode()), s)
+            for s in range(n_shards)
+            for v in range(vnodes)
+        )
+        self.n_shards = n_shards
+        self._keys = [p[0] for p in points]
+        self._shards = [p[1] for p in points]
+
+    def route(self, session_id: Hashable) -> int:
+        """Map a session id to its home shard index (pure, deterministic)."""
+        h = _hash64(str(session_id).encode())
+        i = bisect.bisect_right(self._keys, h) % len(self._keys)
+        return self._shards[i]
+
+
+@dataclasses.dataclass
+class ShardedSession:
+    """Client handle returned by ``ShardedSessionPool.attach``.
+
+    ``shard`` is the session's *current* home (it changes on ``rebalance()``,
+    while ``HashRing.route(session_id)`` keeps returning the original hash
+    home); ``inner`` is the live per-shard ``Session`` handle.
+    """
+
+    session_id: Hashable
+    shard: int
+    inner: Session
+
+    @property
+    def stats(self):
+        """Per-session accounting (``SessionStats``) — survives migration."""
+        return self.inner.stats
+
+
+class ShardedSessionPool:
+    """N per-device ``SessionPool`` shards behind a consistent-hash router.
+
+    Same client surface as ``SessionPool`` (attach/feed/read/detach), plus
+    ``pump_all()`` (overlapped dispatch across shards), ``rebalance()``
+    (session migration off overloaded shards), and ``shard_stats()``.
+
+    Args:
+        params: TFTNN parameter pytree; replicated onto every shard's device.
+        cfg: model/front-end config shared by all shards.
+        capacity: slots PER SHARD (total capacity = ``capacity * shards``).
+        shards: number of shards. Defaults to one per local device. May
+            exceed the device count — shards then round-robin over devices,
+            which is how CPU tests exercise multi-shard routing on one core.
+        devices: explicit device list; defaults to ``jax.local_devices()``.
+        quant / sample_rate / donate: forwarded to every ``SessionPool``.
+        vnodes: virtual nodes per shard on the hash ring (more = smoother
+            key-space balance at slightly larger ring).
+        step_cache: optional mutable dict mapping device -> (device-resident
+            params, compiled step). Co-located shards always share one entry;
+            pass the same dict to several ``ShardedSessionPool`` instances
+            with identical params/cfg/quant/donate/capacity (e.g. a benchmark
+            sweeping shard counts) to also share compilations ACROSS pools.
+
+    Raises:
+        ValueError: ``shards < 1`` or empty ``devices``.
+    """
+
+    def __init__(
+        self,
+        params: Pytree,
+        cfg: tft_mod.TFTConfig,
+        capacity: int,
+        *,
+        shards: Optional[int] = None,
+        devices: Optional[Sequence[jax.Device]] = None,
+        quant: Optional[QuantSpec] = None,
+        sample_rate: int = 8000,
+        donate: bool = True,
+        vnodes: int = 64,
+        step_cache: Optional[dict] = None,
+    ) -> None:
+        if devices is None:
+            devices = jax.local_devices()
+        if not devices:
+            raise ValueError("need at least one device")
+        if shards is None:
+            shards = len(devices)
+        if shards < 1:
+            raise ValueError("shards must be >= 1")
+        self.cfg = cfg
+        self.n_shards = shards
+        # Shards co-located on one device (shards > len(devices), e.g. CPU
+        # tests) share ONE device-resident params copy and ONE compiled hop
+        # step instead of paying per-shard duplicates.
+        shared = step_cache if step_cache is not None else {}
+        self._pools: List[SessionPool] = []
+        for i in range(shards):
+            dev = devices[i % len(devices)]
+            if dev not in shared:
+                placed = jax.device_put(params, dev)
+                shared[dev] = (
+                    placed,
+                    make_stream_hop(placed, cfg, quant=quant, donate=donate),
+                )
+            placed, step = shared[dev]
+            self._pools.append(
+                SessionPool(
+                    placed,
+                    cfg,
+                    capacity,
+                    quant=quant,
+                    sample_rate=sample_rate,
+                    donate=donate,
+                    device=dev,
+                    step_fn=step,
+                )
+            )
+        self._ring = HashRing(shards, vnodes=vnodes)
+        self._sessions: Dict[Hashable, ShardedSession] = {}
+        self._auto_sid = itertools.count()
+
+    # -- capacity / introspection -------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Total slots across all shards."""
+        return sum(p.capacity for p in self._pools)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._sessions)
+
+    @property
+    def sample_rate(self) -> int:
+        return self._pools[0].sample_rate
+
+    def route(self, session_id: Hashable) -> int:
+        """The hash home for a session id (before any rebalancing)."""
+        return self._ring.route(session_id)
+
+    # -- session lifecycle --------------------------------------------------
+
+    def attach(
+        self, session_id: Optional[Hashable] = None, *, rebalance_on_full: bool = False
+    ) -> ShardedSession:
+        """Route a new session to its hash home and claim a slot there.
+
+        Args:
+            session_id: any hashable id (caller's connection/user id). The
+                same id always routes to the same shard. Defaults to a
+                generated ``"auto-N"`` id, skipping any already-attached ids.
+            rebalance_on_full: when the home shard is full but the fleet has
+                room, migrate one session off the home shard to the shard
+                with the most headroom and retry, instead of raising.
+
+        Returns:
+            A ``ShardedSession`` handle (also resolvable later by raw id).
+
+        Raises:
+            SessionError: ``session_id`` is already attached.
+            ShardFullError: home shard full, other shards have room (and
+                ``rebalance_on_full`` is off or rebalancing freed nothing).
+            PoolFullError: every shard is full.
+        """
+        if session_id is None:
+            session_id = f"auto-{next(self._auto_sid)}"
+            while session_id in self._sessions:  # caller may have used the name
+                session_id = f"auto-{next(self._auto_sid)}"
+        if session_id in self._sessions:
+            raise SessionError(f"session id {session_id!r} is already attached")
+        shard = self._ring.route(session_id)
+        pool = self._pools[shard]
+        if pool.num_active >= pool.capacity:
+            if all(p.num_active >= p.capacity for p in self._pools):
+                raise PoolFullError(
+                    f"all {self.n_shards} shards are full "
+                    f"({self.capacity} sessions); detach one first"
+                )
+            if rebalance_on_full:
+                self._drain_one(shard)
+            if pool.num_active >= pool.capacity:
+                raise ShardFullError(
+                    f"shard {shard} is full ({pool.capacity} sessions) though "
+                    f"other shards have room; rebalance() or retry later"
+                )
+        handle = ShardedSession(session_id=session_id, shard=shard, inner=pool.attach())
+        self._sessions[session_id] = handle
+        return handle
+
+    def _resolve(self, sess) -> ShardedSession:
+        """Accept a ``ShardedSession`` handle or a raw session id."""
+        if isinstance(sess, ShardedSession):
+            handle = self._sessions.get(sess.session_id)
+            if handle is not sess:
+                raise SessionError(
+                    f"session {sess.session_id!r} is not attached to this router"
+                )
+            return sess
+        handle = self._sessions.get(sess)
+        if handle is None:
+            raise SessionError(f"unknown session id {sess!r}")
+        return handle
+
+    def detach(self, sess) -> np.ndarray:
+        """Release a session's slot on its shard; returns unread audio.
+
+        Raises:
+            SessionError: unknown/already-detached session.
+        """
+        handle = self._resolve(sess)
+        tail = self._pools[handle.shard].detach(handle.inner)
+        del self._sessions[handle.session_id]
+        return tail
+
+    # -- audio I/O ----------------------------------------------------------
+
+    def feed(self, sess, samples) -> None:
+        """Queue raw audio on the session's shard (any chunk length)."""
+        handle = self._resolve(sess)
+        self._pools[handle.shard].feed(handle.inner, samples)
+
+    def read(self, sess) -> np.ndarray:
+        """Pop all enhanced audio produced for this session so far."""
+        handle = self._resolve(sess)
+        return self._pools[handle.shard].read(handle.inner)
+
+    # -- the overlapped hop loop --------------------------------------------
+
+    def pump_all(self) -> int:
+        """Pump every shard until no session anywhere has a full hop queued.
+
+        Each round dispatches every shard's batched hop step FIRST (JAX
+        enqueues asynchronously, so all devices start computing), waits for
+        every shard's output (``wait_ready`` — each shard records its own
+        dispatch→ready latency), and only then drains the readbacks — device
+        work overlaps instead of serializing, which is where the linear
+        capacity scaling comes from.
+
+        Accounting: each round charges ``round_wall / sessions_stepped`` to
+        every stepped session, so summed ``proc_seconds`` across all shards
+        equals the overlapped wall-clock (concurrent device work is not
+        double-counted into session RTFs).
+
+        Returns:
+            Number of dispatch rounds in which at least one shard stepped.
+        """
+        rounds = 0
+        while True:
+            t0 = time.perf_counter()
+            stepped = sum(pool.dispatch() for pool in self._pools)
+            if stepped == 0:
+                return rounds
+            for pool in self._pools:
+                pool.wait_ready()
+            share = (time.perf_counter() - t0) / stepped
+            for pool in self._pools:
+                pool.collect(proc_share=share)
+            rounds += 1
+
+    # -- balance ------------------------------------------------------------
+
+    def shard_stats(self) -> List[Dict[str, object]]:
+        """Per-shard load counters (see ``SessionPool.shard_stats``)."""
+        return [p.shard_stats() for p in self._pools]
+
+    def _migrate(self, handle: ShardedSession, dst: int) -> None:
+        """Move one live session to shard ``dst`` (resumes bit-for-bit)."""
+        ticket = self._pools[handle.shard].export_session(handle.inner)
+        handle.inner = self._pools[dst].import_session(ticket)
+        handle.shard = dst
+
+    def _drain_one(self, shard: int) -> None:
+        """Migrate one session off ``shard`` to the shard with most headroom."""
+        frees = [p.capacity - p.num_active for p in self._pools]
+        frees[shard] = -1  # never pick the shard being drained
+        dst = max(range(self.n_shards), key=lambda i: frees[i])
+        if frees[dst] <= 0:
+            return
+        handle = next(
+            (h for h in self._sessions.values() if h.shard == shard), None
+        )
+        if handle is not None:
+            self._migrate(handle, dst)
+
+    def rebalance(self, tolerance: int = 1) -> int:
+        """Migrate sessions until shard loads differ by at most ``tolerance``.
+
+        Repeatedly moves one session from the most- to the least-loaded shard
+        via ``export_session``/``import_session``; a migrated stream resumes
+        bit-for-bit (state, queued input, unread output, stats all travel).
+        Migration overrides the hash placement — the handle's ``shard`` field
+        tracks the session's current home, so routing by handle/id still
+        works.
+
+        Returns:
+            Number of sessions moved.
+        """
+        tolerance = max(1, tolerance)  # 0 would oscillate a session forever
+        moved = 0
+        while True:
+            loads = [p.num_active for p in self._pools]
+            src = max(range(self.n_shards), key=lambda i: loads[i])
+            dst = min(range(self.n_shards), key=lambda i: loads[i])
+            if loads[src] - loads[dst] <= tolerance:
+                return moved
+            if self._pools[dst].num_active >= self._pools[dst].capacity:
+                return moved  # least-loaded shard has no slot headroom
+            handle = next(
+                h for h in self._sessions.values() if h.shard == src
+            )
+            self._migrate(handle, dst)
+            moved += 1
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> str:
+        lines = [
+            f"ShardedSessionPool(shards={self.n_shards}, "
+            f"capacity={self.capacity}, active={self.num_active})"
+        ]
+        for i, stats in enumerate(self.shard_stats()):
+            lines.append(
+                f"  shard {i} [{stats['device']}]: "
+                f"{stats['active']}/{stats['capacity']} active, "
+                f"{stats['hops']} hops, backlog={stats['backlog_hops']}, "
+                f"p50={stats['p50_ms']:.2f}ms"
+            )
+        return "\n".join(lines)

@@ -51,6 +51,18 @@ class StreamState:
 
 
 def init_stream(params: Pytree, cfg: tft_mod.TFTConfig, batch: int) -> StreamState:
+    """Zeroed streaming state for ``batch`` independent streams.
+
+    Args:
+        params: TFTNN parameters (shapes only — used to size the recurrent
+            model state).
+        cfg: model/front-end config (``n_fft`` fixes the window buffers).
+        batch: number of streams; the leading axis of every state leaf.
+
+    Returns:
+        A ``StreamState`` whose leaves are all zeros — a stream that has
+        seen no audio.
+    """
     return StreamState(
         analysis=jnp.zeros((batch, cfg.n_fft)),
         synthesis=jnp.zeros((batch, cfg.n_fft)),
@@ -84,10 +96,25 @@ def stream_hop(
 ) -> Tuple[StreamState, jax.Array]:
     """Push one hop of audio; emit one hop of enhanced audio.
 
-    ``quant`` (a ``repro.core.quant`` grid, e.g. FP10 or FXP8) additionally
-    rounds the spectral features entering the model and the mask leaving it —
-    the activation half of the paper's Table VI deployment format. Weight
-    quantization is the caller's job (``make_stream_hop`` / ``quantize_tree``).
+    Pure function — the single implementation of the hop math shared by the
+    offline scan, the session server, and the quantized path.
+
+    Args:
+        params: TFTNN parameters (pre-quantized by the caller when serving
+            on a deployment grid).
+        cfg: model/front-end config (``n_fft``, ``hop``).
+        state: per-stream state from ``init_stream`` / a previous call.
+        hop_samples: (B, hop) new raw audio, one hop per stream.
+        quant: optional ``repro.core.quant`` grid (e.g. FP10 or FXP8):
+            additionally rounds the spectral features entering the model and
+            the mask leaving it — the activation half of the paper's
+            Table VI deployment format. Weight quantization is the caller's
+            job (``make_stream_hop`` / ``quantize_tree``).
+
+    Returns:
+        ``(new_state, out)`` where ``out`` is (B, hop) enhanced audio. Every
+        emitted sample is final (COLA normalization by the running ``wsum``
+        — no lookahead, exact from the first warm-up hop).
     """
     n_fft, hop = cfg.n_fft, cfg.hop
     w = hann(n_fft, hop_samples.dtype)
@@ -166,7 +193,18 @@ def enhance_streaming(
     *,
     quant: Optional[QuantSpec] = None,
 ) -> jax.Array:
-    """Run the full streaming loop over (B, S) audio via scan; returns (B, S)."""
+    """Run the full streaming loop over a batch of utterances via scan.
+
+    Args:
+        wave: (B, S) raw audio; trailing samples past a whole hop are dropped.
+        quant: optional activation grid, as in ``stream_hop`` (weights are
+            not quantized here — pre-quantize ``params`` for full PTQ).
+
+    Returns:
+        (B, S') enhanced audio, ``S' = (S // hop) * hop`` — bit-comparable to
+        driving ``stream_hop`` by hand and equal to ``enhance_offline`` up to
+        float error (THE streaming invariant, see ``enhance_offline``).
+    """
     B, S = wave.shape
     hop = cfg.hop
     n = S // hop
