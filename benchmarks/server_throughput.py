@@ -1,19 +1,27 @@
 """Multi-session server throughput: sessions x RTF curve, single or sharded.
 
 Default mode sweeps the number of concurrent streams served by ONE
-fixed-capacity ``SessionPool`` (one compiled batched hop step, no
-recompilation across sweep points — the server's core scaling property) and
-reports, per point:
+fixed-capacity ``SessionPool`` (one compiled batched hop step per backend,
+no recompilation across sweep points — the server's core scaling property)
+and reports, per point:
 
 - aggregate RTF: total compute seconds per total audio seconds (< 1 means the
-  whole batch is served in real time),
+  whole batch is served in real time) and rt_capacity = 1 / aggregate RTF,
 - per-session RTF (mean),
 - pool step latency p50/p95 in ms against the 16 ms hop budget.
 
+Two sweep axes compare the serving configurations this benchmark exists for:
+
+- ``--backend xla,pallas`` — the training graph lowered through XLA vs the
+  deploy-compiled fused graph (``repro.serve.deploy``: BN folded, Pallas
+  kernels). Off-TPU the Pallas kernels run in INTERPRET mode — correctness
+  smoke, not a speed claim; sweep it on TPU for real numbers.
+- ``--buffering single,double`` — classic serial pump vs double-buffered
+  ingestion (``SessionPool(inflight=2)``: host ring drain overlaps the
+  in-flight device step).
+
 ``--shards N`` instead sweeps SHARD COUNT at full per-shard load through
-``ShardedSessionPool`` (one pool per device, overlapped ``pump_all``) and
-reports aggregate RTF plus ``rt_capacity = 1 / aggregate_rtf`` — the number
-of real-time streams this host could sustain at that shard count. If
+``ShardedSessionPool`` (one pool per device, overlapped ``pump_all``). If
 capacity scales linearly with devices, rt_capacity grows ~linearly in the
 shard sweep (faked CPU devices share one core: expect a flat curve there).
 On a CPU-only host, fake devices first:
@@ -21,20 +29,24 @@ On a CPU-only host, fake devices first:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         PYTHONPATH=src python benchmarks/server_throughput.py --shards 4
 
-CSV on stdout via benchmarks.common.emit. Designed to finish well inside
-2 minutes on a laptop CPU (reduced trunk, ~1 s of audio per session).
+Results go to BOTH stdout (CSV via benchmarks.common.emit, human-scannable)
+and a machine-readable ``BENCH_server_throughput.json`` (``--json`` to move
+it): full config, every sweep point, and cross-config RTF ratios — the
+artifact CI and regression tooling consume.
 
-Flags (see also --help): --capacity N (slots: per pool, or per shard when
---shards > 0), --seconds S (audio per session), --quant (FP10 grid),
---shards N (sweep 1..N shards; 0 = single-pool sessions sweep).
+``--smoke`` shrinks everything (capacity 2, 0.25 s audio, 1-2 sessions) so
+the pallas/interpret path finishes in seconds — the CI guard that keeps the
+deploy path from rotting.
 
-Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N] \\
-          [--seconds S] [--quant] [--shards N]
+Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
+          [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
+          [--buffering single,double] [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -49,7 +61,7 @@ from repro.audio.synthetic import batch_for_step  # noqa: E402
 from repro.core.quant import FP10  # noqa: E402
 from repro.launch.serve import reduced_cfg  # noqa: E402
 from repro.models import tftnn as tft  # noqa: E402
-from repro.serve import SessionPool, ShardedSessionPool  # noqa: E402
+from repro.serve import SessionPool, ShardedSessionPool, make_stream_hop  # noqa: E402
 
 
 def bench_cfg() -> tft.TFTConfig:
@@ -63,16 +75,23 @@ def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
     pool.step_seconds.clear()
     for i, s in enumerate(sessions):
         pool.feed(s, audio[i % audio.shape[0]])
+    # wall-clock, not summed step latencies: under double buffering (inflight
+    # > 1) a step's dispatch->ready time includes pipeline queueing, so the
+    # sum double-counts overlapped work — wall time compares modes honestly.
+    t0 = time.perf_counter()
     pool.pump()
+    wall = time.perf_counter() - t0
     hop, sr = pool.cfg.hop, pool.sample_rate
-    proc = float(sum(pool.step_seconds))
     audio_sec = sum(s.stats.hops for s in sessions) * hop / sr
     rtfs = [s.stats.rtf(sr, hop) for s in sessions]
     pct = pool.latency_percentiles()
     for s in sessions:
         pool.detach(s)
+    rtf = wall / audio_sec
     return {
-        "aggregate_rtf": proc / audio_sec,
+        "sessions": n_sessions,
+        "aggregate_rtf": rtf,
+        "rt_capacity": 1.0 / rtf if rtf > 0 else float("inf"),
         "mean_session_rtf": float(np.mean(rtfs)),
         "p50_ms": pct[50],
         "p95_ms": pct[95],
@@ -80,13 +99,15 @@ def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
 
 
 def run_sharded_point(params, cfg, n_shards: int, per_shard: int,
-                      audio: np.ndarray, quant, step_cache: dict) -> dict:
+                      audio: np.ndarray, quant, backend: str,
+                      step_cache: dict) -> dict:
     """One shard-sweep point: fill n_shards x per_shard sessions, pump_all.
 
     ``step_cache`` is shared across sweep points so each device compiles the
-    hop step once for the whole sweep (cfg/capacity/quant are constant)."""
+    hop step once for the whole sweep (cfg/capacity/quant/backend constant)."""
     pool = ShardedSessionPool(params, cfg, per_shard, shards=n_shards,
-                              quant=quant, step_cache=step_cache)
+                              quant=quant, backend=backend,
+                              step_cache=step_cache)
     n_sessions = n_shards * per_shard
     handles = [pool.attach(f"bench-{i}", rebalance_on_full=True)
                for i in range(n_sessions)]
@@ -106,6 +127,7 @@ def run_sharded_point(params, cfg, n_shards: int, per_shard: int,
     for h in handles:
         pool.detach(h)
     return {
+        "shards": n_shards,
         "sessions": n_sessions,
         "aggregate_rtf": rtf,
         # sustainable real-time streams: total audio seconds / wall second.
@@ -125,10 +147,40 @@ def _shard_sweep(n_max: int) -> list:
     return sorted(set(out))
 
 
+def _csv_list(raw: str, allowed: tuple) -> list:
+    vals = [v.strip() for v in raw.split(",") if v.strip()]
+    for v in vals:
+        if v not in allowed:
+            raise SystemExit(f"unknown value {v!r}: expected one of {allowed}")
+    if not vals:
+        raise SystemExit(f"need at least one of {allowed}")
+    return vals
+
+
+_SWEEP_AXES = ("backend", "buffering")
+
+
+def _ratio(points: list, key: str, a: str, b: str) -> dict:
+    """Mean aggregate-RTF ratio b/a between sweep points that match on every
+    OTHER axis (mode, sessions, shards, and the non-compared config axis) —
+    e.g. pallas/single is only ever divided by xla/single, never xla/double."""
+    others = tuple(ax for ax in _SWEEP_AXES if ax != key)
+    def mk(p):
+        return (p["mode"], p.get("sessions"), p.get("shards"),
+                *(p.get(ax) for ax in others))
+    pa = {mk(p): p["aggregate_rtf"] for p in points if p[key] == a}
+    ratios = [p["aggregate_rtf"] / pa[mk(p)]
+              for p in points if p[key] == b and mk(p) in pa]
+    return {"num_points": len(ratios),
+            "mean_rtf_ratio": float(np.mean(ratios)) if ratios else None}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="Multi-session server throughput: sessions x RTF "
-        "(single pool) or shard-count sweep (--shards, one pool per device)."
+        "(single pool) or shard-count sweep (--shards, one pool per device), "
+        "with xla-vs-pallas and single-vs-double-buffered comparisons; "
+        "machine-readable results in BENCH_server_throughput.json."
     )
     ap.add_argument("--capacity", type=int, default=16,
                     help="slots compiled into each pool (per shard when --shards > 0)")
@@ -136,11 +188,28 @@ def main() -> None:
                     help="seconds of audio fed to each session")
     ap.add_argument("--quant", action="store_true",
                     help="serve on the paper's FP10 deployment grid")
+    ap.add_argument("--backend", default="xla",
+                    help="comma list of hop backends to sweep: xla,pallas "
+                    "(pallas = deploy-compiled fused graph; interpret mode off-TPU)")
+    ap.add_argument("--buffering", default="single",
+                    help="comma list of ingestion modes to sweep: single,double "
+                    "(double = inflight=2 host/device overlap); single-pool mode only")
     ap.add_argument("--shards", type=int, default=0,
                     help="sweep ShardedSessionPool from 1 up to N shards at full "
                     "per-shard load (0 = single-pool sessions sweep); fake CPU "
                     "devices with XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run (capacity<=2, <=0.25s audio, 1-2 "
+                    "sessions) so the pallas/interpret path stays fast")
+    ap.add_argument("--json", default="BENCH_server_throughput.json",
+                    help="where to write the machine-readable results")
     args = ap.parse_args()
+
+    backends = _csv_list(args.backend, ("xla", "pallas"))
+    bufferings = _csv_list(args.buffering, ("single", "double"))
+    if args.smoke:
+        args.capacity = min(args.capacity, 2)
+        args.seconds = min(args.seconds, 0.25)
 
     cfg = bench_cfg()
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
@@ -153,46 +222,88 @@ def main() -> None:
     audio = np.asarray(noisy, np.float32)
     budget_ms = cfg.hop / sample_rate * 1e3
 
-    if args.shards > 0:
-        n_dev = len(jax.local_devices())
-        print(f"# shard sweep up to {args.shards}, capacity/shard={args.capacity}, "
-              f"audio/session={args.seconds}s, {n_dev} local device(s), "
-              f"quant={'fp10' if args.quant else 'fp32'}")
-        print("name,us_per_call,derived")
-        step_cache = {}  # one compilation per device across the whole sweep
-        for s in _shard_sweep(args.shards):
-            r = run_sharded_point(params, cfg, s, args.capacity, audio, quant,
-                                  step_cache)
-            emit(
-                f"shards={s}",
-                r["wall_s"] * 1e6,
-                f"sessions={r['sessions']} aggregate_rtf={r['aggregate_rtf']:.3f} "
-                f"rt_capacity={r['rt_capacity']:.1f} "
-                f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
-            )
-        return
-
-    pool = SessionPool(params, cfg, capacity=args.capacity, quant=quant)
-
-    # warm up the single compilation the whole sweep reuses
-    w = pool.attach()
-    pool.feed(w, audio[0][: 4 * cfg.hop])
-    pool.pump()
-    pool.detach(w)
-
-    print(f"# capacity={args.capacity} audio/session={args.seconds}s "
-          f"hop_budget={budget_ms:.1f}ms quant={'fp10' if args.quant else 'fp32'}")
+    result = {
+        "benchmark": "server_throughput",
+        "config": {
+            "capacity": args.capacity,
+            "seconds_per_session": args.seconds,
+            "quant": "fp10" if args.quant else "fp32",
+            "backends": backends,
+            "bufferings": bufferings,
+            "shards_max": args.shards,
+            "smoke": args.smoke,
+            "hop_budget_ms": budget_ms,
+            "devices": len(jax.local_devices()),
+            "jax_backend": jax.default_backend(),
+        },
+        "points": [],
+    }
+    points = result["points"]
     print("name,us_per_call,derived")
-    sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
-    for n in sweep:
-        r = run_point(pool, n, audio)
-        emit(
-            f"sessions={n}",
-            r["p50_ms"] * 1e3,
-            f"aggregate_rtf={r['aggregate_rtf']:.3f} "
-            f"mean_session_rtf={r['mean_session_rtf']:.3f} "
-            f"p95_ms={r['p95_ms']:.2f} real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
-        )
+
+    if args.shards > 0:
+        print(f"# shard sweep up to {args.shards}, capacity/shard={args.capacity}, "
+              f"audio/session={args.seconds}s, backends={backends}, "
+              f"quant={'fp10' if args.quant else 'fp32'}")
+        for backend in backends:
+            step_cache = {}  # one compilation per device across the sweep
+            for s in _shard_sweep(args.shards):
+                r = run_sharded_point(params, cfg, s, args.capacity, audio,
+                                      quant, backend, step_cache)
+                r.update(mode="shards", backend=backend, buffering="single")
+                points.append(r)
+                # space-separated name: emit() quotes nothing, so a comma
+                # here would break the 3-column CSV contract
+                emit(
+                    f"backend={backend} shards={s}",
+                    r["wall_s"] * 1e6,
+                    f"sessions={r['sessions']} aggregate_rtf={r['aggregate_rtf']:.3f} "
+                    f"rt_capacity={r['rt_capacity']:.1f} "
+                    f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
+                )
+    else:
+        print(f"# capacity={args.capacity} audio/session={args.seconds}s "
+              f"hop_budget={budget_ms:.1f}ms backends={backends} "
+              f"bufferings={bufferings} quant={'fp10' if args.quant else 'fp32'}")
+        sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
+        for backend in backends:
+            # buffering changes only host-side pipelining, not the compiled
+            # step — compile once per backend and share it across modes
+            step = make_stream_hop(params, cfg, quant=quant, backend=backend)
+            for buffering in bufferings:
+                pool = SessionPool(params, cfg, capacity=args.capacity,
+                                   quant=quant, backend=backend,
+                                   inflight=2 if buffering == "double" else 1,
+                                   step_fn=step)
+                # warm up the per-backend compilation outside the timed points
+                w = pool.attach()
+                pool.feed(w, audio[0][: 2 * cfg.hop])
+                pool.pump()
+                pool.detach(w)
+                for n in sweep:
+                    r = run_point(pool, n, audio)
+                    r.update(mode="sessions", backend=backend, buffering=buffering)
+                    points.append(r)
+                    emit(
+                        f"backend={backend} buffering={buffering} sessions={n}",
+                        r["p50_ms"] * 1e3,
+                        f"aggregate_rtf={r['aggregate_rtf']:.3f} "
+                        f"rt_capacity={r['rt_capacity']:.1f} "
+                        f"mean_session_rtf={r['mean_session_rtf']:.3f} "
+                        f"p95_ms={r['p95_ms']:.2f} "
+                        f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
+                    )
+
+    comparisons = {}
+    if "xla" in backends and "pallas" in backends:
+        comparisons["pallas_vs_xla"] = _ratio(points, "backend", "xla", "pallas")
+    if "single" in bufferings and "double" in bufferings:
+        comparisons["double_vs_single"] = _ratio(points, "buffering", "single", "double")
+    result["comparisons"] = comparisons
+
+    out_path = Path(args.json)
+    out_path.write_text(json.dumps(result, indent=2) + "\n", encoding="utf-8")
+    print(f"# wrote {out_path} ({len(points)} points)")
 
 
 if __name__ == "__main__":

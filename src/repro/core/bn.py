@@ -117,6 +117,24 @@ def fold_bn_into_linear(
     return w2, b2
 
 
+def _fold_bn_out_channels(
+    w: jax.Array,
+    b: jax.Array | None,
+    bn_params: Params,
+    eps: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold a post-BN into any weight whose LAST axis is the out channel.
+
+    ``w * a`` broadcasts the per-channel scale over the trailing axis for
+    every rank, so 1-D (k, in, out) and 2-D (kf, kt, in, out) convs share
+    this one body.
+    """
+    a, c = bn_scale_shift(bn_params, eps)
+    if b is None:
+        b = jnp.zeros((w.shape[-1],), w.dtype)
+    return w * a, a * b + c
+
+
 def fold_bn_into_conv1d(
     w: jax.Array,
     b: jax.Array | None,
@@ -125,12 +143,22 @@ def fold_bn_into_conv1d(
     eps: float = 1e-5,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fold BN after a 1-D conv. w: (k, in, out). Returns (w', b')."""
-    a, c = bn_scale_shift(bn_params, eps)
-    if b is None:
-        b = jnp.zeros((w.shape[-1],), w.dtype)
-    w2 = w * a[None, None, :]
-    b2 = a * b + c
-    return w2, b2
+    return _fold_bn_out_channels(w, b, bn_params, eps)
+
+
+def fold_bn_into_conv2d(
+    w: jax.Array,
+    b: jax.Array | None,
+    bn_params: Params,
+    *,
+    eps: float = 1e-5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fold BN after a 2-D conv. w: (kf, kt, in, out). Returns (w', b').
+
+    The deploy-compilation variant of ``fold_bn_into_conv1d`` for the TFTNN
+    encoder/decoder convs (models/tftnn.py layout, HWIO).
+    """
+    return _fold_bn_out_channels(w, b, bn_params, eps)
 
 
 def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:

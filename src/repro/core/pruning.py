@@ -143,6 +143,38 @@ def prune_consumer(w: jax.Array, kept_idx: jax.Array, in_axis: int) -> jax.Array
     return prune_axis(w, kept_idx, axis=in_axis)
 
 
+def prune_mask(
+    w: jax.Array, keep_fraction: float, *, axis: int | None = None
+) -> jax.Array:
+    """Materialize a dense 0/1 zero-skipping mask for ``w`` (deploy path).
+
+    Unlike ``prune_linear``/``prune_conv1d`` (which *slice* channels and
+    change shapes), this keeps the shape and returns a same-shaped float
+    mask — the form a zero-skipping kernel consumes
+    (``repro.kernels.masked_mac``: fully-masked weight strips never reach
+    the MXU, the TPU analogue of the ASIC gating pruned MACs off).
+
+    axis=None: unstructured magnitude pruning — keep the top
+    ``keep_fraction`` of entries by |w| (the paper's 93.9% weight-level
+    sparsity). axis=k: structured — keep whole slices along ``axis`` ranked
+    by the group-lasso ``channel_importance`` score.
+    """
+    if not 0.0 < keep_fraction <= 1.0:
+        raise ValueError(f"keep_fraction must be in (0, 1], got {keep_fraction}")
+    if keep_fraction == 1.0:
+        return jnp.ones_like(w)
+    if axis is None:
+        flat = jnp.abs(w).ravel()
+        k = max(1, int(round(flat.shape[0] * keep_fraction)))
+        thresh = jnp.sort(flat)[flat.shape[0] - k]
+        return (jnp.abs(w) >= thresh).astype(w.dtype)
+    idx = select_channels(channel_importance(w, axis), keep_fraction)
+    keep = jnp.zeros((w.shape[axis % w.ndim],), bool).at[idx].set(True)
+    shape = [1] * w.ndim
+    shape[axis % w.ndim] = -1
+    return jnp.broadcast_to(keep.reshape(shape), w.shape).astype(w.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Sensitivity analysis (the "domain-aware" part, mechanized)
 # ---------------------------------------------------------------------------

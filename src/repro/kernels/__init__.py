@@ -3,11 +3,19 @@
 - linear_attention: softmax-free attention in the paper's optimal matmul
   order Q @ (K^T V) (Eq. 1 / Fig. 10b), causal variant with a VMEM-resident
   running-state accumulator (TPU analogue of the ASIC's local register
-  buffer accumulation).
+  buffer accumulation), and a state-carrying ``linear_attention_step`` for
+  the streaming deploy path (carry (K^T V) across hops instead of
+  recomputing the window).
 - fp10: minifloat (FP10 = 1-5-4) round-to-nearest-even quantization.
 - dilated_conv: channel-split dilated residual 1-D conv (Fig. 2b) with
   block-level zero skipping (TPU adaptation of the ASIC's zero gating).
+- masked_mac: matmul with a dense zero-skipping weight mask — the TPU
+  analogue of the paper's pruned element-wise MAC on the 1-D array.
 
 Each kernel package has kernel.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd public wrapper with interpret fallback) and ref.py (pure-jnp oracle).
+The interpret-vs-native decision is shared: ``repro.kernels.interpret_default``
+(one env var, ``REPRO_PALLAS_INTERPRET``, see ``repro.kernels.runtime``).
 """
+
+from repro.kernels.runtime import interpret_default  # noqa: F401

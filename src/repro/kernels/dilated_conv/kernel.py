@@ -23,7 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int, F: int, half: int, zero_skip: bool):
+def _kernel(
+    x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int, F: int, half: int,
+    zero_skip: bool, swap_halves: bool,
+):
     x = x_ref[0]  # (F + (k-1)*d, C) padded input frame
     w = w_ref[...]  # (k, half, half)
     b = b_ref[...]  # (half,)
@@ -45,10 +48,15 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int, F: int, half: 
     else:
         acc = compute()
     y = jnp.maximum(acc + b.astype(jnp.float32), 0.0) + center.astype(jnp.float32)
-    o_ref[0] = jnp.concatenate([y.astype(o_ref.dtype), xb], axis=-1)
+    if swap_halves:  # TFTNN layer layout: successive layers alternate halves
+        o_ref[0] = jnp.concatenate([xb, y.astype(o_ref.dtype)], axis=-1)
+    else:
+        o_ref[0] = jnp.concatenate([y.astype(o_ref.dtype), xb], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("dilation", "zero_skip", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("dilation", "zero_skip", "swap_halves", "interpret")
+)
 def dilated_split_conv_pallas(
     x: jax.Array,
     w: jax.Array,
@@ -56,6 +64,7 @@ def dilated_split_conv_pallas(
     *,
     dilation: int = 1,
     zero_skip: bool = True,
+    swap_halves: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """x: (B, F, C); w: (k, C//2, C//2); b: (C//2,). SAME padding."""
@@ -66,7 +75,10 @@ def dilated_split_conv_pallas(
     xpad = jnp.pad(x, ((0, 0), (pad, pad), (0, 0)))
     Fp = F + 2 * pad
     out = pl.pallas_call(
-        functools.partial(_kernel, k=k, dilation=dilation, F=F, half=half, zero_skip=zero_skip),
+        functools.partial(
+            _kernel, k=k, dilation=dilation, F=F, half=half,
+            zero_skip=zero_skip, swap_halves=swap_halves,
+        ),
         grid=(B,),
         in_specs=[
             pl.BlockSpec((1, Fp, C), lambda i: (i, 0, 0)),

@@ -6,6 +6,7 @@ import jax
 
 from repro.kernels.dilated_conv.kernel import dilated_split_conv_pallas
 from repro.kernels.dilated_conv.ref import dilated_split_conv_ref
+from repro.kernels.runtime import interpret_default
 
 
 def dilated_split_conv(
@@ -15,12 +16,27 @@ def dilated_split_conv(
     *,
     dilation: int = 1,
     zero_skip: bool = True,
+    swap_halves: bool = False,
     use_pallas: bool = True,
 ) -> jax.Array:
-    """Fused channel-split dilated residual conv (Fig. 2b). (B, F, C)."""
+    """Fused channel-split dilated residual conv (Fig. 2b). (B, F, C).
+
+    ``swap_halves=True`` emits ``[bypass, processed]`` instead of
+    ``[processed, bypass]`` — the layout the TFTNN dilated block uses so that
+    successive layers process alternate channel halves (models/tftnn.py).
+    """
     if not use_pallas:
-        return dilated_split_conv_ref(x, w, b, dilation=dilation)
-    interpret = jax.default_backend() != "tpu"
+        out = dilated_split_conv_ref(x, w, b, dilation=dilation)
+        if swap_halves:
+            half = x.shape[-1] // 2
+            out = jax.numpy.concatenate([out[..., half:], out[..., :half]], axis=-1)
+        return out
     return dilated_split_conv_pallas(
-        x, w, b, dilation=dilation, zero_skip=zero_skip, interpret=interpret
+        x,
+        w,
+        b,
+        dilation=dilation,
+        zero_skip=zero_skip,
+        swap_halves=swap_halves,
+        interpret=interpret_default(),
     )

@@ -6,6 +6,7 @@ import jax
 
 from repro.kernels.fp10.kernel import fp10_quantize_pallas
 from repro.kernels.fp10.ref import fp10_quantize_ref
+from repro.kernels.runtime import interpret_default
 
 
 def fp10_quantize(
@@ -18,5 +19,6 @@ def fp10_quantize(
     """Round to the paper's FP10 (1-5-4) grid (or any minifloat split)."""
     if not use_pallas:
         return fp10_quantize_ref(x, exp_bits, man_bits)
-    interpret = jax.default_backend() != "tpu"
-    return fp10_quantize_pallas(x, exp_bits=exp_bits, man_bits=man_bits, interpret=interpret)
+    return fp10_quantize_pallas(
+        x, exp_bits=exp_bits, man_bits=man_bits, interpret=interpret_default()
+    )

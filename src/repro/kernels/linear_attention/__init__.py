@@ -1,3 +1,7 @@
-from repro.kernels.linear_attention.ops import linear_attention, linear_attention_causal
+from repro.kernels.linear_attention.ops import (
+    linear_attention,
+    linear_attention_causal,
+    linear_attention_step,
+)
 
-__all__ = ["linear_attention", "linear_attention_causal"]
+__all__ = ["linear_attention", "linear_attention_causal", "linear_attention_step"]

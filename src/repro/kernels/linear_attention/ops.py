@@ -15,11 +15,9 @@ from repro.kernels.linear_attention import ref
 from repro.kernels.linear_attention.kernel import (
     linear_attention_causal_pallas,
     linear_attention_pallas,
+    linear_attention_step_pallas,
 )
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.runtime import interpret_default as _interpret_default
 
 
 def _pad_length(q: jax.Array, k: jax.Array, v: jax.Array, block_l: int):
@@ -83,3 +81,41 @@ def linear_attention_causal(
     if scale != 1.0:
         out = (out[..., :L, :].astype(jnp.float32) * scale).astype(q.dtype)
     return out
+
+
+def linear_attention_step(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv: jax.Array,
+    *,
+    block_l: int = 256,
+    use_pallas: bool = True,
+):
+    """State-carrying softmax-free attention hop (the deploy-path variant).
+
+    Instead of recomputing attention over the whole window every hop, the
+    (D, D) running K^T V state is carried across calls:
+
+        new_kv = kv + K^T V       (this hop's keys fold into the state)
+        out    = Q @ new_kv       (UNNORMALIZED — divide by your key count)
+
+    q, k, v: (B, H, Lc, D) — this hop's projections (any Lc; zero-padded to
+    a block multiple internally, which is exact because zero K/V rows add
+    nothing to the state). kv: (B, H, D, D) carried state (fp32; pass zeros
+    for a fresh stream). Returns ``(out, new_kv)``.
+
+    Feeding hops sequentially is bit-for-bit the paper's Eq. 1 running sum:
+    ``out_t == Q_t @ (K_{0..t}^T V_{0..t})`` — equal (up to float order) to
+    recomputing full-window attention per hop, at O(Lc D^2) instead of
+    O(t Lc D^2). With ``kv == 0`` and a whole sequence as one hop,
+    ``out / L`` equals ``linear_attention`` — the fused sub-band case.
+    """
+    if not use_pallas:
+        return ref.linear_attention_step_ref(q, k, v, kv)
+    L = q.shape[-2]
+    qp, kp, vp, block_l, _ = _pad_length(q, k, v, block_l)
+    out, new_kv = linear_attention_step_pallas(
+        qp, kp, vp, kv, block_l=block_l, interpret=_interpret_default()
+    )
+    return out[..., :L, :], new_kv

@@ -25,3 +25,12 @@ def linear_attention_causal_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax
     att = att * jnp.tril(jnp.ones((L, L), jnp.float32))
     out = jnp.einsum("bhlm,bhmd->bhld", att, v.astype(jnp.float32)) / L
     return out.astype(q.dtype)
+
+
+def linear_attention_step_ref(q: jax.Array, k: jax.Array, v: jax.Array, kv: jax.Array):
+    """State-carrying hop: new_kv = kv + K^T V; out = Q @ new_kv (unnormalized)."""
+    new_kv = kv.astype(jnp.float32) + jnp.einsum(
+        "bhld,bhle->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    out = jnp.einsum("bhld,bhde->bhle", q.astype(jnp.float32), new_kv)
+    return out.astype(q.dtype), new_kv

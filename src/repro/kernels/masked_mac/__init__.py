@@ -1,0 +1,3 @@
+from repro.kernels.masked_mac.ops import masked_matmul
+
+__all__ = ["masked_matmul"]

@@ -1,0 +1,51 @@
+"""Public wrapper for the masked-MAC (pruned matmul) kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_mac.kernel import masked_matmul_pallas
+from repro.kernels.masked_mac.ref import masked_matmul_ref
+from repro.kernels.runtime import interpret_default
+
+
+def masked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    mask: Optional[jax.Array] = None,
+    block_m: int = 128,
+    block_k: int = 8,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """y = x @ (w * mask) + b with block-granular weight zero skipping.
+
+    x: (..., K) — leading axes are flattened into rows; w: (K, N);
+    mask: optional dense 0/1 pruning mask, same shape as w (see
+    ``repro.core.pruning.prune_mask``). Input-channel strips of ``block_k``
+    rows whose masked weights are entirely zero are skipped on the MXU —
+    the TPU-granularity version of the ASIC's per-element zero gating.
+    """
+    if b is None:
+        b = jnp.zeros((w.shape[1],), w.dtype)
+    if not use_pallas:
+        return masked_matmul_ref(x, w, b, mask=mask)
+    wm = (w * mask if mask is not None else w).astype(w.dtype)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    xf = x.reshape(-1, K)
+    M = xf.shape[0]
+    block_m = min(block_m, max(M, 1))
+    pad_m = (-M) % block_m
+    pad_k = (-K) % block_k
+    if pad_m or pad_k:  # zero rows/strips are exact no-ops for a matmul
+        xf = jnp.pad(xf, ((0, pad_m), (0, pad_k)))
+        wm = jnp.pad(wm, ((0, pad_k), (0, 0)))
+    out = masked_matmul_pallas(
+        xf, wm, b, block_m=block_m, block_k=block_k, interpret=interpret_default()
+    )
+    return out[:M].reshape(*lead, w.shape[1])

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the masked-MAC matmul kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """y = x @ (w * mask) + b in fp32 accumulation. x: (..., K); w: (K, N)."""
+    wm = w * mask if mask is not None else w
+    y = jnp.einsum("...k,kn->...n", x.astype(jnp.float32), wm.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,39 @@
+"""Shared Pallas runtime policy for every kernel package.
+
+Every ``kernels/*/ops.py`` wrapper needs the same decision: run the Pallas
+kernel natively (TPU) or in interpret mode (CPU CI, debugging). Before this
+module each wrapper carried its own copy of the backend check, so a CI host
+could not force native lowering and a TPU host could not force interpret
+mode without editing three files. ``interpret_default()`` is the single
+source of that decision, driven by one environment variable:
+
+    REPRO_PALLAS_INTERPRET=1     always interpret (debug a miscompile on TPU)
+    REPRO_PALLAS_INTERPRET=0     never interpret (fail loudly off-TPU)
+    REPRO_PALLAS_INTERPRET=auto  interpret unless running on TPU (default,
+                                 also used when the variable is unset)
+
+The env var is read per call, not cached at import, so a test can flip it
+with ``monkeypatch.setenv`` after JAX is initialized.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+def interpret_default() -> bool:
+    """Should Pallas kernels run in interpret mode? (See module docstring.)"""
+    raw = os.environ.get(ENV_VAR, "auto").strip().lower()
+    if raw in ("1", "true", "yes", "on"):
+        return True
+    if raw in ("0", "false", "no", "off"):
+        return False
+    if raw in ("auto", ""):
+        return jax.default_backend() != "tpu"
+    raise ValueError(
+        f"{ENV_VAR}={raw!r}: expected one of 1/0/auto (true/false synonyms ok)"
+    )

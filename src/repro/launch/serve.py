@@ -82,7 +82,9 @@ def serve_pool(args) -> None:
         cfg = reduced_cfg(cfg)
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
-                       quant=FP10 if args.quant else None)
+                       quant=FP10 if args.quant else None,
+                       backend=args.backend, prune_keep=args.prune_keep,
+                       inflight=2 if args.double_buffer else 1)
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
     sessions = [pool.attach() for _ in range(args.batch)]
@@ -108,7 +110,9 @@ def serve_sharded(args) -> None:
     n_dev = len(jax.local_devices())
     per_shard = max(1, -(-args.batch // args.shards))  # ceil; hash skew absorbed below
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
-                              quant=FP10 if args.quant else None)
+                              quant=FP10 if args.quant else None,
+                              backend=args.backend, prune_keep=args.prune_keep,
+                              inflight=2 if args.double_buffer else 1)
     print(f"{args.shards} shards x {per_shard} slots over {n_dev} local device(s)")
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
@@ -145,6 +149,17 @@ def main() -> None:
     ap.add_argument("--task", choices=["se", "pool", "sharded", "lm"], default="se")
     ap.add_argument("--quant", action="store_true",
                     help="pool/sharded tasks: serve on the paper's FP10 grid")
+    ap.add_argument("--backend", choices=["xla", "pallas"], default="xla",
+                    help="pool/sharded tasks: hop-step implementation — xla "
+                    "(training graph) or pallas (deploy-compiled fused graph: "
+                    "BN folded, Pallas kernels; interpret mode off-TPU)")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="pool/sharded tasks: inflight=2 — overlap the host "
+                    "ring-buffer drain with the in-flight device step")
+    ap.add_argument("--prune-keep", type=float, default=None,
+                    help="pool/sharded tasks with --backend pallas: keep-"
+                    "fraction for the deploy-time zero-skipping weight masks "
+                    "(lossy, the paper's pruned serving point)")
     ap.add_argument("--shards", type=int, default=2,
                     help="sharded task: number of SessionPool shards")
     ap.add_argument("--arch", default="gemma3-1b")

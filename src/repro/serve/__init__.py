@@ -1,12 +1,19 @@
 """Serving: batched LM decode engine + the paper's streaming SE service.
 
 ``streaming_se`` holds the pure batched hop math (one implementation shared
-by the offline scan, the quantized path, and the server); ``session_server``
-multiplexes many client sessions onto that hop step; ``sharded_pool`` runs
-one such pool per device behind a consistent-hash router. Architecture tour:
-``docs/serving.md``.
+by the offline scan, the quantized path, and the server); ``deploy`` compiles
+the trained graph into the ASIC-shaped serving graph (BN folded, pruning
+masks, FP10 weights, Pallas kernels — ``backend="pallas"``);
+``session_server`` multiplexes many client sessions onto the hop step;
+``sharded_pool`` runs one such pool per device behind a consistent-hash
+router. Architecture tour: ``docs/serving.md`` and ``docs/deploy.md``.
 """
 
+from repro.serve.deploy import (  # noqa: F401
+    DeployPlan,
+    build_deploy_plan,
+    stream_hop_fused,
+)
 from repro.serve.session_server import (  # noqa: F401
     PoolFullError,
     Session,

@@ -11,7 +11,11 @@ client sessions onto a single jit-compiled batched hop step
   client churn never changes array shapes and never triggers recompilation.
 - **Chunk-size-agnostic ingestion** — each session owns a ring buffer;
   clients may feed 37-sample dribbles or 10-second blobs. ``pump()`` drains
-  whole hops (16 ms at 8 kHz) across all sessions per batched step.
+  whole hops (16 ms at 8 kHz) across all sessions per batched step. With
+  ``inflight=2`` the drain is **double-buffered**: the host fills hop k+1's
+  input buffer while the device computes hop k (the ROADMAP async item), and
+  ``max_unread_hops`` bounds per-session output growth under slow readers
+  (backpressure parks the stream in its own ring instead).
 - **Donated state** — the batched recurrent state is donated to the jit step,
   so steady-state serving updates it in place (constant memory traffic, the
   software analogue of the ASIC's all-on-chip state).
@@ -196,15 +200,43 @@ class SessionPool:
             ``None`` (default) uses JAX's default placement. This is the
             shard-placement seam: ``ShardedSessionPool`` builds one pool per
             device so each shard's state lives (and stays) on its own chip.
+        backend: hop-step implementation — ``"xla"`` (the training graph) or
+            ``"pallas"`` (the deploy-compiled graph: BN folded, Pallas
+            kernels; see ``repro.serve.deploy``). Ignored when ``step_fn``
+            is supplied.
+        prune_keep / prune_axis: deploy-time pruning for the pallas backend
+            (``deploy.build_deploy_plan``): keep-fraction for the dense
+            zero-skipping masks on the matmul weights, unstructured
+            (``prune_axis=None``) or channel-structured. Lossy by design —
+            the paper's 93.9 %-pruned serving point, not a parity mode.
+            ``None`` (default) serves unpruned.
+        inflight: depth of the dispatch pipeline (>= 1). 1 (default) is the
+            classic loop: each ``dispatch()`` first waits out the previous
+            step. 2 is **double-buffered ingestion** (the ROADMAP async
+            item): while the device runs step k, the host drains the ring
+            buffers for step k+1 into a second hop buffer and enqueues it —
+            host I/O and device compute overlap inside ONE shard. The pool
+            keeps ``inflight`` host-side hop buffers and reuses one only
+            after its step has been collected, so pipelining never aliases
+            an in-flight step's input.
+        max_unread_hops: backpressure bound on the per-session output queue
+            (``None`` = unbounded, the previous behaviour). A session whose
+            enhanced-but-unread output (queued plus in-flight) reaches this
+            many hops is *parked*: ``dispatch()`` stops popping its ring, so
+            ``_out`` growth is bounded at ``max_unread_hops`` hops per slot
+            and a slow reader backs pressure up into its own ring buffer
+            instead of growing the pool's output memory without bound. The
+            stream resumes as soon as the client ``read()``s.
         step_fn: a pre-built hop step (from ``make_stream_hop(params, cfg,
-            quant=quant, donate=donate)``) to use instead of compiling a
-            fresh one. Pools that share a device, params, config, quant, and
-            capacity can share ONE compiled step this way — the router uses
-            it so co-located shards don't pay N identical XLA compilations.
-            The caller is responsible for the match.
+            quant=quant, donate=donate, backend=backend)``) to use instead
+            of compiling a fresh one. Pools that share a device, params,
+            config, quant, backend, and capacity can share ONE compiled step
+            this way — the router uses it so co-located shards don't pay N
+            identical XLA compilations. The caller is responsible for the
+            match.
 
     Raises:
-        ValueError: ``capacity < 1``.
+        ValueError: ``capacity < 1``, ``inflight < 1``, bad ``backend``.
     """
 
     def __init__(
@@ -217,21 +249,34 @@ class SessionPool:
         sample_rate: int = 8000,
         donate: bool = True,
         device: Optional[jax.Device] = None,
+        backend: str = "xla",
+        prune_keep: Optional[float] = None,
+        prune_axis: Optional[int] = None,
+        inflight: int = 1,
+        max_unread_hops: Optional[int] = None,
         step_fn=None,
     ) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if inflight < 1:
+            raise ValueError("inflight must be >= 1")
+        if max_unread_hops is not None and max_unread_hops < 1:
+            raise ValueError("max_unread_hops must be >= 1 (or None)")
         self.cfg = cfg
         self.capacity = capacity
         self.sample_rate = sample_rate
         self.quant = quant
         self.device = device
+        self.backend = backend
         if device is not None:
             params = jax.device_put(params, device)
         self._step = (
             step_fn
             if step_fn is not None
-            else make_stream_hop(params, cfg, quant=quant, donate=donate)
+            else make_stream_hop(
+                params, cfg, quant=quant, donate=donate, backend=backend,
+                prune_keep=prune_keep, prune_axis=prune_axis,
+            )
         )
         state = init_stream(params, cfg, capacity)
         self._state: StreamState = (
@@ -242,9 +287,18 @@ class SessionPool:
         self._rings: List[_RingBuffer] = [_RingBuffer() for _ in range(capacity)]
         self._out: List[List[np.ndarray]] = [[] for _ in range(capacity)]
         self._sid_counter = itertools.count()
-        self._hop_buf = np.zeros((capacity, cfg.hop), np.float32)
-        # in-flight batched step launched by dispatch(), drained by collect()
-        self._pending: Optional[_Pending] = None
+        self._inflight = inflight
+        self._max_unread_hops = max_unread_hops
+        # one host hop buffer per pipeline stage: buffer i is refilled only
+        # after the step that consumed it has been collected (see dispatch)
+        self._hop_bufs = [
+            np.zeros((capacity, cfg.hop), np.float32) for _ in range(inflight)
+        ]
+        self._buf_i = 0
+        # in-flight batched steps launched by dispatch(), drained in FIFO
+        # order by collect(); at most ``inflight`` deep
+        self._pending: List[_Pending] = []
+        self._last_ready_t = 0.0  # when the previous step's output was ready
         self.step_seconds: List[float] = []  # pool-wide per-step latency
 
     # -- session lifecycle --------------------------------------------------
@@ -349,6 +403,12 @@ class SessionPool:
 
     # -- the batched hop loop ----------------------------------------------
 
+    def _unread_hops(self, slot: int) -> int:
+        """Hops of enhanced output this slot holds: queued plus in-flight."""
+        hop = self.cfg.hop
+        queued = sum(c.size for c in self._out[slot]) // hop
+        return queued + sum(1 for p in self._pending if p.active[slot])
+
     def dispatch(self) -> int:
         """Launch ONE batched hop step without waiting for its result.
 
@@ -357,67 +417,86 @@ class SessionPool:
         later ``collect()``. Because JAX dispatch is asynchronous, this
         returns as soon as the work is enqueued — a router can dispatch every
         shard before blocking on any of them, overlapping all devices' work
-        (``ShardedSessionPool.pump_all``).
+        (``ShardedSessionPool.pump_all``), and a pool built with
+        ``inflight=2`` can keep dispatching while its previous step is still
+        on the device (double-buffered ingestion: the host fills hop buffer
+        k+1 while the device computes step k).
+
+        When the pipeline is already ``inflight`` deep, the oldest step is
+        collected first (so a pool never holds more than ``inflight`` steps,
+        and a hop buffer is never refilled under an in-flight step).
+
+        Sessions whose unread output has reached ``max_unread_hops`` are
+        skipped — the backpressure bound on ``_out`` (see the constructor).
 
         Returns:
             Number of sessions included in the launched step (0 = nothing
             ready, no compute enqueued). Starved/empty slots are masked inside
             the step: their state is kept bit-for-bit.
         """
-        self.collect()  # at most one step in flight per pool
+        while len(self._pending) >= self._inflight:
+            self._collect_one()
         hop = self.cfg.hop
+        buf = self._hop_bufs[self._buf_i]
         active = np.zeros((self.capacity,), bool)
+        bounded = self._max_unread_hops
         for slot, sess in enumerate(self._slot_session):
-            if sess is not None and len(self._rings[slot]) >= hop:
-                self._hop_buf[slot] = self._rings[slot].pop(hop)
-                active[slot] = True
+            if sess is None or len(self._rings[slot]) < hop:
+                continue
+            if bounded is not None and self._unread_hops(slot) >= bounded:
+                continue  # parked: reader is behind, keep audio in the ring
+            buf[slot] = self._rings[slot].pop(hop)
+            active[slot] = True
         n_active = int(active.sum())
         if n_active == 0:
             return 0
+        self._buf_i = (self._buf_i + 1) % len(self._hop_bufs)
 
         t0 = time.perf_counter()
         if self.device is not None:
-            hops = jax.device_put(self._hop_buf, self.device)
+            hops = jax.device_put(buf, self.device)
             act = jax.device_put(active, self.device)
         else:
-            hops, act = jnp.asarray(self._hop_buf), jnp.asarray(active)
+            hops, act = jnp.asarray(buf), jnp.asarray(active)
         self._state, out = self._step(self._state, hops, act)
-        self._pending = _Pending(out=out, active=active, t0=t0)
+        self._pending.append(_Pending(out=out, active=active, t0=t0))
         return n_active
 
+    def _mark_ready(self, pending: _Pending) -> None:
+        """Block on one step and record its latency WITHOUT pipeline wait.
+
+        Under ``inflight > 1`` a step is dispatched while its predecessor is
+        still on the device, so dispatch→ready would double-count the
+        predecessor's runtime. Each step is therefore charged from
+        ``max(its dispatch, previous step ready)`` — summed ``dt`` over a
+        pipelined pump equals actual device occupancy, and with
+        ``inflight=1`` this reduces exactly to dispatch→ready.
+        """
+        if pending.dt is not None:
+            return
+        jax.block_until_ready(pending.out)
+        t = time.perf_counter()
+        pending.dt = t - max(pending.t0, self._last_ready_t)
+        self._last_ready_t = t
+
     def wait_ready(self) -> None:
-        """Block until the in-flight step's output is ready (no accounting).
+        """Block until every in-flight step's output is ready (no accounting).
 
-        Records the dispatch→ready latency for the later ``collect()``. A
-        router calls this on every shard before collecting any of them, so
-        each shard's recorded step latency is its own completion time — not
-        inflated by the host-side work of draining the other shards.
+        Records each step's pipeline-corrected latency for the later
+        ``collect()``. A router calls this on every shard before collecting
+        any of them, so each shard's recorded step latency is its own
+        completion time — not inflated by the host-side work of draining the
+        other shards.
         """
-        if self._pending is not None and self._pending.dt is None:
-            jax.block_until_ready(self._pending.out)
-            self._pending.dt = time.perf_counter() - self._pending.t0
+        for pending in self._pending:
+            self._mark_ready(pending)
 
-    def collect(self, proc_share: Optional[float] = None) -> int:
-        """Block on the in-flight step (if any) and distribute its output.
-
-        Args:
-            proc_share: per-session compute-seconds to charge for this step
-                instead of the default ``latency / n_active``. A router
-                passes ``round_wall / total_sessions_stepped`` here so that
-                summed ``proc_seconds`` across ALL shards equals the round's
-                wall-clock — device work that overlapped is not
-                double-counted into session RTFs.
-
-        Returns:
-            Number of sessions whose output was delivered (0 = nothing was in
-            flight). Safe to call at any time; idempotent until the next
-            ``dispatch()``.
-        """
-        if self._pending is None:
+    def _collect_one(self, proc_share: Optional[float] = None) -> int:
+        """Drain the OLDEST in-flight step; returns its session count."""
+        if not self._pending:
             return 0
-        self.wait_ready()
-        pending = self._pending
-        self._pending = None
+        pending = self._pending.pop(0)
+        self._mark_ready(pending)
         out = np.asarray(pending.out)
         self.step_seconds.append(pending.dt)
 
@@ -430,10 +509,32 @@ class SessionPool:
             sess.stats.proc_seconds += share
         return n_active
 
+    def collect(self, proc_share: Optional[float] = None) -> int:
+        """Block on every in-flight step (if any) and distribute the output.
+
+        Args:
+            proc_share: per-session compute-seconds to charge for this step
+                instead of the default ``latency / n_active``. A router
+                passes ``round_wall / total_sessions_stepped`` here so that
+                summed ``proc_seconds`` across ALL shards equals the round's
+                wall-clock — device work that overlapped is not
+                double-counted into session RTFs.
+
+        Returns:
+            Number of session-steps whose output was delivered (0 = nothing
+            was in flight). Safe to call at any time; idempotent until the
+            next ``dispatch()``.
+        """
+        total = 0
+        while self._pending:
+            total += self._collect_one(proc_share)
+        return total
+
     def step(self) -> int:
         """Run ONE batched hop step over every session with a full hop queued.
 
-        Equivalent to ``dispatch()`` + ``collect()`` back to back.
+        Equivalent to ``dispatch()`` + ``collect()`` back to back (the
+        pipelined path is ``pump()``/raw ``dispatch()``, not ``step()``).
 
         Returns:
             The number of sessions stepped (0 = nothing ready, no compute
@@ -446,10 +547,19 @@ class SessionPool:
         return n
 
     def pump(self) -> int:
-        """Step until no session has a full hop buffered; returns total steps."""
+        """Dispatch until no session has a full (eligible) hop buffered.
+
+        With ``inflight=1`` this is the classic serial loop; with
+        ``inflight=2`` the ring-buffer drain for hop k+1 overlaps the device
+        compute of hop k (double buffering). Either way every launched step
+        is collected before returning.
+
+        Returns total steps dispatched.
+        """
         steps = 0
-        while self.step():
+        while self.dispatch():
             steps += 1
+        self.collect()
         return steps
 
     # -- sharding seams: stats export + session migration -------------------
@@ -478,6 +588,7 @@ class SessionPool:
             "backlog_hops": backlog,
             "p50_ms": self.latency_percentiles((50,))[50],
             "device": str(self.device) if self.device is not None else "default",
+            "backend": self.backend,
         }
 
     def export_session(self, sess: Session) -> SessionTicket:

@@ -141,6 +141,18 @@ class ShardedSessionPool:
             which is how CPU tests exercise multi-shard routing on one core.
         devices: explicit device list; defaults to ``jax.local_devices()``.
         quant / sample_rate / donate: forwarded to every ``SessionPool``.
+        backend: hop-step implementation forwarded to every shard — ``"xla"``
+            or ``"pallas"`` (the deploy-compiled fused path, see
+            ``repro.serve.deploy``). One compiled step per device either way.
+        prune_keep / prune_axis: deploy-time zero-skipping masks for the
+            pallas backend, forwarded to every shard's compiled step (see
+            ``SessionPool``). Lossy by design; ``None`` serves unpruned.
+        inflight / max_unread_hops: per-shard ingestion pipelining depth and
+            output backpressure bound (see ``SessionPool``). ``pump_all``
+            drains every shard each round, so the cross-shard overlap comes
+            from the round structure; ``inflight=2`` additionally overlaps
+            each shard's own host drain with its device step when the pool is
+            driven via per-shard ``dispatch()``/``pump()``.
         vnodes: virtual nodes per shard on the hash ring (more = smoother
             key-space balance at slightly larger ring).
         step_cache: optional mutable dict mapping device -> (device-resident
@@ -164,6 +176,11 @@ class ShardedSessionPool:
         quant: Optional[QuantSpec] = None,
         sample_rate: int = 8000,
         donate: bool = True,
+        backend: str = "xla",
+        prune_keep: Optional[float] = None,
+        prune_axis: Optional[int] = None,
+        inflight: int = 1,
+        max_unread_hops: Optional[int] = None,
         vnodes: int = 64,
         step_cache: Optional[dict] = None,
     ) -> None:
@@ -188,7 +205,10 @@ class ShardedSessionPool:
                 placed = jax.device_put(params, dev)
                 shared[dev] = (
                     placed,
-                    make_stream_hop(placed, cfg, quant=quant, donate=donate),
+                    make_stream_hop(
+                        placed, cfg, quant=quant, donate=donate, backend=backend,
+                        prune_keep=prune_keep, prune_axis=prune_axis,
+                    ),
                 )
             placed, step = shared[dev]
             self._pools.append(
@@ -200,6 +220,9 @@ class ShardedSessionPool:
                     sample_rate=sample_rate,
                     donate=donate,
                     device=dev,
+                    backend=backend,
+                    inflight=inflight,
+                    max_unread_hops=max_unread_hops,
                     step_fn=step,
                 )
             )

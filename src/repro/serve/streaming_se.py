@@ -86,6 +86,64 @@ def reset_slots(state: StreamState, slot_mask: jax.Array) -> StreamState:
     return jax.tree_util.tree_map(zero, state)
 
 
+def hop_analysis(
+    state: StreamState,
+    hop_samples: jax.Array,
+    cfg: tft_mod.TFTConfig,
+    quant: Optional[QuantSpec] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Front half of the hop: roll the analysis window, window, FFT, quantize.
+
+    Returns ``(analysis, frame_ri)`` — the updated (B, n_fft) rolling window
+    and the (B, F, 2) spectral frame entering the model. Shared verbatim by
+    ``stream_hop`` and the deploy path's ``stream_hop_fused`` so the two
+    backends see bit-identical model inputs.
+    """
+    n_fft, hop = cfg.n_fft, cfg.hop
+    w = hann(n_fft, hop_samples.dtype)
+    analysis = jnp.concatenate([state.analysis[:, hop:], hop_samples], axis=1)
+    frame = analysis * w
+    spec = jnp.fft.rfft(frame, axis=-1)  # (B, F)
+    frame_ri = jnp.stack([spec.real, spec.imag], axis=-1)  # (B, F, 2)
+    if quant is not None:
+        frame_ri = quantize(frame_ri, quant)
+    return analysis, frame_ri
+
+
+def hop_synthesis(
+    state: StreamState,
+    analysis: jax.Array,
+    frame_ri: jax.Array,
+    mask: jax.Array,
+    model_state: Pytree,
+    cfg: tft_mod.TFTConfig,
+) -> Tuple[StreamState, jax.Array]:
+    """Back half of the hop: apply the complex mask, iFFT, weighted OLA.
+
+    Takes the (possibly quantized) mask the model emitted and produces
+    ``(new_state, out)`` exactly as documented on ``stream_hop``. Shared by
+    both hop backends — the COLA/wsum invariant lives in ONE place.
+    """
+    n_fft, hop = cfg.n_fft, cfg.hop
+    w = hann(n_fft, frame_ri.dtype)
+    a, b = frame_ri[..., 0], frame_ri[..., 1]
+    m = 2.0 * jnp.tanh(mask)
+    mc, md = m[..., 0], m[..., 1]
+    est = (a * mc - b * md) + 1j * (a * md + b * mc)
+    y = jnp.fft.irfft(est, n=n_fft, axis=-1) * w
+
+    synthesis = state.synthesis + y
+    wsum = state.wsum + (w * w)[None, :]
+    out = synthesis[:, :hop] / jnp.maximum(wsum[:, :hop], 1e-8)
+    new_state = StreamState(
+        analysis=analysis,
+        synthesis=jnp.concatenate([synthesis[:, hop:], jnp.zeros_like(synthesis[:, :hop])], axis=1),
+        wsum=jnp.concatenate([wsum[:, hop:], jnp.zeros_like(wsum[:, :hop])], axis=1),
+        model=model_state,
+    )
+    return new_state, out
+
+
 def stream_hop(
     params: Pytree,
     cfg: tft_mod.TFTConfig,
@@ -116,35 +174,11 @@ def stream_hop(
         emitted sample is final (COLA normalization by the running ``wsum``
         — no lookahead, exact from the first warm-up hop).
     """
-    n_fft, hop = cfg.n_fft, cfg.hop
-    w = hann(n_fft, hop_samples.dtype)
-    analysis = jnp.concatenate([state.analysis[:, hop:], hop_samples], axis=1)
-    frame = analysis * w
-    spec = jnp.fft.rfft(frame, axis=-1)  # (B, F)
-    frame_ri = jnp.stack([spec.real, spec.imag], axis=-1)  # (B, F, 2)
-    if quant is not None:
-        frame_ri = quantize(frame_ri, quant)
-
+    analysis, frame_ri = hop_analysis(state, hop_samples, cfg, quant)
     model_state, mask = tft_mod.stream_step(params, state.model, frame_ri, cfg)
     if quant is not None:
         mask = quantize(mask, quant)
-
-    a, b = frame_ri[..., 0], frame_ri[..., 1]
-    m = 2.0 * jnp.tanh(mask)
-    mc, md = m[..., 0], m[..., 1]
-    est = (a * mc - b * md) + 1j * (a * md + b * mc)
-    y = jnp.fft.irfft(est, n=n_fft, axis=-1) * w
-
-    synthesis = state.synthesis + y
-    wsum = state.wsum + (w * w)[None, :]
-    out = synthesis[:, :hop] / jnp.maximum(wsum[:, :hop], 1e-8)
-    new_state = StreamState(
-        analysis=analysis,
-        synthesis=jnp.concatenate([synthesis[:, hop:], jnp.zeros_like(synthesis[:, :hop])], axis=1),
-        wsum=jnp.concatenate([wsum[:, hop:], jnp.zeros_like(wsum[:, :hop])], axis=1),
-        model=model_state,
-    )
-    return new_state, out
+    return hop_synthesis(state, analysis, frame_ri, mask, model_state, cfg)
 
 
 def make_stream_hop(
@@ -153,6 +187,9 @@ def make_stream_hop(
     *,
     quant: Optional[QuantSpec] = None,
     donate: bool = True,
+    backend: str = "xla",
+    prune_keep: Optional[float] = None,
+    prune_axis: Optional[int] = None,
 ) -> Callable[[StreamState, jax.Array, jax.Array], Tuple[StreamState, jax.Array]]:
     """Build the jit-compiled batched hop step shared by server and benchmarks.
 
@@ -169,12 +206,43 @@ def make_stream_hop(
     ``quant`` switches the whole path onto a ``repro.core.quant`` grid:
     weights are pre-quantized here (once), activations per hop inside
     ``stream_hop``.
+
+    ``backend`` selects the hop implementation:
+
+    - ``"xla"`` (default) — the training graph lowered through generic XLA
+      ops (``stream_hop``).
+    - ``"pallas"`` — the deploy-compiled graph (``repro.serve.deploy``):
+      BN folded out, Pallas kernels in the hot spots, weights pre-quantized
+      after folding. Same signature, parity-tested against ``"xla"``.
+      ``prune_keep``/``prune_axis`` (pallas only) materialize dense
+      zero-skipping masks for the plan's matmul weights
+      (``deploy.build_deploy_plan``) — lossy by design, like the paper's
+      deployment pruning; None serves unpruned.
     """
-    if quant is not None and quant.kind != "none":
-        params = quantize_tree(params, quant)
+    if prune_keep is not None and backend != "pallas":
+        raise ValueError("prune_keep requires backend='pallas' (the deploy path)")
+    if backend == "pallas":
+        from repro.serve.deploy import build_deploy_plan, stream_hop_fused
+
+        plan = build_deploy_plan(
+            params, cfg, quant=quant, prune_keep=prune_keep, prune_axis=prune_axis
+        )
+
+        def hop(state: StreamState, hops: jax.Array):
+            return stream_hop_fused(plan, state, hops)
+
+    elif backend == "xla":
+        if quant is not None and quant.kind != "none":
+            params = quantize_tree(params, quant)
+
+        def hop(state: StreamState, hops: jax.Array):
+            return stream_hop(params, cfg, state, hops, quant=quant)
+
+    else:
+        raise ValueError(f"unknown backend {backend!r}: expected 'xla' or 'pallas'")
 
     def step(state: StreamState, hops: jax.Array, active: jax.Array):
-        stepped, out = stream_hop(params, cfg, state, hops, quant=quant)
+        stepped, out = hop(state, hops)
 
         def merge(new: jax.Array, old: jax.Array) -> jax.Array:
             m = active.reshape((-1,) + (1,) * (new.ndim - 1))

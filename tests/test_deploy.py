@@ -1,0 +1,304 @@
+"""The deploy-compilation path: folding, fused kernels, serving parity.
+
+What the deploy path promises (serve/deploy.py):
+
+1. BN folding is exact algebra — the folded graph (zero normalization ops)
+   matches the training graph's inference mode to float error, on params
+   whose BN running stats are non-trivial ("trained").
+2. The fused hop (``stream_hop_fused``) is a drop-in for ``stream_hop``:
+   same outputs within tolerance whether the kernels run in Pallas
+   interpret mode or as the pure-jnp reference path.
+3. Under shared FP10 quantization the Pallas and reference fused paths are
+   BIT-exact: the deployment grid's mantissa step (2^-4 relative) dwarfs the
+   kernel-vs-XLA float-ordering noise (~1e-6 relative), so both paths snap
+   onto identical grid points, and everything downstream of the two
+   quantization cuts is the same code.
+4. The state-carrying attention kernel == full-window recompute, hop by hop.
+5. The backend knob serves end-to-end: a ``backend="pallas"`` SessionPool /
+   ShardedSessionPool produces the xla pool's audio within tolerance.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pruning import prune_mask
+from repro.core.quant import FP10
+from repro.kernels.linear_attention import linear_attention, linear_attention_step
+from repro.kernels.masked_mac import masked_matmul
+from repro.kernels.masked_mac.ref import masked_matmul_ref
+from repro.models import tftnn as tft
+from repro.serve import SessionPool, ShardedSessionPool
+from repro.serve.deploy import build_deploy_plan, stream_hop_fused, validate_deployable
+from repro.serve.streaming_se import init_stream, stream_hop
+
+
+def tiny_cfg() -> tft.TFTConfig:
+    """A minutes-not-hours TFTNN: full paper topology, toy widths."""
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64, hop=16, freq_bins=16,
+        channels=8, att_dim=8, num_heads=2, gru_hidden=8,
+        dilation_rates=(1, 2), downsample=2,
+    )
+
+
+def trained_params(cfg, seed=0, train_steps=3):
+    """Init + a few train-mode forwards so BN running stats are non-trivial
+    (folding identity scale/zero mean would not exercise the fold)."""
+    params = tft.init_tft(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, cfg.freq_bins + 1, 4, 2))
+    for _ in range(train_steps):
+        _, params = tft.apply_tft(params, x, cfg, train=True)
+    return params
+
+
+def run_hops(hop_fn, state, wave, hop, n):
+    outs = []
+    for i in range(n):
+        state, y = hop_fn(state, wave[:, i * hop : (i + 1) * hop])
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    params = trained_params(cfg)
+    wave = jax.random.normal(jax.random.PRNGKey(7), (2, 4 * cfg.hop)) * 0.3
+    return cfg, params, wave
+
+
+# -- 1+2: BN-fold equivalence and fused parity ------------------------------
+
+def test_bn_fold_equivalence_jnp(setup):
+    """Folded graph (jnp reference kernels) == training graph, trained BN."""
+    cfg, params, wave = setup
+    ref = run_hops(lambda s, h: stream_hop(params, cfg, s, h),
+                   init_stream(params, cfg, 2), wave, cfg.hop, 4)
+    plan = build_deploy_plan(params, cfg, use_pallas=False)
+    out = run_hops(lambda s, h: stream_hop_fused(plan, s, h),
+                   init_stream(params, cfg, 2), wave, cfg.hop, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_fused_pallas_matches_stream_hop(setup):
+    """Folded graph through the Pallas kernels == training graph."""
+    cfg, params, wave = setup
+    ref = run_hops(lambda s, h: stream_hop(params, cfg, s, h),
+                   init_stream(params, cfg, 2), wave, cfg.hop, 4)
+    plan = build_deploy_plan(params, cfg, use_pallas=True)
+    out = run_hops(lambda s, h: stream_hop_fused(plan, s, h),
+                   init_stream(params, cfg, 2), wave, cfg.hop, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_validate_rejects_nondeployable():
+    with pytest.raises(ValueError, match="not deploy-compilable"):
+        validate_deployable(tft.tstnn_config())
+
+
+# -- 3: FP10 bit-exactness under shared quantization ------------------------
+
+def test_fused_fp10_bitmatch(setup):
+    """Pallas vs jnp fused paths, both on FP10: bit-identical audio.
+
+    Deterministic (fixed seed): both paths quantize the spectral frame and
+    the mask onto the same FP10 grid; the in-between kernel float noise is
+    ~1e-6 relative, far inside one FP10 mantissa step, so the grids snap
+    identically and the shared iFFT/OLA tail computes identical bits.
+    """
+    cfg, params, wave = setup
+    plan_p = build_deploy_plan(params, cfg, quant=FP10, use_pallas=True)
+    plan_j = build_deploy_plan(params, cfg, quant=FP10, use_pallas=False)
+    out_p = run_hops(lambda s, h: stream_hop_fused(plan_p, s, h),
+                     init_stream(params, cfg, 2), wave, cfg.hop, 4)
+    out_j = run_hops(lambda s, h: stream_hop_fused(plan_j, s, h),
+                     init_stream(params, cfg, 2), wave, cfg.hop, 4)
+    assert jnp.array_equal(out_p, out_j), (
+        f"max diff {float(jnp.max(jnp.abs(out_p - out_j)))}"
+    )
+
+
+# -- 4: state-carry vs full-window recompute --------------------------------
+
+def test_linear_attention_state_carry_vs_recompute():
+    """Carrying (K^T V) across hops == recomputing the window per hop."""
+    B, H, L, D, hop = 2, 2, 64, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, L, D)) for kk in ks)
+    kv = jnp.zeros((B, H, D, D), jnp.float32)
+    for t in range(L // hop):
+        sl = slice(t * hop, (t + 1) * hop)
+        out, kv = linear_attention_step(q[:, :, sl], k[:, :, sl], v[:, :, sl], kv,
+                                        block_l=8)
+        # full-window recompute oracle over keys [0, (t+1)*hop)
+        kv_full = jnp.einsum("bhld,bhle->bhde",
+                             k[:, :, : (t + 1) * hop], v[:, :, : (t + 1) * hop])
+        ref = jnp.einsum("bhld,bhde->bhle", q[:, :, sl], kv_full)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_linear_attention_step_whole_sequence_is_subband_attention():
+    """Zero state + one whole-sequence hop, /L == non-causal attention."""
+    B, H, L, D = 1, 2, 24, 8  # L deliberately not a block multiple
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, L, D)) for kk in ks)
+    out, _ = linear_attention_step(q, k, v, jnp.zeros((B, H, D, D)), block_l=16)
+    ref = linear_attention(q, k, v, block_l=16)
+    np.testing.assert_allclose(np.asarray(out / L), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# -- masked-MAC kernel ------------------------------------------------------
+
+def test_masked_matmul_parity():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((3, 21, 24)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    # heavy pruning: whole block_k strips go to zero and get skipped
+    mask = prune_mask(w, 0.1)
+    out = masked_matmul(x, w, b, mask=mask, block_k=8)
+    ref = masked_matmul_ref(x, w, b, mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    assert float(mask.mean()) < 0.2  # the mask really is sparse
+
+
+def test_prune_mask_structured_and_bounds():
+    w = jnp.asarray(np.random.default_rng(6).standard_normal((12, 8)), jnp.float32)
+    m = prune_mask(w, 0.5, axis=1)  # keep half the output channels
+    kept_cols = np.asarray(m).max(axis=0)
+    assert kept_cols.sum() == 4 and set(np.unique(m)) <= {0.0, 1.0}
+    assert jnp.array_equal(prune_mask(w, 1.0), jnp.ones_like(w))
+    with pytest.raises(ValueError):
+        prune_mask(w, 0.0)
+
+
+def test_pruned_plan_runs_and_differs(setup):
+    """A pruned DeployPlan serves (pallas == jnp) and actually prunes."""
+    cfg, params, wave = setup
+    plan_p = build_deploy_plan(params, cfg, prune_keep=0.5, use_pallas=True)
+    plan_j = build_deploy_plan(params, cfg, prune_keep=0.5, use_pallas=False)
+    out_p = run_hops(lambda s, h: stream_hop_fused(plan_p, s, h),
+                     init_stream(params, cfg, 2), wave, cfg.hop, 2)
+    out_j = run_hops(lambda s, h: stream_hop_fused(plan_j, s, h),
+                     init_stream(params, cfg, 2), wave, cfg.hop, 2)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_j), atol=1e-5)
+    assert plan_p.masks is not None
+    for name, m in plan_p.masks.items():
+        assert 0.0 < float(m.mean()) < 1.0, name
+
+
+# -- 5: the backend knob end-to-end -----------------------------------------
+
+def test_session_pool_backend_pallas_parity(setup):
+    cfg, params, wave = setup
+    audio = np.asarray(wave[0], np.float32)
+
+    def serve(backend):
+        pool = SessionPool(params, cfg, capacity=2, backend=backend)
+        s = pool.attach()
+        pool.feed(s, audio)
+        pool.pump()
+        out = pool.read(s)
+        pool.detach(s)
+        return out
+
+    out_x, out_p = serve("xla"), serve("pallas")
+    assert out_x.size == audio.size
+    np.testing.assert_allclose(out_p, out_x, atol=1e-4, rtol=1e-4)
+
+
+def test_sharded_pool_backend_pallas(setup):
+    cfg, params, wave = setup
+    audio = np.asarray(wave[0], np.float32)
+    pool = ShardedSessionPool(params, cfg, 2, shards=2, backend="pallas")
+    h = pool.attach("client-0")
+    pool.feed(h, audio)
+    pool.pump_all()
+    out = pool.read(h)
+    pool.detach(h)
+    assert out.size == audio.size
+    assert pool.shard_stats()[0]["backend"] == "pallas"
+
+
+def test_bad_backend_rejected(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="backend"):
+        SessionPool(params, cfg, capacity=1, backend="cuda")
+
+
+def test_session_pool_pruned_pallas_serves(setup):
+    """prune_keep reaches the compiled serving step (lossy but running)."""
+    cfg, params, wave = setup
+    audio = np.asarray(wave[0], np.float32)
+    pool = SessionPool(params, cfg, capacity=1, backend="pallas", prune_keep=0.5)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    out = pool.read(s)
+    pool.detach(s)
+    assert out.size == audio.size and np.isfinite(out).all()
+    # pruning on the xla backend is a config error, not a silent no-op
+    with pytest.raises(ValueError, match="prune_keep"):
+        SessionPool(params, cfg, capacity=1, backend="xla", prune_keep=0.5)
+
+
+# -- double buffering + backpressure ----------------------------------------
+
+def test_double_buffered_pump_bit_identical(setup):
+    """inflight=2 pipelining must not change a single output bit."""
+    cfg, params, wave = setup
+    audio = np.asarray(wave, np.float32)
+
+    def serve(inflight):
+        pool = SessionPool(params, cfg, capacity=4, inflight=inflight)
+        ss = [pool.attach() for _ in range(2)]
+        for i, s in enumerate(ss):
+            pool.feed(s, audio[i])
+        pool.pump()
+        outs = [pool.read(s) for s in ss]
+        for s in ss:
+            pool.detach(s)
+        return outs
+
+    for a, b in zip(serve(1), serve(2)):
+        assert np.array_equal(a, b)
+
+
+def test_backpressure_bounds_unread_output(setup):
+    """max_unread_hops parks a slow reader's stream instead of growing _out."""
+    cfg, params, wave = setup
+    pool = SessionPool(params, cfg, capacity=2, max_unread_hops=2, inflight=2)
+    s = pool.attach()
+    pool.feed(s, np.asarray(jnp.tile(wave[0], 2), np.float32))  # 8 hops queued
+    pool.pump()
+    first = pool.read(s)
+    assert first.size // cfg.hop <= 2  # bounded, not all 8
+    # reading resumes the stream; repeated read+pump drains everything
+    total = first.size
+    for _ in range(8):
+        pool.pump()
+        total += pool.read(s).size
+    assert total == 8 * cfg.hop
+    pool.detach(s)
+
+
+def test_interpret_default_env(monkeypatch):
+    from repro.kernels import interpret_default
+    from repro.kernels.runtime import ENV_VAR
+
+    monkeypatch.setenv(ENV_VAR, "1")
+    assert interpret_default() is True
+    monkeypatch.setenv(ENV_VAR, "0")
+    assert interpret_default() is False
+    monkeypatch.setenv(ENV_VAR, "auto")
+    assert interpret_default() == (jax.default_backend() != "tpu")
+    monkeypatch.setenv(ENV_VAR, "bogus")
+    with pytest.raises(ValueError):
+        interpret_default()
