@@ -20,6 +20,16 @@ Two sweep axes compare the serving configurations this benchmark exists for:
   ingestion (``SessionPool(inflight=2)``: host ring drain overlaps the
   in-flight device step).
 
+``--ramp`` instead drives an **elastic** pool (``ElasticSessionPool``,
+``--tiers`` capacity ladder) through a session ramp that climbs past at
+least two tier boundaries and back down: at every target occupancy it feeds
+all live sessions and pumps, while one pilot session streams continuously
+across the whole ramp (so a dropped or corrupted stream is detected, not
+averaged away). Each point records the current tier plus cumulative
+grow/shrink counts; the JSON artifact additionally gets a ``resizes``
+summary (counts + migration-pause ms) per backend — the numbers the
+ROADMAP's elastic-capacity item asks for.
+
 ``--shards N`` instead sweeps SHARD COUNT at full per-shard load through
 ``ShardedSessionPool`` (one pool per device, overlapped ``pump_all``). If
 capacity scales linearly with devices, rt_capacity grows ~linearly in the
@@ -40,7 +50,8 @@ deploy path from rotting.
 
 Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
           [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
-          [--buffering single,double] [--smoke] [--json PATH]
+          [--buffering single,double] [--ramp] [--tiers 4,16,64]
+          [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
@@ -59,9 +70,15 @@ from common import emit  # noqa: E402
 
 from repro.audio.synthetic import batch_for_step  # noqa: E402
 from repro.core.quant import FP10  # noqa: E402
-from repro.launch.serve import reduced_cfg  # noqa: E402
+from repro.launch.serve import parse_tiers, reduced_cfg  # noqa: E402
 from repro.models import tftnn as tft  # noqa: E402
-from repro.serve import SessionPool, ShardedSessionPool, make_stream_hop  # noqa: E402
+from repro.serve import (  # noqa: E402
+    ElasticSessionPool,
+    PoolFullError,
+    SessionPool,
+    ShardedSessionPool,
+    make_stream_hop,
+)
 
 
 def bench_cfg() -> tft.TFTConfig:
@@ -138,6 +155,97 @@ def run_sharded_point(params, cfg, n_shards: int, per_shard: int,
     }
 
 
+def _ramp_targets(tiers: tuple) -> list:
+    """Occupancy targets that fill each tier, cross its boundary (grow), then
+    descend below the shrink watermarks (shrink) — every grow AND shrink edge
+    of the ladder is exercised once."""
+    up = []
+    for lo in tiers[:-1]:
+        up.extend([lo, lo + 1])  # fill the tier, then force a grow
+    up.append(min(tiers[-1], tiers[-2] + 2))
+    # descend to half of each lower tier: under the default shrink_fraction
+    # watermark, so the lazy shrinker steps back down the ladder
+    down = [max(1, t // 2) for t in reversed(tiers[:-1])]
+    return up + down + [1]
+
+
+def run_ramp(params, cfg, tiers: tuple, audio: np.ndarray, quant,
+             backend: str, buffering: str) -> tuple:
+    """Drive an ElasticSessionPool through the ramp; returns (points, summary).
+
+    One **pilot** session streams continuously across every target (attached
+    first, never detached): its hop count must equal the total audio it was
+    fed, so a session dropped or corrupted by a resize fails the run instead
+    of vanishing into an average. ``shrink_patience=1`` makes the down-ramp
+    shrink on the next pump instead of waiting out the serving-loop
+    hysteresis; ``prewarm=True`` compiles every tier up front so per-tier RTF
+    measures serving, not jit.
+    """
+    pool = ElasticSessionPool(
+        params, cfg, tiers, quant=quant, backend=backend,
+        inflight=2 if buffering == "double" else 1,
+        shrink_patience=1, prewarm=True,
+    )
+    hop, sr = cfg.hop, pool.sample_rate
+    pilot = pool.attach()
+    handles = []
+    points = []
+    pilot_samples = 0
+    dropped = 0  # attaches the elastic pool refused (should never happen:
+    # every ramp target fits under the top tier)
+    for target in _ramp_targets(tiers):
+        while pool.num_active < target:
+            try:
+                handles.append(pool.attach())
+            except PoolFullError:
+                dropped += 1
+                break
+        while pool.num_active > target and handles:
+            pool.detach(handles.pop())
+        live = [pilot] + handles
+        for i, h in enumerate(live):
+            pool.feed(h, audio[i % audio.shape[0]])
+        t0 = time.perf_counter()
+        pool.pump()
+        wall = time.perf_counter() - t0
+        pilot_samples += pool.read(pilot).size  # pilot continuity, and keeps _out flat
+        audio_sec = len(live) * (audio.shape[1] // hop) * hop / sr
+        rtf = wall / audio_sec
+        points.append({
+            "sessions": target,
+            "tier": pool.capacity,
+            "aggregate_rtf": rtf,
+            "rt_capacity": 1.0 / rtf if rtf > 0 else float("inf"),
+            "grows": pool.grow_count,
+            "shrinks": pool.shrink_count,
+            "wall_s": wall,
+        })
+    for _ in range(len(tiers)):
+        pool.pump()  # idle heartbeats: let the lazy shrinker settle
+    expected = pilot.stats.samples_in // hop * hop
+    if pilot_samples != expected or pilot.stats.hops * hop != expected:
+        raise SystemExit(
+            f"pilot stream lost audio across the ramp: read {pilot_samples} "
+            f"of {expected} samples ({pilot.stats.hops} hops)"
+        )
+    pauses = np.asarray(pool.resize_seconds) * 1e3 if pool.resize_seconds else np.zeros(1)
+    summary = {
+        "backend": backend,
+        "buffering": buffering,
+        "tiers": list(tiers),
+        "grows": pool.grow_count,
+        "shrinks": pool.shrink_count,
+        "resize_log": [list(t) for t in pool.resize_log],
+        "mean_pause_ms": float(pauses.mean()),
+        "max_pause_ms": float(pauses.max()),
+        "final_tier": pool.capacity,
+        "dropped_sessions": dropped,  # measured: refused attaches (pilot
+        # integrity is enforced separately by the SystemExit check above)
+        "pilot_hops": pilot.stats.hops,
+    }
+    return points, summary
+
+
 def _shard_sweep(n_max: int) -> list:
     s, out = 1, []
     while s < n_max:
@@ -198,6 +306,14 @@ def main() -> None:
                     help="sweep ShardedSessionPool from 1 up to N shards at full "
                     "per-shard load (0 = single-pool sessions sweep); fake CPU "
                     "devices with XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--ramp", action="store_true",
+                    help="elastic ramp workload: sweep sessions up past the "
+                    "--tiers boundaries and back down through an "
+                    "ElasticSessionPool, recording tier, RTF, resize counts "
+                    "and migration pause per point")
+    ap.add_argument("--tiers", default="4,16,64",
+                    help="--ramp capacity ladder (comma list, strictly "
+                    "increasing, each >= 2; needs >= 2 tiers)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run (capacity<=2, <=0.25s audio, 1-2 "
                     "sessions) so the pallas/interpret path stays fast")
@@ -210,6 +326,11 @@ def main() -> None:
     if args.smoke:
         args.capacity = min(args.capacity, 2)
         args.seconds = min(args.seconds, 0.25)
+        if args.ramp and args.tiers == "4,16,64":
+            args.tiers = "2,4,8"  # CI-sized ladder, still two boundaries
+    tiers = parse_tiers(args.tiers)
+    if args.ramp and len(tiers) < 2:
+        raise SystemExit(f"--ramp needs >= 2 tiers, got {tiers}")
 
     cfg = bench_cfg()
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
@@ -231,6 +352,8 @@ def main() -> None:
             "backends": backends,
             "bufferings": bufferings,
             "shards_max": args.shards,
+            "ramp": args.ramp,
+            "tiers": list(tiers) if args.ramp else None,
             "smoke": args.smoke,
             "hop_budget_ms": budget_ms,
             "devices": len(jax.local_devices()),
@@ -241,7 +364,31 @@ def main() -> None:
     points = result["points"]
     print("name,us_per_call,derived")
 
-    if args.shards > 0:
+    if args.ramp:
+        print(f"# elastic ramp over tiers={tiers}, audio/session/point="
+              f"{args.seconds}s, backends={backends}, bufferings={bufferings}, "
+              f"quant={'fp10' if args.quant else 'fp32'}")
+        result["resizes"] = []
+        for backend in backends:
+            for buffering in bufferings:
+                ramp_points, summary = run_ramp(
+                    params, cfg, tiers, audio, quant, backend, buffering)
+                for r in ramp_points:
+                    r.update(mode="ramp", backend=backend, buffering=buffering)
+                    points.append(r)
+                    emit(
+                        f"backend={backend} buffering={buffering} "
+                        f"ramp sessions={r['sessions']}",
+                        r["wall_s"] * 1e6,
+                        f"tier={r['tier']} aggregate_rtf={r['aggregate_rtf']:.3f} "
+                        f"grows={r['grows']} shrinks={r['shrinks']}",
+                    )
+                result["resizes"].append(summary)
+                print(f"# resizes[{backend}/{buffering}]: "
+                      f"grows={summary['grows']} shrinks={summary['shrinks']} "
+                      f"max_pause={summary['max_pause_ms']:.2f}ms "
+                      f"dropped={summary['dropped_sessions']}")
+    elif args.shards > 0:
         print(f"# shard sweep up to {args.shards}, capacity/shard={args.capacity}, "
               f"audio/session={args.seconds}s, backends={backends}, "
               f"quant={'fp10' if args.quant else 'fp32'}")

@@ -3,8 +3,11 @@
 Loads TFTNN weights (or inits fresh), then enhances audio hop-by-hop with
 16 ms algorithmic latency, reporting per-hop wall time against the real-time
 budget. Other tasks: ``--task pool`` serves many sessions through one
-``SessionPool``; ``--task sharded`` runs one pool per device behind the
-consistent-hash router (``--shards N``; fake CPU devices with
+``SessionPool`` (``--elastic --tiers 4,16,64`` swaps in an
+``ElasticSessionPool`` that grows/shrinks along a pre-compiled capacity
+ladder); ``--task sharded`` runs one pool per device behind the
+consistent-hash router (``--shards N``, elastic shards with ``--elastic``;
+fake CPU devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--task lm`` runs
 batched greedy decode on a reduced arch. See docs/serving.md.
 """
@@ -70,21 +73,37 @@ def serve_se(args) -> None:
     print(f"quality vs clean: {scores}")
 
 
+def parse_tiers(raw: str) -> tuple:
+    """'4,16,64' -> (4, 16, 64); validation happens in ElasticSessionPool."""
+    try:
+        return tuple(int(v) for v in raw.split(",") if v.strip())
+    except ValueError:
+        raise SystemExit(f"--tiers must be a comma list of ints, got {raw!r}")
+
+
 def serve_pool(args) -> None:
-    """Multi-session server: --batch concurrent streams through one SessionPool."""
+    """Multi-session server: --batch concurrent streams through one
+    SessionPool (or an ElasticSessionPool tier ladder with --elastic)."""
     from repro.audio.synthetic import batch_for_step
     from repro.core.quant import FP10
     from repro.models import tftnn as tft
-    from repro.serve import SessionPool
+    from repro.serve import ElasticSessionPool, SessionPool
 
     cfg = tft.tftnn_config()
     if args.reduced:
         cfg = reduced_cfg(cfg)
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
-    pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
-                       quant=FP10 if args.quant else None,
-                       backend=args.backend, prune_keep=args.prune_keep,
-                       inflight=2 if args.double_buffer else 1)
+    if args.elastic:
+        # starts at the smallest tier and grows as sessions attach
+        pool = ElasticSessionPool(params, cfg, parse_tiers(args.tiers),
+                                  quant=FP10 if args.quant else None,
+                                  backend=args.backend, prune_keep=args.prune_keep,
+                                  inflight=2 if args.double_buffer else 1)
+    else:
+        pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
+                           quant=FP10 if args.quant else None,
+                           backend=args.backend, prune_keep=args.prune_keep,
+                           inflight=2 if args.double_buffer else 1)
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
     sessions = [pool.attach() for _ in range(args.batch)]
@@ -109,11 +128,14 @@ def serve_sharded(args) -> None:
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     n_dev = len(jax.local_devices())
     per_shard = max(1, -(-args.batch // args.shards))  # ceil; hash skew absorbed below
+    tiers = parse_tiers(args.tiers) if args.elastic else None
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, prune_keep=args.prune_keep,
-                              inflight=2 if args.double_buffer else 1)
-    print(f"{args.shards} shards x {per_shard} slots over {n_dev} local device(s)")
+                              inflight=2 if args.double_buffer else 1,
+                              tiers=tiers)
+    slots = f"tiers {tiers}" if args.elastic else f"{per_shard} slots"
+    print(f"{args.shards} shards x {slots} over {n_dev} local device(s)")
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
     # rebalance_on_full: consistent hashing is not perfectly uniform, so a
@@ -153,6 +175,13 @@ def main() -> None:
                     help="pool/sharded tasks: hop-step implementation — xla "
                     "(training graph) or pallas (deploy-compiled fused graph: "
                     "BN folded, Pallas kernels; interpret mode off-TPU)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="pool/sharded tasks: serve through an elastic pool "
+                    "that grows/shrinks along the --tiers capacity ladder "
+                    "with live bit-exact session migration")
+    ap.add_argument("--tiers", default="4,16,64",
+                    help="--elastic capacity ladder (comma list, strictly "
+                    "increasing, each >= 2)")
     ap.add_argument("--double-buffer", action="store_true",
                     help="pool/sharded tasks: inflight=2 — overlap the host "
                     "ring-buffer drain with the in-flight device step")

@@ -5,14 +5,20 @@ by the offline scan, the quantized path, and the server); ``deploy`` compiles
 the trained graph into the ASIC-shaped serving graph (BN folded, pruning
 masks, FP10 weights, Pallas kernels — ``backend="pallas"``);
 ``session_server`` multiplexes many client sessions onto the hop step;
-``sharded_pool`` runs one such pool per device behind a consistent-hash
-router. Architecture tour: ``docs/serving.md`` and ``docs/deploy.md``.
+``elastic_pool`` grows/shrinks a pool along pre-compiled capacity tiers with
+live bit-exact session migration; ``sharded_pool`` runs one pool per device
+behind a consistent-hash router (optionally with elastic shards).
+Architecture tour: ``docs/serving.md`` and ``docs/deploy.md``.
 """
 
 from repro.serve.deploy import (  # noqa: F401
     DeployPlan,
     build_deploy_plan,
     stream_hop_fused,
+)
+from repro.serve.elastic_pool import (  # noqa: F401
+    ElasticSession,
+    ElasticSessionPool,
 )
 from repro.serve.session_server import (  # noqa: F401
     PoolFullError,

@@ -1,0 +1,495 @@
+"""Elastic session pools: pre-compiled capacity tiers with live migration.
+
+A ``SessionPool``'s capacity is baked into its compiled batched hop step, so
+a hot pool hard-fails with ``PoolFullError`` instead of growing. The paper's
+fix for a fixed compute envelope is to *pick* the envelope, not to stretch
+it: TinyLSTMs and the sparsity-tradeoff literature both serve edge speech
+enhancement from a small menu of pre-sized models. ``ElasticSessionPool`` is
+the serving-side analogue — a small **ladder of capacity tiers** (default
+4/16/64), each a legal batch shape of ONE shared jit hop step, with live
+sessions migrated **bit-exactly** between tiers through the existing
+``SessionTicket`` export/import seam:
+
+- **One step function, one compilation per tier** — all tiers share a single
+  ``make_stream_hop`` callable; jax.jit specializes it per batch shape, so
+  tier capacity N compiles exactly once (the first step at that tier, or
+  eagerly with ``prewarm=True``). Resizing swaps the *state*, never the code.
+- **Grow on attach-would-overflow** — ``attach()`` on a full pool climbs to
+  the next tier instead of raising; ``PoolFullError`` only at the top tier.
+- **Shrink on sustained low occupancy** — every ``pump()``/``step()`` ticks
+  a watermark check: when occupancy has sat at or below
+  ``shrink_fraction * lower_tier`` for ``shrink_patience`` consecutive
+  checks, the pool drops one tier. The fraction (not just "fits") plus the
+  patience counter are the hysteresis that keeps a pool oscillating around a
+  tier boundary from thrashing: growth is instant, shrinking is lazy, and a
+  freshly shrunk pool has at least ``1 - shrink_fraction`` headroom.
+- **Resizes compose with the PR-3 machinery** — a resize first ``collect()``s
+  the in-flight dispatch pipeline (``inflight=2`` double buffering), so no
+  pending step's output is orphaned; tickets carry ring buffers, unread
+  output, and per-session stats, and the pool-wide ``step_seconds`` latency
+  record is carried across (same list object), so accounting is continuous.
+- **Stable handles** — clients hold ``ElasticSession`` handles that survive
+  resizes (the inner per-tier ``Session`` is swapped underneath), exactly as
+  ``ShardedSession`` survives shard migration.
+
+Observability: ``grow_count``/``shrink_count``/``resize_seconds`` (the pause
+each migration cost) and the ``(from, to)`` ``resize_log`` feed the ramp
+benchmark (``benchmarks/server_throughput.py --ramp``) and ``shard_stats()``.
+
+Invariants are property-tested under randomized churn in
+``tests/test_elastic_pool.py`` (bit-identity to a fixed-capacity reference
+pool) and checked op-by-op by ``tests/soak.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.quant import QuantSpec
+from repro.models import tftnn as tft_mod
+from repro.serve.session_server import (
+    PoolFullError,
+    Session,
+    SessionError,
+    SessionPool,
+    SessionTicket,
+)
+from repro.serve.streaming_se import init_stream, make_stream_hop
+
+Pytree = dict
+
+
+@dataclasses.dataclass
+class ElasticSession:
+    """Client handle returned by ``ElasticSessionPool.attach``.
+
+    Stable across resizes: ``inner`` is the live per-tier ``Session`` and is
+    swapped when the pool migrates to another tier; ``sid`` never changes.
+    """
+
+    sid: int
+    inner: Session
+    detached: bool = False
+
+    @property
+    def stats(self):
+        """Per-session accounting (``SessionStats``) — survives resizes."""
+        return self.inner.stats
+
+    @property
+    def slot(self) -> int:
+        """The session's slot in the CURRENT tier (changes on resize)."""
+        return self.inner.slot
+
+
+class ElasticSessionPool:
+    """A ``SessionPool`` that resizes itself along a ladder of capacity tiers.
+
+    Same client surface as ``SessionPool`` (attach/feed/read/detach/pump plus
+    the dispatch/collect seam and export/import migration), so it drops into
+    ``ShardedSessionPool`` as an elastic shard. Capacity changes are live
+    migrations: every session's recurrent state, ring buffer, unread output,
+    and stats move bit-exactly (``SessionTicket``), and the stream's audio is
+    bit-identical to one served by a fixed pool at the top tier.
+
+    Args:
+        params: TFTNN parameter pytree (placed on ``device`` once, here).
+        cfg: model/front-end config shared by every tier.
+        tiers: strictly increasing capacity ladder, e.g. ``(4, 16, 64)``.
+            The pool starts at ``tiers[0]`` and never exceeds ``tiers[-1]``.
+        quant / sample_rate / donate / device / backend / prune_keep /
+            prune_axis / inflight / max_unread_hops: forwarded to every
+            tier's ``SessionPool`` (see there). The compiled step is built
+            ONCE from these and shared by all tiers.
+        shrink_fraction: occupancy watermark for shrinking, relative to the
+            NEXT LOWER tier: the pool is shrink-eligible only while
+            ``num_active <= shrink_fraction * lower_tier`` (default 0.5 — a
+            freshly shrunk pool is at most half full). Must be in (0, 1].
+        shrink_patience: consecutive eligible ``pump()``/``step()`` checks
+            required before a shrink actually happens (default 8). Growth
+            has no patience — an attach must not fail while capacity exists.
+        prewarm: compile (and time) every tier's step at construction by
+            running one masked-out step per tier, so no serving-path step
+            ever pays a jit compile. Off by default (tests construct many
+            pools); the ramp benchmark turns it on.
+        step_fn: pre-built hop step shared with other pools (see
+            ``SessionPool``); built via ``make_stream_hop`` when omitted.
+
+    Raises:
+        ValueError: empty/non-increasing ``tiers``, bad ``shrink_fraction``.
+    """
+
+    def __init__(
+        self,
+        params: Pytree,
+        cfg: tft_mod.TFTConfig,
+        tiers: Sequence[int] = (4, 16, 64),
+        *,
+        quant: Optional[QuantSpec] = None,
+        sample_rate: int = 8000,
+        donate: bool = True,
+        device: Optional[jax.Device] = None,
+        backend: str = "xla",
+        prune_keep: Optional[float] = None,
+        prune_axis: Optional[int] = None,
+        inflight: int = 1,
+        max_unread_hops: Optional[int] = None,
+        shrink_fraction: float = 0.5,
+        shrink_patience: int = 8,
+        prewarm: bool = False,
+        step_fn=None,
+    ) -> None:
+        tiers = tuple(int(t) for t in tiers)
+        if not tiers:
+            raise ValueError("tiers must be a non-empty capacity ladder")
+        # >= 2, not >= 1: XLA specializes batch-1 reductions (matvec vs
+        # matmul), which breaks the cross-tier bit-identity this pool
+        # promises; every capacity >= 2 lowers identically per slot.
+        if any(t < 2 for t in tiers) or any(
+            b <= a for a, b in zip(tiers, tiers[1:])
+        ):
+            raise ValueError(
+                f"tiers must be strictly increasing capacities >= 2, got {tiers} "
+                f"(capacity-1 tiers are rejected: XLA's batch-1 specialization "
+                f"would break bit-exact migration between tiers)"
+            )
+        if not 0.0 < shrink_fraction <= 1.0:
+            raise ValueError("shrink_fraction must be in (0, 1]")
+        if shrink_patience < 1:
+            raise ValueError("shrink_patience must be >= 1")
+        self.tiers = tiers
+        self.cfg = cfg
+        self.quant = quant
+        self.backend = backend
+        self.device = device
+        self._sample_rate = sample_rate
+        self._donate = donate
+        self._inflight = inflight
+        self._max_unread_hops = max_unread_hops
+        self._shrink_fraction = shrink_fraction
+        self._shrink_patience = shrink_patience
+        if device is not None:
+            params = jax.device_put(params, device)
+        self._params = params
+        # ONE step callable for every tier: jit specializes per (capacity,)
+        # batch shape, so each tier costs one compilation, ever.
+        self._step = (
+            step_fn
+            if step_fn is not None
+            else make_stream_hop(
+                params, cfg, quant=quant, donate=donate, backend=backend,
+                prune_keep=prune_keep, prune_axis=prune_axis,
+            )
+        )
+        self._pool = self._make_pool(tiers[0])
+        self._handles: Dict[int, ElasticSession] = {}
+        self._sid_counter = itertools.count()
+        self._low_streak = 0
+        self.grow_count = 0
+        self.shrink_count = 0
+        self.resize_seconds: List[float] = []  # pause per resize (migration)
+        self.resize_log: List[Tuple[int, int]] = []  # (from_cap, to_cap)
+        if prewarm:
+            self._prewarm()
+
+    def _make_pool(self, capacity: int) -> SessionPool:
+        return SessionPool(
+            self._params,
+            self.cfg,
+            capacity,
+            quant=self.quant,
+            sample_rate=self._sample_rate,
+            donate=self._donate,
+            device=self.device,
+            backend=self.backend,
+            inflight=self._inflight,
+            max_unread_hops=self._max_unread_hops,
+            step_fn=self._step,
+        )
+
+    def _prewarm(self) -> None:
+        """Compile every tier's batch shape now (one masked-out step each),
+        so a serving-path resize never stalls on jit."""
+        hop = self.cfg.hop
+        for cap in self.tiers:
+            state = init_stream(self._params, self.cfg, cap)
+            hops = np.zeros((cap, hop), np.float32)
+            active = np.zeros((cap,), bool)
+            if self.device is not None:
+                state = jax.device_put(state, self.device)
+                hops = jax.device_put(hops, self.device)
+                active = jax.device_put(active, self.device)
+            new_state, out = self._step(state, hops, active)
+            jax.block_until_ready(out)
+            del new_state  # donated dummy state; the live pool keeps its own
+
+    # -- capacity / introspection -------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """The CURRENT tier's capacity (changes on resize)."""
+        return self._pool.capacity
+
+    @property
+    def max_capacity(self) -> int:
+        """The top tier — the hard ``PoolFullError`` bound."""
+        return self.tiers[-1]
+
+    @property
+    def tier_index(self) -> int:
+        return self.tiers.index(self._pool.capacity)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._handles)
+
+    @property
+    def sample_rate(self) -> int:
+        return self._sample_rate
+
+    @property
+    def step_seconds(self) -> List[float]:
+        """Pool-wide per-step latency record — the SAME list across resizes
+        (latency accounting continuity; see ``_resize``)."""
+        return self._pool.step_seconds
+
+    # -- resizing ------------------------------------------------------------
+
+    def resize_to(self, capacity: int) -> None:
+        """Migrate the pool to an explicit tier (mostly for tests/benchmarks).
+
+        Args:
+            capacity: a value from ``tiers`` with room for every live session.
+
+        Raises:
+            ValueError: ``capacity`` is not on the ladder or is smaller than
+                the current occupancy. The pool is unchanged on failure.
+        """
+        if capacity not in self.tiers:
+            raise ValueError(f"capacity {capacity} is not on the ladder {self.tiers}")
+        if capacity < self.num_active:
+            raise ValueError(
+                f"cannot resize to {capacity}: {self.num_active} sessions are live"
+            )
+        if capacity != self._pool.capacity:
+            self._resize(capacity)
+
+    def try_shrink(self, force: bool = False) -> bool:
+        """One watermark-gated shrink check (called from ``pump``/``step``).
+
+        Args:
+            force: shrink NOW, and keep dropping tiers while the sessions
+                fit in the lower tier with at least one free slot — no
+                patience, and the plain fits-with-headroom bound instead of
+                the ``shrink_fraction`` watermark. Used by
+                ``ShardedSessionPool.rebalance`` to slim donor shards
+                immediately after sessions migrate away.
+
+        Returns:
+            True if the pool shrank at least one tier.
+        """
+        shrank = False
+        while True:
+            i = self.tier_index
+            if i == 0:
+                break
+            lower = self.tiers[i - 1]
+            if force:
+                if self.num_active >= lower:
+                    break
+            elif self.num_active > self._shrink_fraction * lower:
+                self._low_streak = 0
+                break
+            if not force:
+                self._low_streak += 1
+                if self._low_streak < self._shrink_patience:
+                    break
+            self._resize(lower)
+            self._low_streak = 0
+            shrank = True
+            if not force:
+                break  # at most one lazy shrink per check
+        return shrank
+
+    def _grow(self) -> bool:
+        """Climb one tier; False when already at the top."""
+        i = self.tier_index
+        if i + 1 >= len(self.tiers):
+            return False
+        self._resize(self.tiers[i + 1])
+        return True
+
+    def _resize(self, new_capacity: int) -> None:
+        """Live-migrate every session to a pool of ``new_capacity`` slots.
+
+        Bit-exact by construction: drain the in-flight dispatch pipeline
+        (``collect`` — mandatory under ``inflight>1`` so no pending step's
+        output is orphaned), snapshot every session through the same
+        ``SessionTicket`` seam shard migration uses, then resume each one in
+        the new pool. The old pool's ``step_seconds`` list moves to the new
+        pool (same object), so latency percentiles span the resize.
+        """
+        t0 = time.perf_counter()
+        old = self._pool
+        old.collect()  # drain the pending pipeline before swapping tiers
+        tickets = [
+            (handle, old.export_session(handle.inner))
+            for handle in list(self._handles.values())
+        ]
+        new = self._make_pool(new_capacity)
+        new.step_seconds = old.step_seconds  # latency continuity (same list)
+        for handle, ticket in tickets:
+            handle.inner = new.import_session(ticket)
+        grew = new_capacity > old.capacity
+        self._pool = new
+        self.grow_count += grew
+        self.shrink_count += not grew
+        # any resize restarts the shrink hysteresis: a streak accumulated at
+        # the OLD tier must not count toward shrinking the new one
+        self._low_streak = 0
+        self.resize_log.append((old.capacity, new_capacity))
+        self.resize_seconds.append(time.perf_counter() - t0)
+
+    # -- session lifecycle ---------------------------------------------------
+
+    def attach(self) -> ElasticSession:
+        """Claim a slot, growing to the next tier when the current one is full.
+
+        Returns:
+            A resize-stable ``ElasticSession`` handle.
+
+        Raises:
+            PoolFullError: the TOP tier is full — the message reports the
+                ladder, so callers can tell "configure a bigger ladder" from
+                a plain fixed pool's "make a bigger pool".
+        """
+        if self._pool.num_active >= self._pool.capacity and not self._grow():
+            raise PoolFullError(
+                f"elastic pool is full at the top tier (capacity="
+                f"{self.max_capacity}, active={self.num_active}, "
+                f"tiers={self.tiers}); detach a session or widen the ladder"
+            )
+        handle = ElasticSession(sid=next(self._sid_counter), inner=self._pool.attach())
+        self._handles[handle.sid] = handle
+        return handle
+
+    def _check(self, handle: ElasticSession) -> None:
+        if handle.detached or self._handles.get(handle.sid) is not handle:
+            raise SessionError(
+                f"session {handle.sid} is not attached to this elastic pool"
+            )
+
+    def detach(self, handle: ElasticSession) -> np.ndarray:
+        """Release the session; returns unread audio (see ``SessionPool``).
+
+        Shrinking is NOT triggered here — occupancy watermarks are evaluated
+        on the serving heartbeat (``pump``/``step``), where the patience
+        counter gives churn a chance to settle.
+        """
+        self._check(handle)
+        tail = self._pool.detach(handle.inner)
+        handle.detached = True
+        del self._handles[handle.sid]
+        return tail
+
+    # -- audio I/O -----------------------------------------------------------
+
+    def feed(self, handle: ElasticSession, samples) -> None:
+        """Queue raw audio (any chunk length) for a session."""
+        self._check(handle)
+        self._pool.feed(handle.inner, samples)
+
+    def read(self, handle: ElasticSession) -> np.ndarray:
+        """Pop all enhanced audio produced for this session so far."""
+        self._check(handle)
+        return self._pool.read(handle.inner)
+
+    # -- the batched hop loop ------------------------------------------------
+
+    def dispatch(self) -> int:
+        """Non-blocking batched step launch (see ``SessionPool.dispatch``).
+
+        No resize can happen between a ``dispatch()`` and its ``collect()``
+        from inside the pool — resizes only trigger on attach (grow) and on
+        ``pump``/``step``/``try_shrink`` (shrink), and ``_resize`` drains the
+        pipeline first regardless.
+        """
+        return self._pool.dispatch()
+
+    def wait_ready(self) -> None:
+        self._pool.wait_ready()
+
+    def collect(self, proc_share: Optional[float] = None) -> int:
+        return self._pool.collect(proc_share)
+
+    def step(self) -> int:
+        n = self._pool.step()
+        self.try_shrink()
+        return n
+
+    def pump(self) -> int:
+        steps = self._pool.pump()
+        self.try_shrink()
+        return steps
+
+    # -- migration seam (elastic shards) --------------------------------------
+
+    def export_session(self, handle: ElasticSession) -> SessionTicket:
+        """Snapshot + release one session (the shard-migration source)."""
+        self._check(handle)
+        ticket = self._pool.export_session(handle.inner)
+        handle.detached = True
+        del self._handles[handle.sid]
+        return ticket
+
+    def import_session(self, ticket: SessionTicket) -> ElasticSession:
+        """Resume an exported session here, growing a full pool if needed."""
+        if self._pool.num_active >= self._pool.capacity and not self._grow():
+            raise PoolFullError(
+                f"elastic pool is full at the top tier (capacity="
+                f"{self.max_capacity}, active={self.num_active}, "
+                f"tiers={self.tiers}); cannot import the session"
+            )
+        handle = ElasticSession(
+            sid=next(self._sid_counter), inner=self._pool.import_session(ticket)
+        )
+        self._handles[handle.sid] = handle
+        return handle
+
+    # -- reporting -----------------------------------------------------------
+
+    def latency_percentiles(self, qs=(50, 95, 99)) -> Dict[int, float]:
+        return self._pool.latency_percentiles(qs)
+
+    def shard_stats(self) -> Dict[str, object]:
+        """``SessionPool.shard_stats`` plus the elastic counters."""
+        stats = self._pool.shard_stats()
+        stats.update(
+            tier=self._pool.capacity,
+            tiers=self.tiers,
+            max_capacity=self.max_capacity,
+            grows=self.grow_count,
+            shrinks=self.shrink_count,
+        )
+        return stats
+
+    def report(self) -> str:
+        lines = [
+            f"ElasticSessionPool(tiers={self.tiers}, tier={self.capacity}, "
+            f"active={self.num_active}, grows={self.grow_count}, "
+            f"shrinks={self.shrink_count})"
+        ]
+        lines.append(self._pool.report())
+        if self.resize_seconds:
+            pauses = np.asarray(self.resize_seconds) * 1e3
+            lines.append(
+                f"  resize pause ms: mean={pauses.mean():.2f} max={pauses.max():.2f} "
+                f"({len(pauses)} resizes: {self.resize_log})"
+            )
+        return "\n".join(lines)

@@ -76,8 +76,11 @@ class PoolFullError(SessionError):
     """``attach()`` on a pool whose every slot is occupied.
 
     Capacity is fixed at construction (it is baked into the compiled batched
-    step), so the only remedies are detaching a session or creating a pool
-    with a larger capacity. The sharded router raises the subclass
+    step), so the only remedies are detaching a session, creating a pool
+    with a larger capacity, or serving through
+    ``repro.serve.elastic_pool.ElasticSessionPool`` (which grows along a
+    pre-compiled tier ladder and only raises this at its top tier). The
+    sharded router raises the subclass
     ``repro.serve.sharded_pool.ShardFullError`` instead when only the routed
     shard — not the whole fleet — is out of slots.
     """
@@ -325,7 +328,9 @@ class SessionPool:
             slot = self._slot_session.index(None)
         except ValueError:
             raise PoolFullError(
-                f"pool is full ({self.capacity} sessions); detach one first"
+                f"pool is full (capacity={self.capacity}, "
+                f"active={self.num_active}); detach a session first or serve "
+                f"through an elastic pool (repro.serve.ElasticSessionPool)"
             ) from None
         mask = jnp.zeros((self.capacity,), bool).at[slot].set(True)
         self._state = reset_slots(self._state, mask)

@@ -23,6 +23,12 @@ retry) vs ``PoolFullError`` (every shard full: the fleet is at capacity).
 ``SessionPool.export_session``/``import_session`` — migrated streams resume
 bit-for-bit on the new shard.
 
+With ``tiers=(4, 16, 64)`` every shard becomes an **elastic** pool
+(``repro.serve.elastic_pool.ElasticSessionPool``): a hot shard grows to its
+next pre-compiled capacity tier instead of raising ``ShardFullError`` (which
+then fires only when the shard's top tier is full), and ``rebalance()``
+shrinks donor shards back down the ladder after draining them.
+
 ``pump_all()`` is the scaling hot path: it dispatches every shard's batched
 hop step (asynchronous JAX enqueue, non-blocking) before collecting any
 shard's output, so N devices compute concurrently instead of serially.
@@ -49,6 +55,7 @@ import numpy as np
 
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
+from repro.serve.elastic_pool import ElasticSessionPool
 from repro.serve.session_server import (
     PoolFullError,
     Session,
@@ -58,6 +65,17 @@ from repro.serve.session_server import (
 from repro.serve.streaming_se import make_stream_hop
 
 Pytree = dict
+
+
+def _max_capacity(pool) -> int:
+    """A shard's hard capacity bound: the top tier for elastic shards, the
+    compiled capacity for fixed ones."""
+    return getattr(pool, "max_capacity", pool.capacity)
+
+
+def _shard_full(pool) -> bool:
+    """True when a shard cannot take one more session EVEN by growing."""
+    return pool.num_active >= _max_capacity(pool)
 
 
 class ShardFullError(PoolFullError):
@@ -153,6 +171,18 @@ class ShardedSessionPool:
             from the round structure; ``inflight=2`` additionally overlaps
             each shard's own host drain with its device step when the pool is
             driven via per-shard ``dispatch()``/``pump()``.
+        tiers: when given (e.g. ``(4, 16, 64)``), every shard is an
+            **elastic** ``ElasticSessionPool`` on this capacity ladder
+            instead of a fixed ``SessionPool``: a hot shard grows to its
+            next tier on attach instead of raising ``ShardFullError``
+            (which then only fires when the shard's TOP tier is full), and
+            ``rebalance()`` shrinks donor shards back down the ladder after
+            migrating sessions away. ``capacity`` is ignored — the ladder
+            defines each shard's sizes (total fleet capacity =
+            ``tiers[-1] * shards``).
+        shrink_fraction / shrink_patience: elastic-shard hysteresis knobs,
+            forwarded to every ``ElasticSessionPool`` (ignored for fixed
+            shards; see there).
         vnodes: virtual nodes per shard on the hash ring (more = smoother
             key-space balance at slightly larger ring).
         step_cache: optional mutable dict mapping device -> (device-resident
@@ -181,6 +211,9 @@ class ShardedSessionPool:
         prune_axis: Optional[int] = None,
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
+        tiers: Optional[Sequence[int]] = None,
+        shrink_fraction: float = 0.5,
+        shrink_patience: int = 8,
         vnodes: int = 64,
         step_cache: Optional[dict] = None,
     ) -> None:
@@ -198,7 +231,8 @@ class ShardedSessionPool:
         # tests) share ONE device-resident params copy and ONE compiled hop
         # step instead of paying per-shard duplicates.
         shared = step_cache if step_cache is not None else {}
-        self._pools: List[SessionPool] = []
+        self.elastic = tiers is not None
+        self._pools: List = []
         for i in range(shards):
             dev = devices[i % len(devices)]
             if dev not in shared:
@@ -211,20 +245,25 @@ class ShardedSessionPool:
                     ),
                 )
             placed, step = shared[dev]
+            kw = dict(
+                quant=quant,
+                sample_rate=sample_rate,
+                donate=donate,
+                device=dev,
+                backend=backend,
+                inflight=inflight,
+                max_unread_hops=max_unread_hops,
+                step_fn=step,
+            )
             self._pools.append(
-                SessionPool(
-                    placed,
-                    cfg,
-                    capacity,
-                    quant=quant,
-                    sample_rate=sample_rate,
-                    donate=donate,
-                    device=dev,
-                    backend=backend,
-                    inflight=inflight,
-                    max_unread_hops=max_unread_hops,
-                    step_fn=step,
+                ElasticSessionPool(
+                    placed, cfg, tiers,
+                    shrink_fraction=shrink_fraction,
+                    shrink_patience=shrink_patience,
+                    **kw,
                 )
+                if self.elastic
+                else SessionPool(placed, cfg, capacity, **kw)
             )
         self._ring = HashRing(shards, vnodes=vnodes)
         self._sessions: Dict[Hashable, ShardedSession] = {}
@@ -234,8 +273,15 @@ class ShardedSessionPool:
 
     @property
     def capacity(self) -> int:
-        """Total slots across all shards."""
+        """Total CURRENT slots across all shards (elastic shards count their
+        current tier; see ``max_capacity`` for the hard bound)."""
         return sum(p.capacity for p in self._pools)
+
+    @property
+    def max_capacity(self) -> int:
+        """Total slots when every shard is at its top tier (== ``capacity``
+        for fixed shards) — the bound ``PoolFullError`` reports."""
+        return sum(_max_capacity(p) for p in self._pools)
 
     @property
     def num_active(self) -> int:
@@ -281,18 +327,24 @@ class ShardedSessionPool:
             raise SessionError(f"session id {session_id!r} is already attached")
         shard = self._ring.route(session_id)
         pool = self._pools[shard]
-        if pool.num_active >= pool.capacity:
-            if all(p.num_active >= p.capacity for p in self._pools):
+        # elastic shards grow themselves inside attach(); only a shard whose
+        # TOP tier is occupied counts as full here
+        if _shard_full(pool):
+            if all(_shard_full(p) for p in self._pools):
                 raise PoolFullError(
-                    f"all {self.n_shards} shards are full "
-                    f"({self.capacity} sessions); detach one first"
+                    f"all {self.n_shards} shards are full (capacity="
+                    f"{self.max_capacity}, active={self.num_active}"
+                    + (f", tiers/shard={self._pools[0].tiers}" if self.elastic else "")
+                    + "); detach a session first"
                 )
             if rebalance_on_full:
                 self._drain_one(shard)
-            if pool.num_active >= pool.capacity:
+            if _shard_full(pool):
                 raise ShardFullError(
-                    f"shard {shard} is full ({pool.capacity} sessions) though "
-                    f"other shards have room; rebalance() or retry later"
+                    f"shard {shard} is full (capacity={_max_capacity(pool)}, "
+                    f"active={pool.num_active}"
+                    + (f", tiers={pool.tiers}" if self.elastic else "")
+                    + ") though other shards have room; rebalance() or retry later"
                 )
         handle = ShardedSession(session_id=session_id, shard=shard, inner=pool.attach())
         self._sessions[session_id] = handle
@@ -352,6 +404,11 @@ class ShardedSessionPool:
         equals the overlapped wall-clock (concurrent device work is not
         double-counted into session RTFs).
 
+        Elastic shards take their lazy shrink heartbeat here too — once per
+        ``pump_all`` after the rounds drain, mirroring the cadence of a
+        standalone ``ElasticSessionPool.pump()`` (``dispatch``/``collect``
+        never resize mid-pipeline).
+
         Returns:
             Number of dispatch rounds in which at least one shard stepped.
         """
@@ -360,13 +417,17 @@ class ShardedSessionPool:
             t0 = time.perf_counter()
             stepped = sum(pool.dispatch() for pool in self._pools)
             if stepped == 0:
-                return rounds
+                break
             for pool in self._pools:
                 pool.wait_ready()
             share = (time.perf_counter() - t0) / stepped
             for pool in self._pools:
                 pool.collect(proc_share=share)
             rounds += 1
+        if self.elastic:
+            for pool in self._pools:
+                pool.try_shrink()
+        return rounds
 
     # -- balance ------------------------------------------------------------
 
@@ -381,8 +442,11 @@ class ShardedSessionPool:
         handle.shard = dst
 
     def _drain_one(self, shard: int) -> None:
-        """Migrate one session off ``shard`` to the shard with most headroom."""
-        frees = [p.capacity - p.num_active for p in self._pools]
+        """Migrate one session off ``shard`` to the shard with most headroom.
+
+        Headroom counts growable tiers: an elastic destination at its current
+        capacity still has room — ``import_session`` grows it."""
+        frees = [_max_capacity(p) - p.num_active for p in self._pools]
         frees[shard] = -1  # never pick the shard being drained
         dst = max(range(self.n_shards), key=lambda i: frees[i])
         if frees[dst] <= 0:
@@ -401,7 +465,10 @@ class ShardedSessionPool:
         bit-for-bit (state, queued input, unread output, stats all travel).
         Migration overrides the hash placement — the handle's ``shard`` field
         tracks the session's current home, so routing by handle/id still
-        works.
+        works. Elastic donor shards are shrunk back down their tier ladder
+        afterwards (``try_shrink(force=True)``), so a drained shard returns
+        its over-provisioned envelope immediately instead of waiting out the
+        lazy watermark patience.
 
         Returns:
             Number of sessions moved.
@@ -413,14 +480,18 @@ class ShardedSessionPool:
             src = max(range(self.n_shards), key=lambda i: loads[i])
             dst = min(range(self.n_shards), key=lambda i: loads[i])
             if loads[src] - loads[dst] <= tolerance:
-                return moved
-            if self._pools[dst].num_active >= self._pools[dst].capacity:
-                return moved  # least-loaded shard has no slot headroom
+                break
+            if _shard_full(self._pools[dst]):
+                break  # least-loaded shard has no slot headroom
             handle = next(
                 h for h in self._sessions.values() if h.shard == src
             )
             self._migrate(handle, dst)
             moved += 1
+        if moved and self.elastic:
+            for pool in self._pools:
+                pool.try_shrink(force=True)
+        return moved
 
     # -- reporting ----------------------------------------------------------
 

@@ -1,0 +1,197 @@
+"""Pool invariant checks + a mixed-churn soak driver, shared by the serving
+test modules (``test_session_server``, ``test_sharded_pool``,
+``test_elastic_pool``).
+
+``check_pool_invariants`` asserts the structural contract of a pool at ANY
+instant — including mid-pipeline, between a ``dispatch()`` and its
+``collect()``:
+
+1. **Active bookkeeping** — the slot map and the session dict are mirror
+   images: every occupied slot holds a live handle that maps back to it, and
+   occupancy never exceeds capacity (nor, for elastic pools, leaves the tier
+   ladder).
+2. **Ring conservation (read/write monotonicity)** — per session, every raw
+   sample ever fed is exactly one of: still in the ring buffer, consumed by
+   an in-flight step, or accounted as a processed hop; and every processed
+   hop's samples are either already read or still queued in ``_out``. Counts
+   only grow, and nothing is ever both places at once.
+3. **Backpressure bound** — when ``max_unread_hops`` is set, no slot's
+   unread output (queued + in-flight) exceeds it.
+4. **Latency-accounting continuity** — the pool-wide ``step_seconds`` record
+   only appends (it must survive an elastic resize: migration carries the
+   list over), and never records a negative latency.
+
+``run_soak`` drives N ops of randomized attach/detach/feed/read/pump churn
+(plus explicit resizes for elastic pools) and re-checks every invariant
+after EVERY op — the cheap always-on cousin of the bit-exactness property
+tests.
+"""
+
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+
+def _inner_pools(pool) -> list:
+    """The underlying SessionPool(s): unwrap elastic wrappers and sharded
+    routers (whose shards may themselves be elastic)."""
+    if hasattr(pool, "_pools"):  # ShardedSessionPool
+        return [q for p in pool._pools for q in _inner_pools(p)]
+    if hasattr(pool, "tiers"):  # ElasticSessionPool
+        return [pool._pool]
+    return [pool]
+
+
+def _check_session_pool(p) -> None:
+    """Invariants 1-4 on one plain SessionPool (safe mid-pipeline)."""
+    hop = p.cfg.hop
+    occupied = {s: sess for s, sess in enumerate(p._slot_session) if sess is not None}
+    # 1. active bookkeeping
+    assert len(occupied) == len(p._sessions) == p.num_active <= p.capacity
+    for slot, sess in occupied.items():
+        assert sess.slot == slot and not sess.detached
+        assert p._sessions[sess.sid] is sess
+    assert len(p._pending) <= p._inflight
+    for slot, sess in occupied.items():
+        st = sess.stats
+        inflight = sum(1 for pend in p._pending if pend.active[slot])
+        # 2. ring conservation: fed == buffered + in flight + processed
+        assert st.samples_in == len(p._rings[slot]) + hop * (st.hops + inflight), (
+            f"slot {slot}: fed {st.samples_in} != ring {len(p._rings[slot])} "
+            f"+ {hop} * ({st.hops} hops + {inflight} in flight)"
+        )
+        queued = sum(c.size for c in p._out[slot])
+        assert st.samples_out + queued == st.hops * hop, (
+            f"slot {slot}: read {st.samples_out} + queued {queued} "
+            f"!= {st.hops} hops * {hop}"
+        )
+        # 3. backpressure bound
+        if p._max_unread_hops is not None:
+            assert p._unread_hops(slot) <= p._max_unread_hops
+    # 4. latency record sanity (continuity is the checker's job)
+    assert all(dt >= 0 for dt in p.step_seconds)
+
+
+def _check_elastic(pool) -> None:
+    """Elastic-wrapper consistency: current tier on the ladder, stable
+    handles pointing at live inner sessions."""
+    p = pool._pool
+    assert p.capacity in pool.tiers
+    assert pool.num_active == p.num_active
+    for handle in pool._handles.values():
+        assert not handle.detached
+        assert p._sessions.get(handle.inner.sid) is handle.inner
+
+
+class SoakChecker:
+    """Re-checkable invariant probe with cross-op continuity state.
+
+    Instantiate once per pool-under-test and call ``check(pool)`` after every
+    operation; it layers the continuity assertions (latency record only
+    appends — including across elastic resizes) on top of the instantaneous
+    ``check_pool_invariants``.
+    """
+
+    def __init__(self) -> None:
+        self._seen_steps: dict = {}
+
+    def check(self, pool) -> None:
+        check_pool_invariants(pool)
+        for i, p in enumerate(_inner_pools(pool)):
+            n = len(p.step_seconds)
+            assert n >= self._seen_steps.get(i, 0), (
+                "step-latency record shrank — accounting lost across a resize"
+            )
+            self._seen_steps[i] = n
+
+
+def check_pool_invariants(pool) -> None:
+    """Assert every pool invariant holds right now (see module docstring).
+
+    Accepts a ``SessionPool``, ``ElasticSessionPool``, or
+    ``ShardedSessionPool`` (including one with elastic shards).
+    """
+    for p in _inner_pools(pool):
+        _check_session_pool(p)
+    if hasattr(pool, "tiers"):
+        _check_elastic(pool)
+    if hasattr(pool, "_pools"):
+        for p in pool._pools:
+            if hasattr(p, "tiers"):
+                _check_elastic(p)
+        # router-level: every routed handle lives on the shard it claims
+        assert len(pool._sessions) == sum(p.num_active for p in pool._pools)
+
+
+def run_soak(
+    pool,
+    audio_fn,
+    *,
+    n_ops: int = 60,
+    seed: int = 0,
+    max_live: int = 8,
+    checker: SoakChecker | None = None,
+) -> dict:
+    """N ops of mixed churn with invariants checked after every single op.
+
+    Args:
+        pool: any pool accepted by ``check_pool_invariants``. Needs the
+            common surface: ``attach()``, ``feed``, ``read``, ``detach``,
+            and ``pump()`` (or ``pump_all()`` for a router).
+        audio_fn: ``audio_fn(rnd) -> np.ndarray`` producing a feed chunk.
+        n_ops: operation count.
+        seed: PRNG seed (the op sequence is deterministic per seed).
+        max_live: soft cap on concurrently attached soak sessions.
+        checker: reuse an existing ``SoakChecker`` to extend its continuity
+            window; a fresh one is created otherwise.
+
+    Returns:
+        dict of op counts actually executed (attach/detach/feed/read/pump/
+        resize), so callers can assert the mix was not degenerate.
+    """
+    from repro.serve import PoolFullError
+
+    rnd = random.Random(seed)
+    checker = checker or SoakChecker()
+    pump = getattr(pool, "pump_all", None) or pool.pump
+    elastic = hasattr(pool, "resize_to")
+    handles: list = []
+    counts = {k: 0 for k in ("attach", "detach", "feed", "read", "pump", "resize")}
+    ops = ["attach", "detach", "feed", "feed", "read", "pump"]
+    if elastic:
+        ops.append("resize")
+    for _ in range(n_ops):
+        op = rnd.choice(ops)
+        if op == "attach" and len(handles) < max_live:
+            try:
+                handles.append(pool.attach())
+                counts["attach"] += 1
+            except PoolFullError:
+                pass  # legal outcome at the top tier / full fleet
+        elif op == "detach" and handles:
+            pool.detach(handles.pop(rnd.randrange(len(handles))))
+            counts["detach"] += 1
+        elif op == "feed" and handles:
+            pool.feed(rnd.choice(handles), audio_fn(rnd))
+            counts["feed"] += 1
+        elif op == "read" and handles:
+            pool.read(rnd.choice(handles))
+            counts["read"] += 1
+        elif op == "pump":
+            pump()
+            counts["pump"] += 1
+        elif op == "resize":
+            fits = [t for t in pool.tiers if t >= pool.num_active]
+            if fits:
+                pool.resize_to(rnd.choice(fits))
+                counts["resize"] += 1
+        checker.check(pool)
+    pump()
+    checker.check(pool)
+    while handles:
+        tail = pool.detach(handles.pop())
+        assert isinstance(tail, np.ndarray)
+        checker.check(pool)
+    return counts

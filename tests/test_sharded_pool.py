@@ -26,6 +26,7 @@ from repro.serve import (
     ShardedSessionPool,
     ShardFullError,
 )
+from soak import check_pool_invariants, run_soak
 
 
 def small_cfg() -> tft.TFTConfig:
@@ -164,17 +165,21 @@ def test_shard_full_vs_pool_full():
 
     pool.attach(sids0[0])
     pool.attach(sids0[1])
-    # home shard 0 full, shard 1 empty: ShardFullError (a PoolFullError too)
-    with pytest.raises(ShardFullError):
+    # home shard 0 full, shard 1 empty: ShardFullError (a PoolFullError too),
+    # and the message reports the shard's capacity and occupancy
+    with pytest.raises(ShardFullError) as exc:
         pool.attach(sids0[2])
+    assert "capacity=2" in str(exc.value) and "active=2" in str(exc.value)
     assert pool.num_active == 2  # failed attach left no residue
 
     pool.attach(sids1[0])
     pool.attach(sids1[1])
-    # every shard full: plain PoolFullError, NOT the shard-level subclass
+    # every shard full: plain PoolFullError, NOT the shard-level subclass,
+    # reporting fleet-wide capacity and occupancy
     with pytest.raises(PoolFullError) as exc:
         pool.attach(sids0[2])
     assert not isinstance(exc.value, ShardFullError)
+    assert "capacity=4" in str(exc.value) and "active=4" in str(exc.value)
 
     # duplicate id is a SessionError regardless of capacity
     with pytest.raises(SessionError):
@@ -246,6 +251,20 @@ def test_read_folds_in_flight_dispatch():
     pool.pump()
     got.append(pool.detach(s))
     np.testing.assert_array_equal(np.concatenate(got), _run_plain(audio, capacity=1))
+
+
+def test_soak_sharded_churn_invariants():
+    """Mixed churn through the router (auto-routed ids), with per-shard and
+    router-level invariants checked after every op."""
+    pool = ShardedSessionPool(PARAMS, CFG, 3, shards=2, max_unread_hops=2)
+
+    def audio_fn(rnd):
+        return _audio(rnd.randrange(10_000), 2)[: rnd.randrange(1, 3 * HOP)]
+
+    counts = run_soak(pool, audio_fn, n_ops=50, seed=2, max_live=5)
+    assert counts["attach"] > 0 and counts["feed"] > 0 and counts["pump"] > 0
+    assert pool.num_active == 0
+    check_pool_invariants(pool)
 
 
 def test_shard_stats_counters():
