@@ -1,0 +1,208 @@
+"""Quantized-serving accuracy gate: the deploy path vs the fp32 reference.
+
+The ROADMAP's "Quantized serving parity" item: the deploy compilation
+(``repro.serve.deploy``: every BN folded, Pallas kernels in the hot spots,
+weights pre-rounded onto the FP10 grid) must not silently degrade audio
+quality. This benchmark measures, on synthetic speech+noise fixtures
+(``repro.audio.synthetic`` — the paper's VoiceBank/UrbanSound stand-ins):
+
+- **SI-SNR of each serving path against the fp32 ``enhance_offline``
+  reference** — the parity number. fp32 paths sit at float-error level
+  (>100 dB); the FP10 path lands wherever the deployment grid's ~2^-4
+  relative mantissa step puts it (tens of dB), and THAT number is gated by
+  ``--min-si-snr`` (exit 1 below it — the CI contract).
+- PESQ of each path against the reference **when the optional ``pesq``
+  package is installed** (it is not baked into the offline container);
+  ``null`` in the JSON otherwise. The paper reports PESQ/STOI; SI-SNR is
+  the always-available stand-in (docs/benchmarks.md).
+- Enhancement quality (SI-SNR vs the clean signal) for context, so a path
+  that "matches the reference" by doing nothing would still be visible.
+
+Paths measured: ``stream-fp32`` (the streaming loop, THE streaming
+invariant's other half), ``deploy-fp32`` (folded graph, Pallas kernels,
+no quantization — folding is exact algebra), ``deploy-fp10`` (the paper's
+deployment number format). The deploy paths are driven through a
+``lax.scan`` over ``stream_hop_fused`` — the same state-carrying fused hop
+the multi-hop dispatch path scans over.
+
+Results go to stdout (CSV via benchmarks.common.emit) and
+``BENCH_deploy_parity.json``. A threshold test version of this gate runs in
+tier-1 (tests/test_deploy.py::test_fp10_deploy_si_snr_gate).
+
+Run:  PYTHONPATH=src python benchmarks/deploy_parity.py [--seconds S]
+          [--batch B] [--min-si-snr DB] [--smoke] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from common import emit  # noqa: E402
+
+from repro.audio.metrics import si_snr_db  # noqa: E402
+from repro.audio.synthetic import batch_for_step  # noqa: E402
+from repro.core.quant import FP10  # noqa: E402
+from repro.launch.serve import reduced_cfg  # noqa: E402
+from repro.models import tftnn as tft  # noqa: E402
+from repro.serve.deploy import build_deploy_plan, stream_hop_fused  # noqa: E402
+from repro.serve.streaming_se import (  # noqa: E402
+    enhance_offline,
+    enhance_streaming,
+    init_stream,
+)
+
+
+def trained_params(cfg, seed: int = 0, train_steps: int = 3):
+    """Init + a few train-mode forwards so the BN running stats are
+    non-trivial — folding identity stats would not exercise the fold."""
+    params = tft.init_tft(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, cfg.freq_bins + 1, 6, 2))
+    for _ in range(train_steps):
+        _, params = tft.apply_tft(params, x, cfg, train=True)
+    return params
+
+
+def enhance_deploy(plan, params, wave: jax.Array) -> jax.Array:
+    """Drive the fused deploy hop over whole utterances via lax.scan.
+
+    ``params`` (the UNfolded tree) only sizes the initial recurrent state;
+    the model math runs entirely on the plan's folded weights. This is the
+    same scan-composes-with-``stream_hop_fused`` property the serving
+    stack's multi-hop fused dispatch relies on.
+    """
+    B, S = wave.shape
+    hop = plan.cfg.hop
+    n = S // hop
+    hops = wave[:, : n * hop].reshape(B, n, hop).transpose(1, 0, 2)
+    st = init_stream(params, plan.cfg, B)
+
+    def body(s, h):
+        return stream_hop_fused(plan, s, h)
+
+    _, outs = jax.lax.scan(body, st, hops)
+    return outs.transpose(1, 0, 2).reshape(B, n * hop)
+
+
+def _pesq_or_none(ref: np.ndarray, est: np.ndarray, sample_rate: int):
+    """Mean PESQ when the optional ``pesq`` package exists, else None."""
+    try:
+        from pesq import pesq
+    except ImportError:
+        return None
+    mode = "nb" if sample_rate < 16000 else "wb"
+    scores = [
+        pesq(sample_rate, np.asarray(r, np.float32), np.asarray(e, np.float32), mode)
+        for r, e in zip(ref, est)
+    ]
+    return float(np.mean(scores))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Deploy-path accuracy gate: SI-SNR (and PESQ when "
+        "available) of the folded/FP10 serving graphs vs the fp32 offline "
+        "reference; exits 1 when the FP10 path drops below --min-si-snr."
+    )
+    ap.add_argument("--seconds", type=float, default=2.0,
+                    help="seconds of synthetic audio per fixture utterance")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="fixture utterances (averaged in the gate)")
+    ap.add_argument("--min-si-snr", type=float, default=15.0,
+                    help="minimum mean SI-SNR (dB) of the deploy-fp10 path "
+                    "vs the fp32 offline reference; below this the gate "
+                    "fails (measured headroom on the reduced config: "
+                    "~25 dB)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fixtures (<=0.5s, batch<=2) so the "
+                    "interpret-mode kernels finish in seconds")
+    ap.add_argument("--json", default="BENCH_deploy_parity.json",
+                    help="where to write the machine-readable results")
+    args = ap.parse_args()
+    if args.smoke:
+        args.seconds = min(args.seconds, 0.5)
+        args.batch = min(args.batch, 2)
+
+    sample_rate = 8000
+    cfg = reduced_cfg(tft.tftnn_config())
+    params = trained_params(cfg)
+    samples = max(cfg.hop, int(args.seconds * sample_rate) // cfg.hop * cfg.hop)
+    noisy, clean = batch_for_step(1, 0, batch=args.batch, num_samples=samples)
+    noisy = jnp.asarray(noisy)
+
+    ref = enhance_offline(params, cfg, noisy)  # fp32 reference (B, S')
+    clean = np.asarray(clean)[:, : ref.shape[1]]
+
+    paths = {
+        "stream-fp32": lambda: enhance_streaming(params, cfg, noisy),
+        "deploy-fp32": lambda: enhance_deploy(
+            build_deploy_plan(params, cfg), params, noisy),
+        "deploy-fp10": lambda: enhance_deploy(
+            build_deploy_plan(params, cfg, quant=FP10), params, noisy),
+    }
+
+    result = {
+        "benchmark": "deploy_parity",
+        "config": {
+            "seconds": args.seconds,
+            "batch": args.batch,
+            "samples": samples,
+            "min_si_snr_db": args.min_si_snr,
+            "smoke": args.smoke,
+            "jax_backend": jax.default_backend(),
+        },
+        "points": [],
+    }
+    print("name,us_per_call,derived")
+    ref_np = np.asarray(ref)
+    for name, fn in paths.items():
+        t0 = time.perf_counter()
+        est = np.asarray(fn())[:, : ref.shape[1]]
+        wall = time.perf_counter() - t0
+        parity = float(jnp.mean(si_snr_db(jnp.asarray(est), ref)))
+        quality = float(jnp.mean(si_snr_db(jnp.asarray(est), jnp.asarray(clean))))
+        pesq_score = _pesq_or_none(ref_np, est, sample_rate)
+        point = {
+            "path": name,
+            "si_snr_vs_ref_db": parity,
+            "si_snr_vs_clean_db": quality,
+            "pesq_vs_ref": pesq_score,
+            "wall_s": wall,
+        }
+        result["points"].append(point)
+        emit(
+            f"path={name}",
+            wall * 1e6,
+            f"si_snr_vs_ref={parity:.2f}dB si_snr_vs_clean={quality:.2f}dB "
+            f"pesq={'n/a' if pesq_score is None else f'{pesq_score:.2f}'}",
+        )
+
+    fp10 = next(p for p in result["points"] if p["path"] == "deploy-fp10")
+    result["gate"] = {
+        "path": "deploy-fp10",
+        "si_snr_vs_ref_db": fp10["si_snr_vs_ref_db"],
+        "min_si_snr_db": args.min_si_snr,
+        "passed": fp10["si_snr_vs_ref_db"] >= args.min_si_snr,
+    }
+    out_path = Path(args.json)
+    out_path.write_text(json.dumps(result, indent=2) + "\n", encoding="utf-8")
+    print(f"# wrote {out_path} ({len(result['points'])} paths)")
+    if not result["gate"]["passed"]:
+        raise SystemExit(
+            f"deploy-fp10 parity gate FAILED: SI-SNR "
+            f"{fp10['si_snr_vs_ref_db']:.2f} dB < {args.min_si_snr:.2f} dB"
+        )
+    print(f"# gate passed: deploy-fp10 SI-SNR "
+          f"{fp10['si_snr_vs_ref_db']:.2f} dB >= {args.min_si_snr:.2f} dB")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,8 @@ and reports, per point:
 - per-session RTF (mean),
 - pool step latency p50/p95 in ms against the 16 ms hop budget.
 
-Two sweep axes compare the serving configurations this benchmark exists for:
+Three sweep axes compare the serving configurations this benchmark exists
+for:
 
 - ``--backend xla,pallas`` — the training graph lowered through XLA vs the
   deploy-compiled fused graph (``repro.serve.deploy``: BN folded, Pallas
@@ -19,6 +20,12 @@ Two sweep axes compare the serving configurations this benchmark exists for:
 - ``--buffering single,double`` — classic serial pump vs double-buffered
   ingestion (``SessionPool(inflight=2)``: host ring drain overlaps the
   in-flight device step).
+- ``--hops-per-step 1,4,8`` — multi-hop fused dispatch depth
+  (``SessionPool(hops_per_step=K)``): how many hops each backlogged session
+  drains per device call. K>1 amortizes the per-hop host->device->host +
+  Python dispatch cost; the ``comparisons`` block reports the aggregate-RTF
+  ratio of each K against K=1 (``hops{K}_vs_hops1``) — the speedup the
+  fused path buys on this host.
 
 ``--ramp`` instead drives an **elastic** pool (``ElasticSessionPool``,
 ``--tiers`` capacity ladder) through a session ramp that climbs past at
@@ -50,8 +57,8 @@ deploy path from rotting.
 
 Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
           [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
-          [--buffering single,double] [--ramp] [--tiers 4,16,64]
-          [--smoke] [--json PATH]
+          [--buffering single,double] [--hops-per-step 1,4,8] [--ramp]
+          [--tiers 4,16,64] [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
@@ -115,15 +122,19 @@ def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
     }
 
 
+
+
 def run_sharded_point(params, cfg, n_shards: int, per_shard: int,
                       audio: np.ndarray, quant, backend: str,
-                      step_cache: dict) -> dict:
+                      hops_per_step: int, step_cache: dict) -> dict:
     """One shard-sweep point: fill n_shards x per_shard sessions, pump_all.
 
     ``step_cache`` is shared across sweep points so each device compiles the
-    hop step once for the whole sweep (cfg/capacity/quant/backend constant)."""
+    hop step once for the whole sweep (cfg/capacity/quant/backend/
+    hops_per_step constant)."""
     pool = ShardedSessionPool(params, cfg, per_shard, shards=n_shards,
                               quant=quant, backend=backend,
+                              hops_per_step=hops_per_step,
                               step_cache=step_cache)
     n_sessions = n_shards * per_shard
     handles = [pool.attach(f"bench-{i}", rebalance_on_full=True)
@@ -170,7 +181,8 @@ def _ramp_targets(tiers: tuple) -> list:
 
 
 def run_ramp(params, cfg, tiers: tuple, audio: np.ndarray, quant,
-             backend: str, buffering: str) -> tuple:
+             backend: str, buffering: str, hops_per_step: int = 1,
+             step_fn=None) -> tuple:
     """Drive an ElasticSessionPool through the ramp; returns (points, summary).
 
     One **pilot** session streams continuously across every target (attached
@@ -184,6 +196,7 @@ def run_ramp(params, cfg, tiers: tuple, audio: np.ndarray, quant,
     pool = ElasticSessionPool(
         params, cfg, tiers, quant=quant, backend=backend,
         inflight=2 if buffering == "double" else 1,
+        hops_per_step=hops_per_step, step_fn=step_fn,
         shrink_patience=1, prewarm=True,
     )
     hop, sr = cfg.hop, pool.sample_rate
@@ -232,6 +245,7 @@ def run_ramp(params, cfg, tiers: tuple, audio: np.ndarray, quant,
     summary = {
         "backend": backend,
         "buffering": buffering,
+        "hops_per_step": hops_per_step,
         "tiers": list(tiers),
         "grows": pool.grow_count,
         "shrinks": pool.shrink_count,
@@ -265,7 +279,17 @@ def _csv_list(raw: str, allowed: tuple) -> list:
     return vals
 
 
-_SWEEP_AXES = ("backend", "buffering")
+def _csv_ints(raw: str, what: str) -> list:
+    try:
+        vals = [int(v) for v in raw.split(",") if v.strip()]
+    except ValueError:
+        raise SystemExit(f"{what} must be a comma list of ints, got {raw!r}")
+    if not vals or any(v < 1 for v in vals):
+        raise SystemExit(f"{what} needs one or more ints >= 1, got {raw!r}")
+    return sorted(set(vals))
+
+
+_SWEEP_AXES = ("backend", "buffering", "hops_per_step")
 
 
 def _ratio(points: list, key: str, a: str, b: str) -> dict:
@@ -302,6 +326,11 @@ def main() -> None:
     ap.add_argument("--buffering", default="single",
                     help="comma list of ingestion modes to sweep: single,double "
                     "(double = inflight=2 host/device overlap); single-pool mode only")
+    ap.add_argument("--hops-per-step", default="1",
+                    help="comma list of fused-dispatch depths to sweep, e.g. "
+                    "1,4,8 — K>1 drains up to K hops per session per device "
+                    "call (scan-batched step, bit-identical to K=1); the "
+                    "JSON gains a hops{K}_vs_hops1 RTF ratio per K")
     ap.add_argument("--shards", type=int, default=0,
                     help="sweep ShardedSessionPool from 1 up to N shards at full "
                     "per-shard load (0 = single-pool sessions sweep); fake CPU "
@@ -314,18 +343,36 @@ def main() -> None:
     ap.add_argument("--tiers", default="4,16,64",
                     help="--ramp capacity ladder (comma list, strictly "
                     "increasing, each >= 2; needs >= 2 tiers)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="best-of-N repeats per single-pool sweep point, "
+                    "interleaved round-robin across configs (min wall-clock "
+                    "wins, as in timeit) — noisy scheduler phases hit every "
+                    "config equally instead of skewing the comparison "
+                    "ratios; --smoke raises it to >= 5 when sweeping "
+                    "multiple --hops-per-step values")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI-sized run (capacity<=2, <=0.25s audio, 1-2 "
-                    "sessions) so the pallas/interpret path stays fast")
+                    help="tiny CI-sized run (capacity<=2, ~0.26s audio, 1-2 "
+                    "sessions; best-of-5 points when sweeping "
+                    "--hops-per-step) so the pallas/interpret path stays "
+                    "fast")
     ap.add_argument("--json", default="BENCH_server_throughput.json",
                     help="where to write the machine-readable results")
     args = ap.parse_args()
 
     backends = _csv_list(args.backend, ("xla", "pallas"))
     bufferings = _csv_list(args.buffering, ("single", "double"))
+    hops_sweep = _csv_ints(args.hops_per_step, "--hops-per-step")
+    if args.repeats < 1:
+        raise SystemExit("--repeats must be >= 1")
     if args.smoke:
         args.capacity = min(args.capacity, 2)
-        args.seconds = min(args.seconds, 0.25)
+        # 0.26 s = 16 hops: a whole number of K=8 fused dispatches, so the
+        # hops sweep measures amortization rather than a ragged final lane
+        args.seconds = min(args.seconds, 0.26)
+        if len(hops_sweep) > 1:
+            # only the hops{K}_vs_hops1 ratios need best-of-N stability;
+            # don't quintuple the pallas-interpret smoke for other sweeps
+            args.repeats = max(args.repeats, 5)
         if args.ramp and args.tiers == "4,16,64":
             args.tiers = "2,4,8"  # CI-sized ladder, still two boundaries
     tiers = parse_tiers(args.tiers)
@@ -351,6 +398,7 @@ def main() -> None:
             "quant": "fp10" if args.quant else "fp32",
             "backends": backends,
             "bufferings": bufferings,
+            "hops_per_step": hops_sweep,
             "shards_max": args.shards,
             "ramp": args.ramp,
             "tiers": list(tiers) if args.ramp else None,
@@ -367,90 +415,145 @@ def main() -> None:
     if args.ramp:
         print(f"# elastic ramp over tiers={tiers}, audio/session/point="
               f"{args.seconds}s, backends={backends}, bufferings={bufferings}, "
+              f"hops_per_step={hops_sweep}, "
               f"quant={'fp10' if args.quant else 'fp32'}")
         result["resizes"] = []
         for backend in backends:
-            for buffering in bufferings:
-                ramp_points, summary = run_ramp(
-                    params, cfg, tiers, audio, quant, backend, buffering)
-                for r in ramp_points:
-                    r.update(mode="ramp", backend=backend, buffering=buffering)
-                    points.append(r)
-                    emit(
-                        f"backend={backend} buffering={buffering} "
-                        f"ramp sessions={r['sessions']}",
-                        r["wall_s"] * 1e6,
-                        f"tier={r['tier']} aggregate_rtf={r['aggregate_rtf']:.3f} "
-                        f"grows={r['grows']} shrinks={r['shrinks']}",
-                    )
-                result["resizes"].append(summary)
-                print(f"# resizes[{backend}/{buffering}]: "
-                      f"grows={summary['grows']} shrinks={summary['shrinks']} "
-                      f"max_pause={summary['max_pause_ms']:.2f}ms "
-                      f"dropped={summary['dropped_sessions']}")
+            for hps in hops_sweep:
+                # buffering is host-side only: share one compiled step per
+                # (backend, K) so the second ramp's prewarm hits the jit cache
+                step = make_stream_hop(params, cfg, quant=quant,
+                                       backend=backend, max_hops_per_step=hps)
+                for buffering in bufferings:
+                    ramp_points, summary = run_ramp(
+                        params, cfg, tiers, audio, quant, backend, buffering,
+                        hops_per_step=hps, step_fn=step)
+                    for r in ramp_points:
+                        r.update(mode="ramp", backend=backend,
+                                 buffering=buffering, hops_per_step=hps)
+                        points.append(r)
+                        emit(
+                            f"backend={backend} buffering={buffering} "
+                            f"hops={hps} ramp sessions={r['sessions']}",
+                            r["wall_s"] * 1e6,
+                            f"tier={r['tier']} aggregate_rtf={r['aggregate_rtf']:.3f} "
+                            f"grows={r['grows']} shrinks={r['shrinks']}",
+                        )
+                    result["resizes"].append(summary)
+                    print(f"# resizes[{backend}/{buffering}/hops={hps}]: "
+                          f"grows={summary['grows']} shrinks={summary['shrinks']} "
+                          f"max_pause={summary['max_pause_ms']:.2f}ms "
+                          f"dropped={summary['dropped_sessions']}")
     elif args.shards > 0:
         print(f"# shard sweep up to {args.shards}, capacity/shard={args.capacity}, "
               f"audio/session={args.seconds}s, backends={backends}, "
+              f"hops_per_step={hops_sweep}, "
               f"quant={'fp10' if args.quant else 'fp32'}")
         for backend in backends:
-            step_cache = {}  # one compilation per device across the sweep
-            for s in _shard_sweep(args.shards):
-                r = run_sharded_point(params, cfg, s, args.capacity, audio,
-                                      quant, backend, step_cache)
-                r.update(mode="shards", backend=backend, buffering="single")
-                points.append(r)
-                # space-separated name: emit() quotes nothing, so a comma
-                # here would break the 3-column CSV contract
-                emit(
-                    f"backend={backend} shards={s}",
-                    r["wall_s"] * 1e6,
-                    f"sessions={r['sessions']} aggregate_rtf={r['aggregate_rtf']:.3f} "
-                    f"rt_capacity={r['rt_capacity']:.1f} "
-                    f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
-                )
+            for hps in hops_sweep:
+                step_cache = {}  # one compilation per device across the sweep
+                for s in _shard_sweep(args.shards):
+                    r = run_sharded_point(params, cfg, s, args.capacity, audio,
+                                          quant, backend, hps, step_cache)
+                    r.update(mode="shards", backend=backend,
+                             buffering="single", hops_per_step=hps)
+                    points.append(r)
+                    # space-separated name: emit() quotes nothing, so a comma
+                    # here would break the 3-column CSV contract
+                    emit(
+                        f"backend={backend} hops={hps} shards={s}",
+                        r["wall_s"] * 1e6,
+                        f"sessions={r['sessions']} aggregate_rtf={r['aggregate_rtf']:.3f} "
+                        f"rt_capacity={r['rt_capacity']:.1f} "
+                        f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
+                    )
     else:
         print(f"# capacity={args.capacity} audio/session={args.seconds}s "
               f"hop_budget={budget_ms:.1f}ms backends={backends} "
-              f"bufferings={bufferings} quant={'fp10' if args.quant else 'fp32'}")
+              f"bufferings={bufferings} hops_per_step={hops_sweep} "
+              f"quant={'fp10' if args.quant else 'fp32'}")
         sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
+        combos = []
         for backend in backends:
-            # buffering changes only host-side pipelining, not the compiled
-            # step — compile once per backend and share it across modes
-            step = make_stream_hop(params, cfg, quant=quant, backend=backend)
-            for buffering in bufferings:
-                pool = SessionPool(params, cfg, capacity=args.capacity,
-                                   quant=quant, backend=backend,
-                                   inflight=2 if buffering == "double" else 1,
-                                   step_fn=step)
-                # warm up the per-backend compilation outside the timed points
-                w = pool.attach()
-                pool.feed(w, audio[0][: 2 * cfg.hop])
-                pool.pump()
-                pool.detach(w)
+            for hps in hops_sweep:
+                # buffering changes only host-side pipelining, not the
+                # compiled step — compile once per (backend, K) and share it
+                step = make_stream_hop(params, cfg, quant=quant,
+                                       backend=backend, max_hops_per_step=hps)
+                for buffering in bufferings:
+                    pool = SessionPool(params, cfg, capacity=args.capacity,
+                                       quant=quant, backend=backend,
+                                       inflight=2 if buffering == "double" else 1,
+                                       hops_per_step=hps, step_fn=step)
+                    # warm up the compilation outside the timed points
+                    w = pool.attach()
+                    pool.feed(w, audio[0][: 2 * hps * cfg.hop])
+                    pool.pump()
+                    pool.detach(w)
+                    combos.append((backend, hps, buffering, pool))
+        # --repeats are INTERLEAVED across configurations (round-robin, min
+        # wall-clock per point wins, as in timeit): a noisy scheduler phase
+        # spanning one whole pass penalizes every config equally instead of
+        # silently skewing the cross-config comparison ratios.
+        best: dict = {}
+        for _ in range(args.repeats):
+            for backend, hps, buffering, pool in combos:
                 for n in sweep:
                     r = run_point(pool, n, audio)
-                    r.update(mode="sessions", backend=backend, buffering=buffering)
-                    points.append(r)
-                    emit(
-                        f"backend={backend} buffering={buffering} sessions={n}",
-                        r["p50_ms"] * 1e3,
-                        f"aggregate_rtf={r['aggregate_rtf']:.3f} "
-                        f"rt_capacity={r['rt_capacity']:.1f} "
-                        f"mean_session_rtf={r['mean_session_rtf']:.3f} "
-                        f"p95_ms={r['p95_ms']:.2f} "
-                        f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
-                    )
+                    key = (backend, hps, buffering, n)
+                    if key not in best or r["aggregate_rtf"] < best[key]["aggregate_rtf"]:
+                        best[key] = r
+        for backend, hps, buffering, pool in combos:
+            for n in sweep:
+                r = best[(backend, hps, buffering, n)]
+                r.update(mode="sessions", backend=backend,
+                         buffering=buffering, hops_per_step=hps)
+                points.append(r)
+                emit(
+                    f"backend={backend} buffering={buffering} "
+                    f"hops={hps} sessions={n}",
+                    r["p50_ms"] * 1e3,
+                    f"aggregate_rtf={r['aggregate_rtf']:.3f} "
+                    f"rt_capacity={r['rt_capacity']:.1f} "
+                    f"mean_session_rtf={r['mean_session_rtf']:.3f} "
+                    f"p95_ms={r['p95_ms']:.2f} "
+                    f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
+                )
 
     comparisons = {}
     if "xla" in backends and "pallas" in backends:
         comparisons["pallas_vs_xla"] = _ratio(points, "backend", "xla", "pallas")
     if "single" in bufferings and "double" in bufferings:
         comparisons["double_vs_single"] = _ratio(points, "buffering", "single", "double")
+    for k in hops_sweep:
+        if k != 1 and 1 in hops_sweep:
+            # < 1.0 means the fused path lowered aggregate RTF (a speedup of
+            # 1/ratio); the acceptance bar for K=8 on a backlogged CPU smoke
+            # run is <= 1/1.5
+            comparisons[f"hops{k}_vs_hops1"] = _ratio(
+                points, "hops_per_step", 1, k)
     result["comparisons"] = comparisons
 
     out_path = Path(args.json)
     out_path.write_text(json.dumps(result, indent=2) + "\n", encoding="utf-8")
     print(f"# wrote {out_path} ({len(points)} points)")
+
+    if args.smoke:
+        # CI contract: a smoke sweep must actually produce the comparison
+        # fields it claims (an empty ratio means the sweep silently skipped
+        # a configuration)
+        for k in hops_sweep:
+            if k == 1 or 1 not in hops_sweep:
+                continue
+            ratio = comparisons[f"hops{k}_vs_hops1"]
+            if not ratio["num_points"] or ratio["mean_rtf_ratio"] is None:
+                raise SystemExit(
+                    f"smoke: hops{k}_vs_hops1 comparison is empty — the "
+                    f"K={k} sweep produced no points matching the K=1 sweep"
+                )
+            print(f"# hops{k}_vs_hops1 mean RTF ratio: "
+                  f"{ratio['mean_rtf_ratio']:.3f} "
+                  f"({1.0 / ratio['mean_rtf_ratio']:.2f}x speedup)")
 
 
 if __name__ == "__main__":

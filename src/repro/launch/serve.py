@@ -98,12 +98,14 @@ def serve_pool(args) -> None:
         pool = ElasticSessionPool(params, cfg, parse_tiers(args.tiers),
                                   quant=FP10 if args.quant else None,
                                   backend=args.backend, prune_keep=args.prune_keep,
-                                  inflight=2 if args.double_buffer else 1)
+                                  inflight=2 if args.double_buffer else 1,
+                                  hops_per_step=args.hops_per_step)
     else:
         pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
                            quant=FP10 if args.quant else None,
                            backend=args.backend, prune_keep=args.prune_keep,
-                           inflight=2 if args.double_buffer else 1)
+                           inflight=2 if args.double_buffer else 1,
+                           hops_per_step=args.hops_per_step)
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
     sessions = [pool.attach() for _ in range(args.batch)]
@@ -133,6 +135,7 @@ def serve_sharded(args) -> None:
                               quant=FP10 if args.quant else None,
                               backend=args.backend, prune_keep=args.prune_keep,
                               inflight=2 if args.double_buffer else 1,
+                              hops_per_step=args.hops_per_step,
                               tiers=tiers)
     slots = f"tiers {tiers}" if args.elastic else f"{per_shard} slots"
     print(f"{args.shards} shards x {slots} over {n_dev} local device(s)")
@@ -185,6 +188,11 @@ def main() -> None:
     ap.add_argument("--double-buffer", action="store_true",
                     help="pool/sharded tasks: inflight=2 — overlap the host "
                     "ring-buffer drain with the in-flight device step")
+    ap.add_argument("--hops-per-step", type=int, default=1,
+                    help="pool/sharded tasks: multi-hop fused dispatch — "
+                    "drain up to K hops per session per device call "
+                    "(scan-batched step, bit-identical to K=1; amortizes "
+                    "the per-hop dispatch overhead for backlogged sessions)")
     ap.add_argument("--prune-keep", type=float, default=None,
                     help="pool/sharded tasks with --backend pallas: keep-"
                     "fraction for the deploy-time zero-skipping weight masks "

@@ -353,6 +353,13 @@ def stream_hop_fused(
     helpers), identical activation-quantization points, but the model body
     is the folded/pruned/kernel-routed deployment graph. Parity with the
     training graph is property-tested (tests/test_deploy.py).
+
+    Pure in (state, hop_samples), so it composes with ``lax.scan``: the
+    multi-hop fused dispatch path (``make_stream_hop(backend="pallas",
+    max_hops_per_step=K)``) scans this hop over K staged lanes — the
+    state-carrying ``linear_attention_step`` / GRU carries simply ride the
+    scan carry — and ``benchmarks/deploy_parity.py`` scans it over whole
+    utterances.
     """
     analysis, frame_ri = hop_analysis(state, hop_samples, plan.cfg, plan.quant)
     model_state, mask = fused_stream_step(plan, state.model, frame_ri)

@@ -104,9 +104,12 @@ class ElasticSessionPool:
         tiers: strictly increasing capacity ladder, e.g. ``(4, 16, 64)``.
             The pool starts at ``tiers[0]`` and never exceeds ``tiers[-1]``.
         quant / sample_rate / donate / device / backend / prune_keep /
-            prune_axis / inflight / max_unread_hops: forwarded to every
-            tier's ``SessionPool`` (see there). The compiled step is built
-            ONCE from these and shared by all tiers.
+            prune_axis / inflight / max_unread_hops / on_unparked /
+            hops_per_step: forwarded to every tier's ``SessionPool`` (see
+            there). The compiled step is built ONCE from these and shared by
+            all tiers (``hops_per_step=K`` serves every tier through the
+            multi-hop fused dispatch path; tier migration carries any
+            staged ring backlog bit-exactly through ``SessionTicket``).
         shrink_fraction: occupancy watermark for shrinking, relative to the
             NEXT LOWER tier: the pool is shrink-eligible only while
             ``num_active <= shrink_fraction * lower_tier`` (default 0.5 — a
@@ -140,6 +143,8 @@ class ElasticSessionPool:
         prune_axis: Optional[int] = None,
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
+        on_unparked=None,
+        hops_per_step: int = 1,
         shrink_fraction: float = 0.5,
         shrink_patience: int = 8,
         prewarm: bool = False,
@@ -172,6 +177,13 @@ class ElasticSessionPool:
         self._donate = donate
         self._inflight = inflight
         self._max_unread_hops = max_unread_hops
+        # the inner pool wakes up with its per-tier Session; clients hold the
+        # resize-stable ElasticSession — translate before calling out
+        self._on_unparked = (
+            None if on_unparked is None
+            else lambda inner: self._wake(on_unparked, inner)
+        )
+        self.hops_per_step = hops_per_step
         self._shrink_fraction = shrink_fraction
         self._shrink_patience = shrink_patience
         if device is not None:
@@ -185,6 +197,7 @@ class ElasticSessionPool:
             else make_stream_hop(
                 params, cfg, quant=quant, donate=donate, backend=backend,
                 prune_keep=prune_keep, prune_axis=prune_axis,
+                max_hops_per_step=hops_per_step,
             )
         )
         self._pool = self._make_pool(tiers[0])
@@ -198,6 +211,12 @@ class ElasticSessionPool:
         if prewarm:
             self._prewarm()
 
+    def _wake(self, on_unparked, inner: Session) -> None:
+        for handle in self._handles.values():
+            if handle.inner is inner:
+                on_unparked(handle)
+                return
+
     def _make_pool(self, capacity: int) -> SessionPool:
         return SessionPool(
             self._params,
@@ -210,17 +229,23 @@ class ElasticSessionPool:
             backend=self.backend,
             inflight=self._inflight,
             max_unread_hops=self._max_unread_hops,
+            on_unparked=self._on_unparked,
+            hops_per_step=self.hops_per_step,
             step_fn=self._step,
         )
 
     def _prewarm(self) -> None:
         """Compile every tier's batch shape now (one masked-out step each),
         so a serving-path resize never stalls on jit."""
-        hop = self.cfg.hop
+        hop, K = self.cfg.hop, self.hops_per_step
         for cap in self.tiers:
             state = init_stream(self._params, self.cfg, cap)
-            hops = np.zeros((cap, hop), np.float32)
-            active = np.zeros((cap,), bool)
+            if K == 1:
+                hops = np.zeros((cap, hop), np.float32)
+                active = np.zeros((cap,), bool)
+            else:  # fused step: packed lanes + per-slot hop counts
+                hops = np.zeros((cap, K, hop), np.float32)
+                active = np.zeros((cap,), np.int32)
             if self.device is not None:
                 state = jax.device_put(state, self.device)
                 hops = jax.device_put(hops, self.device)

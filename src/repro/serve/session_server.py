@@ -15,7 +15,14 @@ client sessions onto a single jit-compiled batched hop step
   ``inflight=2`` the drain is **double-buffered**: the host fills hop k+1's
   input buffer while the device computes hop k (the ROADMAP async item), and
   ``max_unread_hops`` bounds per-session output growth under slow readers
-  (backpressure parks the stream in its own ring instead).
+  (backpressure parks the stream in its own ring instead; an
+  ``on_unparked`` callback wakes the driver when the reader catches up).
+- **Multi-hop fused dispatch** — ``hops_per_step=K`` amortizes the fixed
+  host→device→host + Python dispatch cost over up to K hops per session per
+  device call: one packed (capacity, K, hop) staging transfer in, one
+  scan-batched jit step, one readback of up to K enhanced hops per slot,
+  with a per-slot ``hop_counts`` vector so ragged backlogs drain unevenly
+  in the same call. Bit-identical to K=1 (tests/test_fused_hops.py).
 - **Donated state** — the batched recurrent state is donated to the jit step,
   so steady-state serving updates it in place (constant memory traffic, the
   software analogue of the ASIC's all-on-chip state).
@@ -118,8 +125,8 @@ class Session:
 class _Pending:
     """One in-flight batched step (between dispatch() and collect())."""
 
-    out: jax.Array
-    active: np.ndarray
+    out: jax.Array  # (B, hop) at hops_per_step=1, (B, K, hop) otherwise
+    counts: np.ndarray  # (B,) int — hops consumed per slot by this step
     t0: float
     dt: Optional[float] = None  # dispatch->ready, set by wait_ready()
 
@@ -141,6 +148,7 @@ class SessionTicket:
     pending_in: np.ndarray  # raw samples fed but not yet hopped
     unread_out: np.ndarray  # enhanced samples produced but not yet read
     stats: SessionStats
+    parked: bool = False  # backpressure-parked at export (wake-up continuity)
 
 
 class _RingBuffer:
@@ -230,16 +238,39 @@ class SessionPool:
             and a slow reader backs pressure up into its own ring buffer
             instead of growing the pool's output memory without bound. The
             stream resumes as soon as the client ``read()``s.
+        on_unparked: wake-up callback ``on_unparked(session)`` fired from
+            ``read()`` when a parked session's unread output drains back
+            below ``max_unread_hops`` — the signal for an async driver to
+            resume pumping a stream it stopped scheduling. Called
+            synchronously inside ``read()`` (including the final drain
+            inside ``detach()``), at most once per park/unpark cycle.
+            Requires ``max_unread_hops`` (nothing ever parks otherwise).
+        hops_per_step: maximum hops drained per session per ``dispatch()``
+            (default 1 = the classic one-hop step). With K > 1 the pool
+            serves through the **multi-hop fused dispatch** path
+            (``make_stream_hop(..., max_hops_per_step=K)``): each dispatch
+            pops up to K hops per backlogged session into one packed
+            (capacity, K, hop) staging buffer, ships it in ONE transfer,
+            runs the scan-batched step in ONE device call, and ``collect()``
+            reads back up to K enhanced hops per slot in one readback.
+            Sessions with different backlogs drain different hop counts in
+            the same call (per-slot ``hop_counts``), and outputs are
+            bit-identical to ``hops_per_step=1``. The tradeoff is output
+            granularity: a backlogged stream's audio arrives K hops at a
+            time (throughput up, per-hop readback latency amortized).
         step_fn: a pre-built hop step (from ``make_stream_hop(params, cfg,
-            quant=quant, donate=donate, backend=backend)``) to use instead
-            of compiling a fresh one. Pools that share a device, params,
-            config, quant, backend, and capacity can share ONE compiled step
-            this way — the router uses it so co-located shards don't pay N
-            identical XLA compilations. The caller is responsible for the
-            match.
+            quant=quant, donate=donate, backend=backend,
+            max_hops_per_step=hops_per_step)``) to use instead of compiling
+            a fresh one. Pools that share a device, params, config, quant,
+            backend, capacity, and ``hops_per_step`` can share ONE compiled
+            step this way — the router uses it so co-located shards don't
+            pay N identical XLA compilations. The caller is responsible for
+            the match.
 
     Raises:
-        ValueError: ``capacity < 1``, ``inflight < 1``, bad ``backend``.
+        ValueError: ``capacity < 1``, ``inflight < 1``, ``hops_per_step <
+            1``, ``on_unparked`` without ``max_unread_hops``, bad
+            ``backend``.
     """
 
     def __init__(
@@ -257,6 +288,8 @@ class SessionPool:
         prune_axis: Optional[int] = None,
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
+        on_unparked=None,
+        hops_per_step: int = 1,
         step_fn=None,
     ) -> None:
         if capacity < 1:
@@ -265,12 +298,21 @@ class SessionPool:
             raise ValueError("inflight must be >= 1")
         if max_unread_hops is not None and max_unread_hops < 1:
             raise ValueError("max_unread_hops must be >= 1 (or None)")
+        if on_unparked is not None and max_unread_hops is None:
+            raise ValueError(
+                "on_unparked requires max_unread_hops: without the "
+                "backpressure bound no session ever parks, so the wake-up "
+                "callback could never fire"
+            )
+        if hops_per_step < 1:
+            raise ValueError("hops_per_step must be >= 1")
         self.cfg = cfg
         self.capacity = capacity
         self.sample_rate = sample_rate
         self.quant = quant
         self.device = device
         self.backend = backend
+        self.hops_per_step = hops_per_step
         if device is not None:
             params = jax.device_put(params, device)
         self._step = (
@@ -279,6 +321,7 @@ class SessionPool:
             else make_stream_hop(
                 params, cfg, quant=quant, donate=donate, backend=backend,
                 prune_keep=prune_keep, prune_axis=prune_axis,
+                max_hops_per_step=hops_per_step,
             )
         )
         state = init_stream(params, cfg, capacity)
@@ -292,11 +335,17 @@ class SessionPool:
         self._sid_counter = itertools.count()
         self._inflight = inflight
         self._max_unread_hops = max_unread_hops
-        # one host hop buffer per pipeline stage: buffer i is refilled only
-        # after the step that consumed it has been collected (see dispatch)
-        self._hop_bufs = [
-            np.zeros((capacity, cfg.hop), np.float32) for _ in range(inflight)
-        ]
+        self._on_unparked = on_unparked
+        self._parked = np.zeros((capacity,), bool)
+        # one host staging buffer per pipeline stage: buffer i is refilled
+        # only after the step that consumed it has been collected (see
+        # dispatch). At hops_per_step=K the buffer packs up to K hops per
+        # slot so a dispatch ships ONE array instead of re-staging per hop.
+        shape = (
+            (capacity, cfg.hop) if hops_per_step == 1
+            else (capacity, hops_per_step, cfg.hop)
+        )
+        self._hop_bufs = [np.zeros(shape, np.float32) for _ in range(inflight)]
         self._buf_i = 0
         # in-flight batched steps launched by dispatch(), drained in FIFO
         # order by collect(); at most ``inflight`` deep
@@ -339,6 +388,7 @@ class SessionPool:
         self._sessions[sess.sid] = sess
         self._rings[slot] = _RingBuffer()
         self._out[slot] = []
+        self._parked[slot] = False
         return sess
 
     def detach(self, sess: Session) -> np.ndarray:
@@ -388,6 +438,11 @@ class SessionPool:
     def read(self, sess: Session) -> np.ndarray:
         """Pop all enhanced audio produced for this session so far.
 
+        Draining a *parked* session (one ``dispatch()`` stopped scheduling
+        because its unread output hit ``max_unread_hops``) back below the
+        bound un-parks it and fires the pool's ``on_unparked`` callback —
+        the wake-up signal for a driver that stopped pumping the stream.
+
         Returns:
             The enhanced samples not yet read (possibly empty). Each sample is
             final — the COLA normalizer makes every emitted hop exact with no
@@ -400,6 +455,12 @@ class SessionPool:
         self.collect()  # fold any in-flight dispatch into the output queues
         chunks = self._out[sess.slot]
         self._out[sess.slot] = []
+        # a parked slot is always below the bound here: collect() above
+        # drained the pipeline and the queue was just popped, so unread == 0
+        if self._parked[sess.slot]:
+            self._parked[sess.slot] = False
+            if self._on_unparked is not None:
+                self._on_unparked(sess)
         if not chunks:
             return np.zeros((0,), np.float32)
         out = np.concatenate(chunks)
@@ -412,60 +473,82 @@ class SessionPool:
         """Hops of enhanced output this slot holds: queued plus in-flight."""
         hop = self.cfg.hop
         queued = sum(c.size for c in self._out[slot]) // hop
-        return queued + sum(1 for p in self._pending if p.active[slot])
+        return queued + sum(int(p.counts[slot]) for p in self._pending)
 
     def dispatch(self) -> int:
-        """Launch ONE batched hop step without waiting for its result.
+        """Launch ONE batched (multi-)hop step without waiting for its result.
 
-        Pops one hop from every session with a full hop queued, enqueues the
-        jit step on the pool's device, and records the in-flight output for a
-        later ``collect()``. Because JAX dispatch is asynchronous, this
-        returns as soon as the work is enqueued — a router can dispatch every
-        shard before blocking on any of them, overlapping all devices' work
-        (``ShardedSessionPool.pump_all``), and a pool built with
-        ``inflight=2`` can keep dispatching while its previous step is still
-        on the device (double-buffered ingestion: the host fills hop buffer
-        k+1 while the device computes step k).
+        Pops up to ``hops_per_step`` whole hops from every backlogged session
+        into one packed staging buffer, ships it to the pool's device in a
+        single transfer, enqueues the jit step, and records the in-flight
+        output for a later ``collect()``. Because JAX dispatch is
+        asynchronous, this returns as soon as the work is enqueued — a router
+        can dispatch every shard before blocking on any of them, overlapping
+        all devices' work (``ShardedSessionPool.pump_all``), and a pool built
+        with ``inflight=2`` can keep dispatching while its previous step is
+        still on the device (double-buffered ingestion: the host fills the
+        staging buffer for step k+1 while the device computes step k).
 
         When the pipeline is already ``inflight`` deep, the oldest step is
         collected first (so a pool never holds more than ``inflight`` steps,
-        and a hop buffer is never refilled under an in-flight step).
+        and a staging buffer is never refilled under an in-flight step).
 
         Sessions whose unread output has reached ``max_unread_hops`` are
-        skipped — the backpressure bound on ``_out`` (see the constructor).
+        *parked* and skipped — the backpressure bound on ``_out`` (see the
+        constructor); with ``hops_per_step > 1`` a session near the bound is
+        clipped to its remaining headroom rather than skipped outright.
 
         Returns:
-            Number of sessions included in the launched step (0 = nothing
-            ready, no compute enqueued). Starved/empty slots are masked inside
-            the step: their state is kept bit-for-bit.
+            Total hops included in the launched step across all sessions
+            (0 = nothing ready, no compute enqueued; at ``hops_per_step=1``
+            this is exactly the number of sessions stepped). Starved/empty
+            slots and idle scan lanes are masked inside the step: their
+            state is kept bit-for-bit.
         """
         while len(self._pending) >= self._inflight:
             self._collect_one()
         hop = self.cfg.hop
+        K = self.hops_per_step
         buf = self._hop_bufs[self._buf_i]
-        active = np.zeros((self.capacity,), bool)
+        counts = np.zeros((self.capacity,), np.int32)
         bounded = self._max_unread_hops
         for slot, sess in enumerate(self._slot_session):
-            if sess is None or len(self._rings[slot]) < hop:
+            if sess is None:
                 continue
-            if bounded is not None and self._unread_hops(slot) >= bounded:
-                continue  # parked: reader is behind, keep audio in the ring
-            buf[slot] = self._rings[slot].pop(hop)
-            active[slot] = True
-        n_active = int(active.sum())
-        if n_active == 0:
+            take = min(len(self._rings[slot]) // hop, K)
+            if take == 0:
+                continue
+            if bounded is not None:
+                headroom = bounded - self._unread_hops(slot)
+                if headroom < take:
+                    take = max(headroom, 0)
+                if take == 0:
+                    # parked: reader is behind, keep audio in the ring until
+                    # a read() drains the queue (which un-parks + wakes up)
+                    self._parked[slot] = True
+                    continue
+            if K == 1:
+                buf[slot] = self._rings[slot].pop(hop)
+            else:
+                buf[slot, :take] = self._rings[slot].pop(take * hop).reshape(take, hop)
+            counts[slot] = take
+        n_hops = int(counts.sum())
+        if n_hops == 0:
             return 0
         self._buf_i = (self._buf_i + 1) % len(self._hop_bufs)
 
+        # K=1 steps take the (B,) bool active mask; fused steps take the
+        # (B,) int hop_counts vector driving the per-lane scan masks
+        lanes = counts.astype(bool) if K == 1 else counts
         t0 = time.perf_counter()
         if self.device is not None:
             hops = jax.device_put(buf, self.device)
-            act = jax.device_put(active, self.device)
+            act = jax.device_put(lanes, self.device)
         else:
-            hops, act = jnp.asarray(buf), jnp.asarray(active)
+            hops, act = jnp.asarray(buf), jnp.asarray(lanes)
         self._state, out = self._step(self._state, hops, act)
-        self._pending.append(_Pending(out=out, active=active, t0=t0))
-        return n_active
+        self._pending.append(_Pending(out=out, counts=counts, t0=t0))
+        return n_hops
 
     def _mark_ready(self, pending: _Pending) -> None:
         """Block on one step and record its latency WITHOUT pipeline wait.
@@ -497,7 +580,11 @@ class SessionPool:
             self._mark_ready(pending)
 
     def _collect_one(self, proc_share: Optional[float] = None) -> int:
-        """Drain the OLDEST in-flight step; returns its session count."""
+        """Drain the OLDEST in-flight step; returns its hop count.
+
+        One readback delivers up to ``hops_per_step`` enhanced hops per slot
+        (lane k of the fused output is slot b's k-th hop — contiguous audio
+        once flattened)."""
         if not self._pending:
             return 0
         pending = self._pending.pop(0)
@@ -505,30 +592,34 @@ class SessionPool:
         out = np.asarray(pending.out)
         self.step_seconds.append(pending.dt)
 
-        n_active = int(pending.active.sum())
-        share = pending.dt / n_active if proc_share is None else proc_share
-        for slot in np.flatnonzero(pending.active):
+        n_hops = int(pending.counts.sum())
+        share = pending.dt / n_hops if proc_share is None else proc_share
+        for slot in np.flatnonzero(pending.counts):
+            c = int(pending.counts[slot])
             sess = self._slot_session[slot]
-            self._out[slot].append(out[slot])
-            sess.stats.hops += 1
-            sess.stats.proc_seconds += share
-        return n_active
+            if out.ndim == 3:  # fused (B, K, hop): keep only the live lanes
+                self._out[slot].append(out[slot, :c].reshape(-1))
+            else:
+                self._out[slot].append(out[slot])
+            sess.stats.hops += c
+            sess.stats.proc_seconds += share * c
+        return n_hops
 
     def collect(self, proc_share: Optional[float] = None) -> int:
         """Block on every in-flight step (if any) and distribute the output.
 
         Args:
-            proc_share: per-session compute-seconds to charge for this step
-                instead of the default ``latency / n_active``. A router
-                passes ``round_wall / total_sessions_stepped`` here so that
+            proc_share: per-HOP compute-seconds to charge for this step
+                instead of the default ``latency / hops_in_step``. A router
+                passes ``round_wall / total_hops_stepped`` here so that
                 summed ``proc_seconds`` across ALL shards equals the round's
                 wall-clock — device work that overlapped is not
                 double-counted into session RTFs.
 
         Returns:
-            Number of session-steps whose output was delivered (0 = nothing
-            was in flight). Safe to call at any time; idempotent until the
-            next ``dispatch()``.
+            Number of hops whose output was delivered (0 = nothing was in
+            flight). Safe to call at any time; idempotent until the next
+            ``dispatch()``.
         """
         total = 0
         while self._pending:
@@ -536,13 +627,13 @@ class SessionPool:
         return total
 
     def step(self) -> int:
-        """Run ONE batched hop step over every session with a full hop queued.
+        """Run ONE batched step over every session with a full hop queued.
 
         Equivalent to ``dispatch()`` + ``collect()`` back to back (the
         pipelined path is ``pump()``/raw ``dispatch()``, not ``step()``).
 
         Returns:
-            The number of sessions stepped (0 = nothing ready, no compute
+            The number of hops stepped (0 = nothing ready, no compute
             spent). Starved and empty slots are masked: their state is
             untouched.
         """
@@ -594,6 +685,7 @@ class SessionPool:
             "p50_ms": self.latency_percentiles((50,))[50],
             "device": str(self.device) if self.device is not None else "default",
             "backend": self.backend,
+            "hops_per_step": self.hops_per_step,
         }
 
     def export_session(self, sess: Session) -> SessionTicket:
@@ -621,7 +713,8 @@ class SessionPool:
         self._out[slot] = []
         del self._sessions[sess.sid]
         return SessionTicket(
-            state=state, pending_in=pending, unread_out=unread, stats=sess.stats
+            state=state, pending_in=pending, unread_out=unread, stats=sess.stats,
+            parked=bool(self._parked[slot]),
         )
 
     def import_session(self, ticket: SessionTicket) -> Session:
@@ -648,6 +741,7 @@ class SessionPool:
         if ticket.unread_out.size:
             self._out[slot] = [ticket.unread_out]
         sess.stats = ticket.stats
+        self._parked[slot] = ticket.parked
         return sess
 
     # -- reporting ----------------------------------------------------------

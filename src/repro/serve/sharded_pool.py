@@ -165,12 +165,20 @@ class ShardedSessionPool:
         prune_keep / prune_axis: deploy-time zero-skipping masks for the
             pallas backend, forwarded to every shard's compiled step (see
             ``SessionPool``). Lossy by design; ``None`` serves unpruned.
-        inflight / max_unread_hops: per-shard ingestion pipelining depth and
-            output backpressure bound (see ``SessionPool``). ``pump_all``
-            drains every shard each round, so the cross-shard overlap comes
-            from the round structure; ``inflight=2`` additionally overlaps
-            each shard's own host drain with its device step when the pool is
+        inflight / max_unread_hops / on_unparked: per-shard ingestion
+            pipelining depth, output backpressure bound, and parked-session
+            wake-up callback (see ``SessionPool``; the router translates the
+            shard-internal handle, so the callback receives the client's
+            ``ShardedSession``). ``pump_all`` drains
+            every shard each round, so the cross-shard overlap comes from
+            the round structure; ``inflight=2`` additionally overlaps each
+            shard's own host drain with its device step when the pool is
             driven via per-shard ``dispatch()``/``pump()``.
+        hops_per_step: multi-hop fused dispatch depth forwarded to every
+            shard (see ``SessionPool``): each ``pump_all`` round drains up
+            to K hops per session per shard in ONE device call per shard —
+            the per-round fixed dispatch cost is amortized over K hops on
+            every device at once. Bit-identical to ``hops_per_step=1``.
         tiers: when given (e.g. ``(4, 16, 64)``), every shard is an
             **elastic** ``ElasticSessionPool`` on this capacity ladder
             instead of a fixed ``SessionPool``: a hot shard grows to its
@@ -188,8 +196,9 @@ class ShardedSessionPool:
         step_cache: optional mutable dict mapping device -> (device-resident
             params, compiled step). Co-located shards always share one entry;
             pass the same dict to several ``ShardedSessionPool`` instances
-            with identical params/cfg/quant/donate/capacity (e.g. a benchmark
-            sweeping shard counts) to also share compilations ACROSS pools.
+            with identical params/cfg/quant/donate/capacity/hops_per_step
+            (e.g. a benchmark sweeping shard counts) to also share
+            compilations ACROSS pools.
 
     Raises:
         ValueError: ``shards < 1`` or empty ``devices``.
@@ -211,6 +220,8 @@ class ShardedSessionPool:
         prune_axis: Optional[int] = None,
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
+        on_unparked=None,
+        hops_per_step: int = 1,
         tiers: Optional[Sequence[int]] = None,
         shrink_fraction: float = 0.5,
         shrink_patience: int = 8,
@@ -227,6 +238,12 @@ class ShardedSessionPool:
             raise ValueError("shards must be >= 1")
         self.cfg = cfg
         self.n_shards = shards
+        # shards wake up with their pool-internal handles; clients hold
+        # ShardedSessions — translate before calling out (elastic shards
+        # already translate Session -> ElasticSession one level down)
+        if on_unparked is not None:
+            client_cb = on_unparked
+            on_unparked = lambda inner: self._wake(client_cb, inner)  # noqa: E731
         # Shards co-located on one device (shards > len(devices), e.g. CPU
         # tests) share ONE device-resident params copy and ONE compiled hop
         # step instead of paying per-shard duplicates.
@@ -242,6 +259,7 @@ class ShardedSessionPool:
                     make_stream_hop(
                         placed, cfg, quant=quant, donate=donate, backend=backend,
                         prune_keep=prune_keep, prune_axis=prune_axis,
+                        max_hops_per_step=hops_per_step,
                     ),
                 )
             placed, step = shared[dev]
@@ -253,6 +271,8 @@ class ShardedSessionPool:
                 backend=backend,
                 inflight=inflight,
                 max_unread_hops=max_unread_hops,
+                on_unparked=on_unparked,
+                hops_per_step=hops_per_step,
                 step_fn=step,
             )
             self._pools.append(
@@ -350,6 +370,12 @@ class ShardedSessionPool:
         self._sessions[session_id] = handle
         return handle
 
+    def _wake(self, on_unparked, inner) -> None:
+        for handle in self._sessions.values():
+            if handle.inner is inner:
+                on_unparked(handle)
+                return
+
     def _resolve(self, sess) -> ShardedSession:
         """Accept a ``ShardedSession`` handle or a raw session id."""
         if isinstance(sess, ShardedSession):
@@ -399,10 +425,11 @@ class ShardedSessionPool:
         work overlaps instead of serializing, which is where the linear
         capacity scaling comes from.
 
-        Accounting: each round charges ``round_wall / sessions_stepped`` to
-        every stepped session, so summed ``proc_seconds`` across all shards
-        equals the overlapped wall-clock (concurrent device work is not
-        double-counted into session RTFs).
+        Accounting: each round charges ``round_wall / hops_stepped`` per hop
+        to every stepped session, so summed ``proc_seconds`` across all
+        shards equals the overlapped wall-clock (concurrent device work is
+        not double-counted into session RTFs); with ``hops_per_step=K`` a
+        round covers up to K hops per session.
 
         Elastic shards take their lazy shrink heartbeat here too — once per
         ``pump_all`` after the rounds drain, mirroring the cadence of a

@@ -190,10 +190,12 @@ def make_stream_hop(
     backend: str = "xla",
     prune_keep: Optional[float] = None,
     prune_axis: Optional[int] = None,
+    max_hops_per_step: int = 1,
 ) -> Callable[[StreamState, jax.Array, jax.Array], Tuple[StreamState, jax.Array]]:
     """Build the jit-compiled batched hop step shared by server and benchmarks.
 
-    Returns ``step(state, hops, active) -> (state, out)`` where
+    With ``max_hops_per_step=1`` (default) returns
+    ``step(state, hops, active) -> (state, out)`` where
 
     - ``hops``: (B, hop) one hop of audio per slot (garbage for idle slots),
     - ``active``: (B,) bool — slots where it is False keep their state
@@ -202,6 +204,24 @@ def make_stream_hop(
     - the state argument is donated (``donate=True``): the batched recurrent
       state is updated in place, the steady-state memory traffic the paper's
       constant-size-state execution model is about.
+
+    With ``max_hops_per_step=K > 1`` the returned step is the **multi-hop
+    fused dispatch** form,
+    ``step(state, hops, hop_counts) -> (state, out)`` where
+
+    - ``hops``: (B, K, hop) — up to K staged hops per slot,
+    - ``hop_counts``: (B,) int — how many of the K lanes each slot really
+      has staged. Iteration k of the internal ``lax.scan`` is live exactly
+      for the slots with ``hop_counts > k`` and is masked out — state kept
+      bit-for-bit, zeros emitted — otherwise, i.e. a partially-backlogged
+      slot is handled exactly like an inactive slot is today,
+    - ``out``: (B, K, hop) — lane k is slot b's k-th enhanced hop (zeros
+      for lanes past ``hop_counts[b]``).
+
+    One fused call drains up to K hops per session in ONE device dispatch —
+    the fixed host->device->host + Python dispatch cost is amortized over K
+    hops, the standard streaming-throughput lever — and is BIT-identical to
+    driving the K=1 step K times with the per-iteration active masks.
 
     ``quant`` switches the whole path onto a ``repro.core.quant`` grid:
     weights are pre-quantized here (once), activations per hop inside
@@ -221,6 +241,8 @@ def make_stream_hop(
     """
     if prune_keep is not None and backend != "pallas":
         raise ValueError("prune_keep requires backend='pallas' (the deploy path)")
+    if max_hops_per_step < 1:
+        raise ValueError("max_hops_per_step must be >= 1")
     if backend == "pallas":
         from repro.serve.deploy import build_deploy_plan, stream_hop_fused
 
@@ -241,7 +263,7 @@ def make_stream_hop(
     else:
         raise ValueError(f"unknown backend {backend!r}: expected 'xla' or 'pallas'")
 
-    def step(state: StreamState, hops: jax.Array, active: jax.Array):
+    def masked(state: StreamState, hops: jax.Array, active: jax.Array):
         stepped, out = hop(state, hops)
 
         def merge(new: jax.Array, old: jax.Array) -> jax.Array:
@@ -250,6 +272,25 @@ def make_stream_hop(
 
         merged = jax.tree_util.tree_map(merge, stepped, state)
         return merged, jnp.where(active[:, None], out, jnp.zeros_like(out))
+
+    if max_hops_per_step == 1:
+        step = masked
+    else:
+        K = max_hops_per_step
+
+        def step(state: StreamState, hops: jax.Array, hop_counts: jax.Array):
+            def body(st, x):
+                hop_k, k = x
+                return masked(st, hop_k, hop_counts > k)
+
+            xs = (jnp.moveaxis(hops, 1, 0), jnp.arange(K))
+            # unroll=True is load-bearing: a rolled scan compiles the body in
+            # its own while-loop scope where XLA's fusion choices differ from
+            # the straight-line K=1 step by ~1 ulp; unrolled, the fused path
+            # is BIT-identical to K sequential single-hop steps (the churn
+            # harness in tests/test_fused_hops.py proves it on both backends).
+            state, outs = jax.lax.scan(body, state, xs, unroll=True)
+            return state, jnp.moveaxis(outs, 0, 1)
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())
 

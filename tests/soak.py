@@ -56,7 +56,8 @@ def _check_session_pool(p) -> None:
     assert len(p._pending) <= p._inflight
     for slot, sess in occupied.items():
         st = sess.stats
-        inflight = sum(1 for pend in p._pending if pend.active[slot])
+        # a fused step may hold up to hops_per_step hops of one slot in flight
+        inflight = sum(int(pend.counts[slot]) for pend in p._pending)
         # 2. ring conservation: fed == buffered + in flight + processed
         assert st.samples_in == len(p._rings[slot]) + hop * (st.hops + inflight), (
             f"slot {slot}: fed {st.samples_in} != ring {len(p._rings[slot])} "

@@ -289,6 +289,36 @@ def test_backpressure_bounds_unread_output(setup):
     pool.detach(s)
 
 
+def test_fp10_deploy_si_snr_gate(setup):
+    """ROADMAP "quantized serving parity": the FP10 deploy path must stay
+    within a bounded SI-SNR of the fp32 ``enhance_offline`` reference on
+    synthetic speech+noise fixtures — the tier-1 twin of the
+    ``benchmarks/deploy_parity.py`` gate. The jnp reference kernels stand in
+    for Pallas here (the two fused paths are FP10-bit-exact, see
+    ``test_fused_fp10_bitmatch``), so this test isolates exactly the
+    quantization loss it gates."""
+    from repro.audio.metrics import si_snr_db
+    from repro.audio.synthetic import batch_for_step
+    from repro.serve.streaming_se import enhance_offline
+
+    cfg, params, _ = setup
+    B, n = 2, 64
+    noisy, _ = batch_for_step(1, 0, batch=B, num_samples=n * cfg.hop)
+    noisy = jnp.asarray(noisy)
+    ref = enhance_offline(params, cfg, noisy)
+    plan = build_deploy_plan(params, cfg, quant=FP10, use_pallas=False)
+    hops = noisy.reshape(B, n, cfg.hop).transpose(1, 0, 2)
+    _, outs = jax.lax.scan(
+        lambda s, h: stream_hop_fused(plan, s, h), init_stream(params, cfg, B), hops
+    )
+    est = outs.transpose(1, 0, 2).reshape(B, -1)
+    parity = float(jnp.mean(si_snr_db(est, ref[:, : est.shape[1]])))
+    assert parity >= 15.0, (
+        f"FP10 deploy path drifted from the fp32 reference: mean SI-SNR "
+        f"{parity:.2f} dB < 15 dB"
+    )
+
+
 def test_interpret_default_env(monkeypatch):
     from repro.kernels import interpret_default
     from repro.kernels.runtime import ENV_VAR

@@ -1,0 +1,269 @@
+"""Multi-hop fused dispatch tests (``hops_per_step`` > 1).
+
+The fused path's contract: draining up to K hops per session per device
+call — one packed staging transfer, one scan-batched jit step, one readback
+— is **bit-identical** to the classic one-hop-per-dispatch loop, under any
+interleaving of attach/detach/ragged feeds/reads/pumps, on both hop
+backends (xla and the deploy-compiled pallas graph), with the
+double-buffered ingestion pipeline in flight, and across elastic tier
+resizes (the staged ring backlog migrates bit-exactly through
+``SessionTicket``).
+
+The churn property test mirrors ``tests/test_elastic_pool.py``'s harness:
+the same op sequence drives a fused pool and a K=1 reference in lockstep
+and every ``read``/``detach`` must match bit for bit; ``tests/soak.py``
+checks the structural invariants (ring conservation now counts up to K
+in-flight hops per slot) after every op. Deterministic tests pin the ragged
+corner cases the scan masks must get right: slots with 0, 1, K-1, K and >K
+staged hops in ONE dispatch, and backpressure clipping a drain to the
+remaining headroom.
+"""
+
+import dataclasses
+import functools
+import itertools
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import tftnn as tft
+from repro.serve import (
+    ElasticSessionPool,
+    SessionPool,
+    make_stream_hop,
+)
+from soak import SoakChecker, check_pool_invariants, run_soak
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=16,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+        downsample=2,
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+K = 3  # fused depth under test (ragged tests also cover K=4)
+CAP = 4
+TIERS = (2, 3, CAP)
+MAX_HOPS = 18  # audio budget per churn stream
+
+
+@functools.lru_cache(maxsize=None)
+def shared_step(backend: str, k: int):
+    """ONE compiled step per (backend, K) for the whole module."""
+    return make_stream_hop(PARAMS, CFG, backend=backend, max_hops_per_step=k)
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)), np.float32
+    )
+
+
+def _run_churn(ops, fused, ref) -> None:
+    """Apply an encoded op sequence to a fused-dispatch pool and a K=1
+    reference in lockstep, asserting bit-identity at every read/detach."""
+    check_f, check_r = SoakChecker(), SoakChecker()
+    streams = []  # [fused handle, ref handle, audio, cursor]
+    seeds = itertools.count(5000)
+    n_resize_ops = 6 if hasattr(fused, "resize_to") else 5
+    for code, arg in ops:
+        op = code % n_resize_ops
+        if op == 0 and ref.num_active < CAP:
+            streams.append(
+                [fused.attach(), ref.attach(), _audio(next(seeds), MAX_HOPS), 0]
+            )
+        elif op == 1 and streams:  # ragged feed to BOTH pools
+            s = streams[arg % len(streams)]
+            chunk = s[2][s[3] : s[3] + 1 + arg % ((K + 1) * HOP)]
+            s[3] += chunk.size
+            if chunk.size:
+                fused.feed(s[0], chunk)
+                ref.feed(s[1], chunk)
+        elif op == 2:
+            fused.pump()
+            ref.pump()
+        elif op == 3 and streams:  # read: outputs must match bit for bit
+            s = streams[arg % len(streams)]
+            np.testing.assert_array_equal(fused.read(s[0]), ref.read(s[1]))
+        elif op == 4 and streams:  # detach: unread tails must match too
+            s = streams.pop(arg % len(streams))
+            np.testing.assert_array_equal(fused.detach(s[0]), ref.detach(s[1]))
+        elif op == 5:  # explicit elastic resize of the FUSED pool only
+            fits = [t for t in fused.tiers if t >= fused.num_active]
+            fused.resize_to(fits[arg % len(fits)])
+        check_f.check(fused)
+        check_r.check(ref)
+    fused.pump()
+    ref.pump()
+    for s in streams:  # every survivor: identical audio AND accounting
+        assert s[0].stats.hops == s[1].stats.hops
+        np.testing.assert_array_equal(fused.detach(s[0]), ref.detach(s[1]))
+
+
+OPS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=5),
+              st.integers(min_value=0, max_value=2**16)),
+    min_size=4,
+    max_size=14,
+)
+
+
+# -- the churn property: fused dispatch is invisible to audio ----------------
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=4, deadline=None)
+@given(ops=OPS)
+def test_churn_fused_bit_identical_xla(inflight, ops):
+    """Randomized churn, xla backend: a hops_per_step=K pool emits bit-
+    identical audio to a K=1 pool fed the same op sequence."""
+    fused = SessionPool(
+        PARAMS, CFG, capacity=CAP, inflight=inflight, hops_per_step=K,
+        step_fn=shared_step("xla", K),
+    )
+    ref = SessionPool(
+        PARAMS, CFG, capacity=CAP, inflight=inflight,
+        step_fn=shared_step("xla", 1),
+    )
+    _run_churn(ops, fused, ref)
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=2, deadline=None)
+@given(ops=OPS)
+def test_churn_fused_bit_identical_pallas(inflight, ops):
+    """Same property through the deploy-compiled pallas graph (the fused
+    hop's state-carrying ``linear_attention_step`` composes with the scan)."""
+    fused = SessionPool(
+        PARAMS, CFG, capacity=CAP, backend="pallas", inflight=inflight,
+        hops_per_step=K, step_fn=shared_step("pallas", K),
+    )
+    ref = SessionPool(
+        PARAMS, CFG, capacity=CAP, backend="pallas", inflight=inflight,
+        step_fn=shared_step("pallas", 1),
+    )
+    _run_churn(ops, fused, ref)
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=3, deadline=None)
+@given(ops=OPS)
+def test_churn_fused_elastic_bit_identical(inflight, ops):
+    """Fused dispatch composes with elastic resizes: a hops_per_step=K
+    elastic pool churned THROUGH tier migrations (which must carry any
+    staged ring backlog bit-exactly) matches a fixed K=1 top-tier pool."""
+    fused = ElasticSessionPool(
+        PARAMS, CFG, TIERS, inflight=inflight, hops_per_step=K,
+        shrink_patience=3, step_fn=shared_step("xla", K),
+    )
+    ref = SessionPool(
+        PARAMS, CFG, capacity=CAP, inflight=inflight,
+        step_fn=shared_step("xla", 1),
+    )
+    _run_churn(ops, fused, ref)
+
+
+# -- ragged backlogs: every masking corner in ONE dispatch -------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_ragged_backlogs_one_dispatch(backend):
+    """Slots holding 0, 1, K-1, K and >K staged hops drain min(backlog, K)
+    each in a single fused dispatch — per-slot scan masking, not truncation
+    to the shallowest or deepest backlog — and the audio bit-matches K=1."""
+    k = 4
+    backlogs = [0, 1, k - 1, k, k + 2]
+    fused = SessionPool(
+        PARAMS, CFG, capacity=len(backlogs), backend=backend, hops_per_step=k,
+        step_fn=shared_step(backend, k),
+    )
+    ref = SessionPool(
+        PARAMS, CFG, capacity=len(backlogs), backend=backend,
+        step_fn=shared_step(backend, 1),
+    )
+    pairs = []
+    for i, b in enumerate(backlogs):
+        f, r = fused.attach(), ref.attach()
+        audio = _audio(900 + i, max(b, 1))[: b * HOP]
+        if b:
+            fused.feed(f, audio)
+            ref.feed(r, audio)
+        pairs.append((f, r, b))
+    assert fused.dispatch() == sum(min(b, k) for b in backlogs)
+    fused.collect()
+    for f, _, b in pairs:
+        assert f.stats.hops == min(b, k), f"slot backlog {b}"
+    check_pool_invariants(fused)
+    fused.pump()  # drain the >K remainder
+    ref.pump()
+    for f, r, _ in pairs:
+        np.testing.assert_array_equal(fused.detach(f), ref.detach(r))
+
+
+def test_backpressure_clips_fused_drain_to_headroom():
+    """Near the ``max_unread_hops`` bound a fused dispatch takes only the
+    remaining headroom (partial lanes), parks at zero headroom, and still
+    bit-matches the K=1 pool's bounded schedule."""
+    bound = 4
+    fused = SessionPool(
+        PARAMS, CFG, capacity=2, hops_per_step=K, max_unread_hops=bound,
+        step_fn=shared_step("xla", K),
+    )
+    ref = SessionPool(
+        PARAMS, CFG, capacity=2, max_unread_hops=bound,
+        step_fn=shared_step("xla", 1),
+    )
+    f, r = fused.attach(), ref.attach()
+    audio = _audio(77, 6)
+    fused.feed(f, audio)
+    ref.feed(r, audio)
+    fused.pump()  # K + clipped-to-1 + parked
+    ref.pump()
+    assert f.stats.hops == r.stats.hops == bound
+    check_pool_invariants(fused)
+    np.testing.assert_array_equal(fused.read(f), ref.read(r))
+    fused.pump()
+    ref.pump()
+    np.testing.assert_array_equal(fused.detach(f), ref.detach(r))
+
+
+# -- structural invariants under fused churn ---------------------------------
+
+
+def test_soak_fused_pool_invariants():
+    """60 ops of randomized churn on a fused, double-buffered, backpressure-
+    bounded pool: every soak invariant (ring conservation counts up to K
+    in-flight hops per slot) holds after every op."""
+    pool = SessionPool(
+        PARAMS, CFG, capacity=CAP, hops_per_step=K, inflight=2,
+        max_unread_hops=2 * K, step_fn=shared_step("xla", K),
+    )
+    counts = run_soak(
+        pool,
+        lambda rnd: _audio(rnd.randrange(10_000), K)[: rnd.randrange(1, (K + 1) * HOP)],
+        n_ops=60,
+        seed=3,
+    )
+    assert counts["attach"] > 0 and counts["feed"] > 0 and counts["pump"] > 0
+    assert pool.num_active == 0
+
+
+def test_bad_hops_per_step_rejected():
+    with pytest.raises(ValueError, match="hops_per_step"):
+        SessionPool(PARAMS, CFG, capacity=1, hops_per_step=0)
+    with pytest.raises(ValueError, match="max_hops_per_step"):
+        make_stream_hop(PARAMS, CFG, max_hops_per_step=0)

@@ -19,6 +19,7 @@ from repro.serve import (
     PoolFullError,
     SessionError,
     SessionPool,
+    ShardedSessionPool,
     enhance_streaming,
 )
 from soak import check_pool_invariants, run_soak
@@ -244,6 +245,56 @@ def test_soak_mixed_churn_invariants():
     )
     assert counts["attach"] > 0 and counts["feed"] > 0 and counts["pump"] > 0
     assert pool.num_active == 0
+
+
+def test_unparked_callback_fires_when_reader_catches_up():
+    """ROADMAP async leftover: a session parked by the ``max_unread_hops``
+    backpressure bound wakes its driver via ``on_unparked`` exactly when a
+    ``read()`` drains the queue back below the bound — once per park/unpark
+    cycle, never for sessions that were not parked."""
+    events = []
+    pool = SessionPool(
+        PARAMS, CFG, capacity=2, max_unread_hops=2, on_unparked=events.append
+    )
+    s = pool.attach()
+    pool.feed(s, _audio(91, 6))  # 6 hops queued, bound is 2
+    assert pool.pump() > 0
+    assert s.stats.hops == 2 and events == []  # parked, not woken
+    assert pool.read(s).size == 2 * HOP
+    assert events == [s]  # the drain below the bound fired the wake-up
+    pool.pump()
+    pool.read(s)
+    assert events == [s, s]  # parked again, woken again — one per cycle
+    # an unparked session's read never fires: drain the remaining 2 hops
+    pool.pump()
+    assert pool.read(s).size == 2 * HOP and s.stats.hops == 6
+    events.clear()
+    pool.read(s)  # nothing parked, nothing to wake
+    assert events == []
+    pool.detach(s)
+
+
+def test_unparked_callback_translates_through_router():
+    """Through ShardedSessionPool the wake-up must deliver the CLIENT's
+    handle (the ShardedSession), not the shard-internal session object."""
+    events = []
+    pool = ShardedSessionPool(
+        PARAMS, CFG, 2, shards=2, max_unread_hops=2,
+        on_unparked=events.append,
+    )
+    h = pool.attach("user-42")
+    pool.feed(h, _audio(95, 4))
+    pool.pump_all()
+    assert h.stats.hops == 2 and events == []
+    pool.read(h)
+    assert events == [h]  # the router handle, resolvable by session_id
+    pool.detach(h)
+
+
+def test_on_unparked_requires_backpressure_bound():
+    """A wake-up callback without a bound could never fire — config error."""
+    with pytest.raises(ValueError, match="max_unread_hops"):
+        SessionPool(PARAMS, CFG, capacity=1, on_unparked=lambda s: None)
 
 
 def test_quantized_pool_serves():
