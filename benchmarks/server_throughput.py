@@ -26,6 +26,11 @@ for:
   Python dispatch cost; the ``comparisons`` block reports the aggregate-RTF
   ratio of each K against K=1 (``hops{K}_vs_hops1``) — the speedup the
   fused path buys on this host.
+- ``--transport inproc,socket`` — direct pool calls vs the cross-process
+  fabric: socket points serve every session through a localhost
+  ``StreamingGateway`` (real TCP, framed protocol, the gateway's own pump
+  loop over a 1-shard ``ShardedSessionPool``), so ``socket_vs_inproc`` is
+  the measured price of the network front door. Sessions-sweep mode only.
 
 ``--ramp`` instead drives an **elastic** pool (``ElasticSessionPool``,
 ``--tiers`` capacity ladder) through a session ramp that climbs past at
@@ -58,7 +63,7 @@ deploy path from rotting.
 Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
           [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
           [--buffering single,double] [--hops-per-step 1,4,8] [--ramp]
-          [--tiers 4,16,64] [--smoke] [--json PATH]
+          [--transport inproc,socket] [--tiers 4,16,64] [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
@@ -122,6 +127,47 @@ def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
     }
 
 
+
+
+def run_socket_point(gw, n_sessions: int, audio: np.ndarray) -> dict:
+    """One sessions-sweep point across the fabric: every session is a real
+    ``GatewayClient`` TCP connection to the gateway's localhost socket.
+
+    Same accounting shape as ``run_point`` so the ``socket_vs_inproc``
+    ratio compares like with like; wall-clock covers feed-to-last-sample
+    (the gateway's pump loop serves continuously, so readback latency is
+    part of what the transport costs).
+    """
+    from repro.serve.gateway import GatewayClient
+
+    hop, sr = gw.pool.cfg.hop, gw.pool.sample_rate
+    expect = (audio.shape[1] // hop) * hop
+    host, port = gw.address
+    gw.call(lambda p: [q.step_seconds.clear() for q in p._pools])
+    clients = [GatewayClient(host, port) for _ in range(n_sessions)]
+    try:
+        for c in clients:
+            c.attach()
+        t0 = time.perf_counter()
+        for i, c in enumerate(clients):
+            c.feed(audio[i % audio.shape[0]])
+        outs = [c.read_until(expect, timeout=300) for c in clients]
+        wall = time.perf_counter() - t0
+    finally:
+        for c in clients:
+            c.close()
+    assert all(o.size == expect for o in outs)
+    pct = gw.call(lambda p: p._pools[0].latency_percentiles())
+    audio_sec = n_sessions * expect / sr
+    rtf = wall / audio_sec
+    return {
+        "sessions": n_sessions,
+        "aggregate_rtf": rtf,
+        "rt_capacity": 1.0 / rtf if rtf > 0 else float("inf"),
+        "mean_session_rtf": rtf,
+        "p50_ms": pct[50],
+        "p95_ms": pct[95],
+    }
 
 
 def run_sharded_point(params, cfg, n_shards: int, per_shard: int,
@@ -289,7 +335,7 @@ def _csv_ints(raw: str, what: str) -> list:
     return sorted(set(vals))
 
 
-_SWEEP_AXES = ("backend", "buffering", "hops_per_step")
+_SWEEP_AXES = ("backend", "buffering", "hops_per_step", "transport")
 
 
 def _ratio(points: list, key: str, a: str, b: str) -> dict:
@@ -331,6 +377,11 @@ def main() -> None:
                     "1,4,8 — K>1 drains up to K hops per session per device "
                     "call (scan-batched step, bit-identical to K=1); the "
                     "JSON gains a hops{K}_vs_hops1 RTF ratio per K")
+    ap.add_argument("--transport", default="inproc",
+                    help="comma list of serving transports to sweep: "
+                    "inproc,socket — socket serves each point through a "
+                    "localhost StreamingGateway (real TCP clients, framed "
+                    "chunk protocol); sessions-sweep mode only")
     ap.add_argument("--shards", type=int, default=0,
                     help="sweep ShardedSessionPool from 1 up to N shards at full "
                     "per-shard load (0 = single-pool sessions sweep); fake CPU "
@@ -362,6 +413,9 @@ def main() -> None:
     backends = _csv_list(args.backend, ("xla", "pallas"))
     bufferings = _csv_list(args.buffering, ("single", "double"))
     hops_sweep = _csv_ints(args.hops_per_step, "--hops-per-step")
+    transports = _csv_list(args.transport, ("inproc", "socket"))
+    if "socket" in transports and (args.ramp or args.shards > 0):
+        raise SystemExit("--transport socket only sweeps in sessions mode")
     if args.repeats < 1:
         raise SystemExit("--repeats must be >= 1")
     if args.smoke:
@@ -399,6 +453,7 @@ def main() -> None:
             "backends": backends,
             "bufferings": bufferings,
             "hops_per_step": hops_sweep,
+            "transports": transports,
             "shards_max": args.shards,
             "ramp": args.ramp,
             "tiers": list(tiers) if args.ramp else None,
@@ -430,7 +485,8 @@ def main() -> None:
                         hops_per_step=hps, step_fn=step)
                     for r in ramp_points:
                         r.update(mode="ramp", backend=backend,
-                                 buffering=buffering, hops_per_step=hps)
+                                 buffering=buffering, hops_per_step=hps,
+                                 transport="inproc")
                         points.append(r)
                         emit(
                             f"backend={backend} buffering={buffering} "
@@ -456,7 +512,8 @@ def main() -> None:
                     r = run_sharded_point(params, cfg, s, args.capacity, audio,
                                           quant, backend, hps, step_cache)
                     r.update(mode="shards", backend=backend,
-                             buffering="single", hops_per_step=hps)
+                             buffering="single", hops_per_step=hps,
+                             transport="inproc")
                     points.append(r)
                     # space-separated name: emit() quotes nothing, so a comma
                     # here would break the 3-column CSV contract
@@ -471,9 +528,11 @@ def main() -> None:
         print(f"# capacity={args.capacity} audio/session={args.seconds}s "
               f"hop_budget={budget_ms:.1f}ms backends={backends} "
               f"bufferings={bufferings} hops_per_step={hops_sweep} "
+              f"transports={transports} "
               f"quant={'fp10' if args.quant else 'fp32'}")
         sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
         combos = []
+        gateways = []
         for backend in backends:
             for hps in hops_sweep:
                 # buffering changes only host-side pipelining, not the
@@ -481,37 +540,63 @@ def main() -> None:
                 step = make_stream_hop(params, cfg, quant=quant,
                                        backend=backend, max_hops_per_step=hps)
                 for buffering in bufferings:
-                    pool = SessionPool(params, cfg, capacity=args.capacity,
-                                       quant=quant, backend=backend,
-                                       inflight=2 if buffering == "double" else 1,
-                                       hops_per_step=hps, step_fn=step)
-                    # warm up the compilation outside the timed points
-                    w = pool.attach()
-                    pool.feed(w, audio[0][: 2 * hps * cfg.hop])
-                    pool.pump()
-                    pool.detach(w)
-                    combos.append((backend, hps, buffering, pool))
+                    for transport in transports:
+                        inflight = 2 if buffering == "double" else 1
+                        if transport == "inproc":
+                            pool = SessionPool(params, cfg,
+                                               capacity=args.capacity,
+                                               quant=quant, backend=backend,
+                                               inflight=inflight,
+                                               hops_per_step=hps, step_fn=step)
+                            # warm up the compilation outside the timed points
+                            w = pool.attach()
+                            pool.feed(w, audio[0][: 2 * hps * cfg.hop])
+                            pool.pump()
+                            pool.detach(w)
+                            runner = pool
+                        else:
+                            from repro.serve.gateway import GatewayThread
+                            # one shard: same batched step as the in-process
+                            # pool, so the delta IS the socket + gateway loop
+                            spool = ShardedSessionPool(
+                                params, cfg, args.capacity, shards=1,
+                                quant=quant, backend=backend,
+                                inflight=inflight, hops_per_step=hps)
+                            h = spool.attach("warmup")
+                            spool.feed(h, audio[0][: 2 * hps * cfg.hop])
+                            spool.pump_all()
+                            spool.detach(h)
+                            runner = GatewayThread(spool, pump_interval=0.001)
+                            gateways.append(runner)
+                        combos.append((backend, hps, buffering, transport,
+                                       runner))
         # --repeats are INTERLEAVED across configurations (round-robin, min
         # wall-clock per point wins, as in timeit): a noisy scheduler phase
         # spanning one whole pass penalizes every config equally instead of
         # silently skewing the cross-config comparison ratios.
         best: dict = {}
         for _ in range(args.repeats):
-            for backend, hps, buffering, pool in combos:
+            for backend, hps, buffering, transport, runner in combos:
                 for n in sweep:
-                    r = run_point(pool, n, audio)
-                    key = (backend, hps, buffering, n)
+                    if transport == "inproc":
+                        r = run_point(runner, n, audio)
+                    else:
+                        r = run_socket_point(runner, n, audio)
+                    key = (backend, hps, buffering, transport, n)
                     if key not in best or r["aggregate_rtf"] < best[key]["aggregate_rtf"]:
                         best[key] = r
-        for backend, hps, buffering, pool in combos:
+        for gw in gateways:
+            gw.stop()
+        for backend, hps, buffering, transport, _runner in combos:
             for n in sweep:
-                r = best[(backend, hps, buffering, n)]
+                r = best[(backend, hps, buffering, transport, n)]
                 r.update(mode="sessions", backend=backend,
-                         buffering=buffering, hops_per_step=hps)
+                         buffering=buffering, hops_per_step=hps,
+                         transport=transport)
                 points.append(r)
                 emit(
                     f"backend={backend} buffering={buffering} "
-                    f"hops={hps} sessions={n}",
+                    f"hops={hps} transport={transport} sessions={n}",
                     r["p50_ms"] * 1e3,
                     f"aggregate_rtf={r['aggregate_rtf']:.3f} "
                     f"rt_capacity={r['rt_capacity']:.1f} "
@@ -525,6 +610,10 @@ def main() -> None:
         comparisons["pallas_vs_xla"] = _ratio(points, "backend", "xla", "pallas")
     if "single" in bufferings and "double" in bufferings:
         comparisons["double_vs_single"] = _ratio(points, "buffering", "single", "double")
+    if "inproc" in transports and "socket" in transports:
+        # > 1.0 is the fabric's measured overhead (socket framing + gateway
+        # pump loop) relative to direct pool calls on the same host
+        comparisons["socket_vs_inproc"] = _ratio(points, "transport", "inproc", "socket")
     for k in hops_sweep:
         if k != 1 and 1 in hops_sweep:
             # < 1.0 means the fused path lowered aggregate RTF (a speedup of

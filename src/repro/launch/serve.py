@@ -8,7 +8,10 @@ budget. Other tasks: ``--task pool`` serves many sessions through one
 ladder); ``--task sharded`` runs one pool per device behind the
 consistent-hash router (``--shards N``, elastic shards with ``--elastic``;
 fake CPU devices with
-``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--task lm`` runs
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--task gateway``
+puts the sharded fleet behind the cross-process socket front door
+(``--port``, health-checked shards with ticket failover — point
+``examples/gateway_client.py --connect`` at it); ``--task lm`` runs
 batched greedy decode on a reduced arch. See docs/serving.md.
 """
 
@@ -153,6 +156,51 @@ def serve_sharded(args) -> None:
         pool.detach(h)
 
 
+def serve_gateway(args) -> None:
+    """Network front door: a ShardedSessionPool behind the asyncio gateway.
+
+    Binds ``--host``/``--port`` and serves the framed streaming protocol
+    (see ``repro.serve.gateway``) until interrupted: attach / feed jittery
+    chunks / read / detach from any process, with shard health checks and
+    wire-ticket failover running on every pump tick.
+    """
+    import asyncio
+
+    from repro.core.quant import FP10
+    from repro.models import tftnn as tft
+    from repro.serve import ShardedSessionPool
+    from repro.serve.gateway import StreamingGateway
+
+    cfg = tft.tftnn_config()
+    if args.reduced:
+        cfg = reduced_cfg(cfg)
+    params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    per_shard = max(2, -(-args.batch // args.shards))
+    tiers = parse_tiers(args.tiers) if args.elastic else None
+    pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
+                              quant=FP10 if args.quant else None,
+                              backend=args.backend, prune_keep=args.prune_keep,
+                              inflight=2 if args.double_buffer else 1,
+                              hops_per_step=args.hops_per_step,
+                              tiers=tiers)
+    gateway = StreamingGateway(pool, host=args.host, port=args.port)
+
+    async def _serve() -> None:
+        await gateway.start()
+        host, port = gateway.address
+        print(f"gateway listening on {host}:{port} "
+              f"({args.shards} shards, {pool.capacity} slots); Ctrl-C stops")
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await gateway.stop()
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        print("\n" + pool.report())
+
+
 def serve_lm(args) -> None:
     import repro.configs as C
     from repro.models.transformer_lm import init_lm
@@ -171,7 +219,8 @@ def serve_lm(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", choices=["se", "pool", "sharded", "lm"], default="se")
+    ap.add_argument("--task", choices=["se", "pool", "sharded", "gateway", "lm"],
+                    default="se")
     ap.add_argument("--quant", action="store_true",
                     help="pool/sharded tasks: serve on the paper's FP10 grid")
     ap.add_argument("--backend", choices=["xla", "pallas"], default="xla",
@@ -198,7 +247,11 @@ def main() -> None:
                     "fraction for the deploy-time zero-skipping weight masks "
                     "(lossy, the paper's pruned serving point)")
     ap.add_argument("--shards", type=int, default=2,
-                    help="sharded task: number of SessionPool shards")
+                    help="sharded/gateway tasks: number of SessionPool shards")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="gateway task: bind address")
+    ap.add_argument("--port", type=int, default=7861,
+                    help="gateway task: TCP port (0 picks a free one)")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=1)
@@ -207,7 +260,7 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
     {"se": serve_se, "pool": serve_pool, "sharded": serve_sharded,
-     "lm": serve_lm}[args.task](args)
+     "gateway": serve_gateway, "lm": serve_lm}[args.task](args)
 
 
 if __name__ == "__main__":

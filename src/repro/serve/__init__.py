@@ -7,7 +7,11 @@ masks, FP10 weights, Pallas kernels — ``backend="pallas"``);
 ``session_server`` multiplexes many client sessions onto the hop step;
 ``elastic_pool`` grows/shrinks a pool along pre-compiled capacity tiers with
 live bit-exact session migration; ``sharded_pool`` runs one pool per device
-behind a consistent-hash router (optionally with elastic shards).
+behind a consistent-hash router (optionally with elastic shards) with shard
+health-checks and ticket-based failover; ``wire`` is the versioned binary
+form of ``SessionTicket`` (bit-exact round-trip — the cross-process
+contract); ``gateway`` is the network front door (asyncio socket server +
+client speaking a chunked streaming protocol over the sharded pool).
 Architecture tour: ``docs/serving.md`` and ``docs/deploy.md``.
 """
 
@@ -20,6 +24,11 @@ from repro.serve.elastic_pool import (  # noqa: F401
     ElasticSession,
     ElasticSessionPool,
 )
+from repro.serve.gateway import (  # noqa: F401
+    GatewayClient,
+    GatewayThread,
+    StreamingGateway,
+)
 from repro.serve.session_server import (  # noqa: F401
     PoolFullError,
     Session,
@@ -30,9 +39,16 @@ from repro.serve.session_server import (  # noqa: F401
 )
 from repro.serve.sharded_pool import (  # noqa: F401
     HashRing,
+    ShardDownError,
     ShardedSession,
     ShardedSessionPool,
     ShardFullError,
+)
+from repro.serve.wire import (  # noqa: F401
+    WIRE_VERSION,
+    WireFormatError,
+    decode_ticket,
+    encode_ticket,
 )
 from repro.serve.streaming_se import (  # noqa: F401
     StreamState,

@@ -1,0 +1,509 @@
+"""Streaming gateway: the serving fabric's network front door.
+
+Everything below this module multiplexes streams *inside* one process; the
+``StreamingGateway`` puts a real socket boundary in front of the pool, so
+clients on other processes/hosts feed jittery, variable-sized chunks over
+TCP and read enhanced audio back — the `Whisper-Streaming-TPU`-shaped
+deployment the ROADMAP's cross-process item asks for. One asyncio event
+loop owns the pool: connection handlers and the pump loop interleave only
+at ``await`` points, so every pool call is atomic without locks.
+
+The gateway owns a ``ShardedSessionPool`` and runs the serving heartbeat —
+each tick is ``check_shards()`` (health-probe every shard, fail dead ones
+over through wire tickets) followed by ``pump_all()`` (skip-dead batched
+hop steps). A client session therefore survives shard death transparently:
+its stream continues bit-exactly from a live shard (or, when the shard's
+state is truly gone, its next request fails with a ``lost`` error and the
+client re-attaches — bounded loss, never a hang).
+
+Wire protocol (all integers little-endian): every frame is
+
+    u32 payload_length | u8 type | payload
+
+Client → gateway:
+
+| type | name | payload |
+|---|---|---|
+| 1 | ATTACH | UTF-8 session id; empty = generate one. Re-attaching an id whose connection dropped ADOPTS the live session (continuation is bit-exact — unread output included) |
+| 2 | FEED | raw float32 samples, any length ≥ 0 |
+| 3 | READ | — (returns whatever is enhanced so far, possibly empty) |
+| 4 | DETACH | — (returns the unread tail, frees the slot) |
+| 5 | STATS | — (returns the pool's ``shard_stats()`` + failover totals) |
+
+Gateway → client:
+
+| type | name | payload |
+|---|---|---|
+| 0x81 | ATTACHED | UTF-8 session id actually attached/adopted |
+| 0x82 | AUDIO | raw float32 enhanced samples (READ reply) |
+| 0x83 | DETACHED | raw float32 unread tail (DETACH reply) |
+| 0x84 | STATS_REPLY | UTF-8 JSON |
+| 0xFF | ERROR | UTF-8 message; the connection stays usable |
+
+A connection owns at most one session at a time. Dropping the connection
+WITHOUT detaching orphans the session: it keeps streaming (its ring keeps
+draining, output queues under ``max_unread_hops`` backpressure) until a new
+connection re-attaches the same id, or ``orphan_ttl`` pump ticks pass and
+the gateway detaches it. That policy is what makes the chaos harness's
+``drop_client`` op lossless for reconnecting clients.
+
+``GatewayClient`` is the blocking reference client (examples, benchmarks,
+tests); ``GatewayThread`` runs a gateway on a daemon event-loop thread so
+single-process tests get a real localhost socket boundary.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import socket
+import struct
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.session_server import SessionError
+
+# client -> gateway
+MSG_ATTACH = 1
+MSG_FEED = 2
+MSG_READ = 3
+MSG_DETACH = 4
+MSG_STATS = 5
+# gateway -> client
+MSG_ATTACHED = 0x81
+MSG_AUDIO = 0x82
+MSG_DETACHED = 0x83
+MSG_STATS_REPLY = 0x84
+MSG_ERROR = 0xFF
+
+_HEADER = struct.Struct("<IB")
+# one frame must hold minutes of fp32 audio but never an accidental gigabyte
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+
+
+class ProtocolError(RuntimeError):
+    """Malformed gateway frame (bad type, oversized payload, truncation)."""
+
+
+def _frame(msg_type: int, payload: bytes = b"") -> bytes:
+    if len(payload) > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"frame payload {len(payload)} exceeds {MAX_FRAME_BYTES} bytes"
+        )
+    return _HEADER.pack(len(payload), msg_type) + payload
+
+
+async def _read_frame(reader: asyncio.StreamReader) -> Tuple[int, bytes]:
+    header = await reader.readexactly(_HEADER.size)
+    length, msg_type = _HEADER.unpack(header)
+    if length > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame payload {length} exceeds {MAX_FRAME_BYTES}")
+    return msg_type, await reader.readexactly(length)
+
+
+class StreamingGateway:
+    """Asyncio TCP server owning a sharded pool and its pump/health loop.
+
+    Args:
+        pool: the ``ShardedSessionPool`` to serve (anything with the sharded
+            surface works: ``attach(session_id)``, feed/read/detach by
+            handle, ``pump_all``; ``check_shards`` is used when present).
+        host / port: bind address; port 0 (default) picks a free port —
+            read the real one from ``.address`` after ``start()``.
+        pump_interval: seconds between heartbeat ticks (health check +
+            ``pump_all``). The tick also runs opportunistically after every
+            FEED, so interactive latency is not bound to the interval.
+        orphan_ttl: pump ticks an orphaned session (connection dropped
+            without DETACH) survives awaiting re-attach; ``None`` = forever.
+    """
+
+    def __init__(
+        self,
+        pool,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        pump_interval: float = 0.002,
+        orphan_ttl: Optional[int] = None,
+    ) -> None:
+        if pump_interval <= 0:
+            raise ValueError("pump_interval must be > 0")
+        if orphan_ttl is not None and orphan_ttl < 1:
+            raise ValueError("orphan_ttl must be >= 1 (or None)")
+        self.pool = pool
+        self._host = host
+        self._port = port
+        self.pump_interval = pump_interval
+        self.orphan_ttl = orphan_ttl
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._pump_task: Optional[asyncio.Task] = None
+        # session id -> live pool handle, for every gateway-attached session
+        self._handles: Dict[str, object] = {}
+        # session id -> ticks since its connection dropped (un-detached)
+        self._orphans: Dict[str, int] = {}
+        self.pump_ticks = 0
+        self.connections_served = 0
+        self.orphans_reaped = 0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        """(host, port) actually bound (valid after ``start()``)."""
+        if self._server is None:
+            raise RuntimeError("gateway is not started")
+        sock = self._server.sockets[0]
+        return sock.getsockname()[:2]
+
+    async def start(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle_connection, host=self._host, port=self._port
+        )
+        self._pump_task = asyncio.ensure_future(self._pump_loop())
+
+    async def stop(self) -> None:
+        """Stop serving: close the listener, cancel the pump loop."""
+        if self._pump_task is not None:
+            self._pump_task.cancel()
+            try:
+                await self._pump_task
+            except asyncio.CancelledError:
+                pass
+            self._pump_task = None
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    # -- the serving heartbeat ---------------------------------------------
+
+    def _tick(self) -> None:
+        """One heartbeat: health-probe shards, pump, reap expired orphans."""
+        check = getattr(self.pool, "check_shards", None)
+        if check is not None:
+            check()
+        pump = getattr(self.pool, "pump_all", None) or self.pool.pump
+        pump()
+        self.pump_ticks += 1
+        if self.orphan_ttl is None:
+            return
+        for sid in list(self._orphans):
+            self._orphans[sid] += 1
+            if self._orphans[sid] > self.orphan_ttl:
+                del self._orphans[sid]
+                handle = self._handles.pop(sid, None)
+                if handle is not None:
+                    try:
+                        self.pool.detach(handle)
+                    except SessionError:
+                        pass  # already lost in a shard failure
+                self.orphans_reaped += 1
+
+    async def _pump_loop(self) -> None:
+        while True:
+            self._tick()
+            await asyncio.sleep(self.pump_interval)
+
+    # -- per-connection protocol -------------------------------------------
+
+    def _attach(self, requested: str) -> Tuple[str, object]:
+        if requested and requested in self._handles:
+            if requested not in self._orphans:
+                raise SessionError(
+                    f"session {requested!r} is attached on another live "
+                    "connection"
+                )
+            # adoption: the stream kept running while the client was gone
+            del self._orphans[requested]
+            return requested, self._handles[requested]
+        handle = self.pool.attach(requested or None)
+        sid = str(handle.session_id)
+        self._handles[sid] = handle
+        return sid, handle
+
+    async def _handle_connection(
+        self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter
+    ) -> None:
+        self.connections_served += 1
+        sid: Optional[str] = None
+        try:
+            while True:
+                try:
+                    msg_type, payload = await _read_frame(reader)
+                except (asyncio.IncompleteReadError, ConnectionResetError):
+                    break  # client gone: orphan the session (finally below)
+                try:
+                    reply = self._dispatch_msg(msg_type, payload, sid)
+                    sid = reply[2]
+                    writer.write(_frame(reply[0], reply[1]))
+                except (SessionError, ProtocolError, ValueError) as e:
+                    if sid is not None and sid not in self._handles:
+                        sid = None  # session lost to a shard failure: unbind
+                        # so this very connection can ATTACH a fresh stream
+                    writer.write(_frame(MSG_ERROR, str(e).encode("utf-8")))
+                await writer.drain()
+        finally:
+            if sid is not None and sid in self._handles:
+                self._orphans[sid] = 0  # keeps streaming until re-attach/TTL
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    def _dispatch_msg(
+        self, msg_type: int, payload: bytes, sid: Optional[str]
+    ) -> Tuple[int, bytes, Optional[str]]:
+        """Handle one frame; returns (reply type, reply payload, new sid)."""
+        if msg_type == MSG_ATTACH:
+            if sid is not None:
+                raise SessionError(
+                    f"this connection already serves session {sid!r}; "
+                    "DETACH first"
+                )
+            sid, _ = self._attach(payload.decode("utf-8"))
+            return MSG_ATTACHED, sid.encode("utf-8"), sid
+        if msg_type == MSG_STATS:
+            stats = {
+                "shards": self.pool.shard_stats(),
+                "dead_shards": getattr(self.pool, "dead_shards", []),
+                "sessions_failed_over": getattr(
+                    self.pool, "sessions_failed_over", 0
+                ),
+                "sessions_lost": getattr(self.pool, "sessions_lost", 0),
+                "lost_session_ids": [
+                    str(s) for s in getattr(self.pool, "lost_session_ids", [])
+                ],
+                "pump_ticks": self.pump_ticks,
+                "active": self.pool.num_active,
+                "orphans": len(self._orphans),
+            }
+            return MSG_STATS_REPLY, json.dumps(stats).encode("utf-8"), sid
+        # everything below needs a live session on this connection
+        if sid is None:
+            raise SessionError("no session on this connection; ATTACH first")
+        handle = self._handles.get(sid)
+        if handle is None:
+            raise SessionError(f"session {sid!r} is gone")
+        if msg_type == MSG_FEED:
+            if len(payload) % 4:
+                raise ProtocolError(
+                    f"FEED payload of {len(payload)} bytes is not float32"
+                )
+            self._guarded(sid, self.pool.feed, handle,
+                          np.frombuffer(payload, np.float32))
+            # opportunistic pump: a whole queued hop is served NOW instead
+            # of waiting out the heartbeat interval
+            self._tick()
+            return MSG_AUDIO, b"", sid
+        if msg_type == MSG_READ:
+            out = self._guarded(sid, self.pool.read, handle)
+            return MSG_AUDIO, np.asarray(out, np.float32).tobytes(), sid
+        if msg_type == MSG_DETACH:
+            tail = self._guarded(sid, self.pool.detach, handle)
+            self._handles.pop(sid, None)
+            self._orphans.pop(sid, None)
+            return MSG_DETACHED, np.asarray(tail, np.float32).tobytes(), None
+        raise ProtocolError(f"unknown message type {msg_type}")
+
+    def _guarded(self, sid: str, op, handle, *args):
+        """Run a pool op; if the session was lost to a shard failure, drop
+        the gateway's stale handle so the client's error is final."""
+        try:
+            return op(handle, *args)
+        except SessionError:
+            if sid in getattr(self.pool, "lost_session_ids", ()):
+                self._handles.pop(sid, None)
+                self._orphans.pop(sid, None)
+            raise
+
+
+class GatewayThread:
+    """Run a ``StreamingGateway`` on its own daemon event-loop thread.
+
+    The single-process stand-in for a gateway *process*: tests, examples,
+    and benchmarks get a real localhost TCP boundary (real sockets, real
+    frame protocol, the gateway's own pump loop) without managing a child
+    process. All pool access stays on the gateway thread.
+
+    Usage::
+
+        gw = GatewayThread(pool)           # starts serving immediately
+        host, port = gw.address
+        ... GatewayClient(host, port) ...
+        gw.stop()
+
+    ``call(fn)`` runs ``fn(pool)`` ON the gateway thread (blocking for the
+    result) — the chaos harness uses it to inject ``kill_shard`` without
+    racing the pump loop.
+    """
+
+    def __init__(self, pool, **gateway_kwargs) -> None:
+        self.gateway = StreamingGateway(pool, **gateway_kwargs)
+        self._loop = asyncio.new_event_loop()
+        self._started = threading.Event()
+        self._startup_error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, name="gateway", daemon=True
+        )
+        self._thread.start()
+        self._started.wait()
+        if self._startup_error is not None:
+            raise self._startup_error
+
+    def _run(self) -> None:
+        asyncio.set_event_loop(self._loop)
+        try:
+            self._loop.run_until_complete(self.gateway.start())
+        except BaseException as e:  # surface bind errors in the caller
+            self._startup_error = e
+            self._started.set()
+            return
+        self._started.set()
+        self._loop.run_forever()
+        # drain cancellations scheduled by stop()
+        self._loop.run_until_complete(self._loop.shutdown_asyncgens())
+        self._loop.close()
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self.gateway.address
+
+    @property
+    def pool(self):
+        return self.gateway.pool
+
+    def call(self, fn):
+        """Run ``fn(pool)`` on the gateway thread; return its result."""
+        fut = asyncio.run_coroutine_threadsafe(self._call_async(fn), self._loop)
+        return fut.result(timeout=60)
+
+    async def _call_async(self, fn):
+        return fn(self.gateway.pool)
+
+    def stop(self) -> None:
+        if not self._thread.is_alive():
+            return
+        asyncio.run_coroutine_threadsafe(
+            self.gateway.stop(), self._loop
+        ).result(timeout=60)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=60)
+
+
+class GatewayClient:
+    """Blocking reference client for the gateway protocol.
+
+    One TCP connection, one session: ``attach`` → ``feed`` (any chunk
+    sizes) → ``read``/``read_until`` → ``detach``. ``drop()`` severs the
+    connection WITHOUT detaching (the chaos harness's client-failure op);
+    re-creating a client and attaching the same id resumes the stream with
+    nothing lost.
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0) -> None:
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.settimeout(timeout)
+        self.session_id: Optional[str] = None
+
+    # -- framing ------------------------------------------------------------
+
+    def _recv_exact(self, n: int) -> bytes:
+        buf = bytearray()
+        while len(buf) < n:
+            chunk = self._sock.recv(n - len(buf))
+            if not chunk:
+                raise ConnectionError("gateway closed the connection")
+            buf += chunk
+        return bytes(buf)
+
+    def _request(self, msg_type: int, payload: bytes = b"") -> Tuple[int, bytes]:
+        self._sock.sendall(_frame(msg_type, payload))
+        length, reply_type = _HEADER.unpack(self._recv_exact(_HEADER.size))
+        if length > MAX_FRAME_BYTES:
+            raise ProtocolError(f"oversized reply frame ({length} bytes)")
+        reply = self._recv_exact(length)
+        if reply_type == MSG_ERROR:
+            raise SessionError(reply.decode("utf-8"))
+        return reply_type, reply
+
+    # -- the chunked streaming surface --------------------------------------
+
+    def attach(self, session_id: str = "") -> str:
+        """Attach (or re-adopt) a session; returns the id actually granted."""
+        _, reply = self._request(MSG_ATTACH, session_id.encode("utf-8"))
+        self.session_id = reply.decode("utf-8")
+        return self.session_id
+
+    def feed(self, samples) -> None:
+        """Ship raw audio (any length — dribbles or blobs) to the session."""
+        arr = np.ascontiguousarray(np.asarray(samples, np.float32).reshape(-1))
+        self._request(MSG_FEED, arr.tobytes())
+
+    def read(self) -> np.ndarray:
+        """Pop all enhanced audio the gateway has for this session."""
+        _, reply = self._request(MSG_READ)
+        return np.frombuffer(reply, np.float32).copy()
+
+    def read_until(
+        self, n_samples: int, timeout: float = 30.0, poll: float = 0.001
+    ) -> np.ndarray:
+        """Poll ``read`` until ``n_samples`` have arrived (or timeout).
+
+        The deterministic way to collect a known-length stream: the caller
+        fed N samples, so ``N // hop * hop`` enhanced samples must arrive.
+        """
+        chunks = []
+        got = 0
+        deadline = time.monotonic() + timeout
+        while got < n_samples:
+            chunk = self.read()
+            if chunk.size:
+                chunks.append(chunk)
+                got += chunk.size
+            elif time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"read_until: {got}/{n_samples} samples after {timeout}s"
+                )
+            else:
+                time.sleep(poll)
+        out = np.concatenate(chunks) if chunks else np.zeros((0,), np.float32)
+        if out.size > n_samples:
+            raise ProtocolError(
+                f"read_until: stream overshot ({out.size} > {n_samples})"
+            )
+        return out
+
+    def detach(self) -> np.ndarray:
+        """End the session; returns the unread tail."""
+        _, reply = self._request(MSG_DETACH)
+        self.session_id = None
+        return np.frombuffer(reply, np.float32).copy()
+
+    def stats(self) -> dict:
+        """The gateway's shard/failover stats as a dict."""
+        _, reply = self._request(MSG_STATS)
+        return json.loads(reply.decode("utf-8"))
+
+    def close(self) -> None:
+        """Close politely (detach first if a session is still attached)."""
+        try:
+            if self.session_id is not None:
+                self.detach()
+        except (SessionError, OSError, ConnectionError):
+            pass
+        self._sock.close()
+
+    def drop(self) -> None:
+        """Sever the connection WITHOUT detaching — the session is orphaned
+        on the gateway and resumable by ``attach(same_id)`` elsewhere."""
+        self._sock.close()
+
+    def __enter__(self) -> "GatewayClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -38,6 +38,19 @@ keep the rings fed — measured by ``benchmarks/server_throughput.py
 --shards`` (fake multiple CPU devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
+**Shard health (the cross-process fabric seam):** a distributed fleet loses
+shards. ``kill_shard``/``restart_shard`` are the fault-injection levers (the
+chaos harness in ``tests/chaos.py`` drives them), ``check_shards`` is the
+heartbeat a gateway ticks, and ``pump_all`` skips — never raises on — a
+shard that dies mid-pump, recording ``pump_failures`` in ``shard_stats()``.
+Failover re-homes a dead shard's sessions onto live shards through the ring
+itself (``HashRing.route(..., dead=...)`` walks around dead vnodes, so only
+the dead shard's keys remap), shipping each recoverable session as WIRE
+BYTES (``repro.serve.wire``) so the same path works across process
+boundaries; streams whose host-side state survived the fault continue
+bit-exactly, the rest are bounded loss (``sessions_lost`` /
+``lost_session_ids``).
+
 See ``docs/serving.md`` for the full architecture.
 """
 
@@ -48,7 +61,7 @@ import dataclasses
 import hashlib
 import itertools
 import time
-from typing import Dict, Hashable, List, Optional, Sequence
+from typing import Container, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -90,6 +103,36 @@ class ShardFullError(PoolFullError):
     """
 
 
+class ShardDownError(SessionError):
+    """An operation reached a shard that has failed (``kill_shard`` fault
+    injection, or a shard that died mid-pump).
+
+    Client-visible only in the narrow window before the next health check /
+    ``pump_all`` re-homes the dead shard's sessions onto live shards; the
+    router's own entry points run that failover transparently, so callers
+    normally see either a live session (migrated bit-exactly) or a
+    ``SessionError`` naming the session as lost (state died with the shard).
+    """
+
+
+class _DownShard:
+    """Poisoned stand-in for a failed shard's pool: every op raises.
+
+    Installed by ``kill_shard``/``_pump_failure`` so any stray path that
+    reaches a dead shard fails loudly instead of silently touching stale
+    state. Router code never touches it — every iteration over the shard
+    list skips indices in ``_dead``.
+    """
+
+    def __init__(self, index: int) -> None:
+        object.__setattr__(self, "_index", int(index))
+
+    def __getattr__(self, name: str):
+        raise ShardDownError(
+            f"shard {object.__getattribute__(self, '_index')} is down"
+        )
+
+
 def _hash64(data: bytes) -> int:
     """Stable 64-bit hash (blake2b) — identical across processes and runs,
     unlike Python's seeded ``hash()``."""
@@ -117,11 +160,28 @@ class HashRing:
         self._keys = [p[0] for p in points]
         self._shards = [p[1] for p in points]
 
-    def route(self, session_id: Hashable) -> int:
-        """Map a session id to its home shard index (pure, deterministic)."""
+    def route(self, session_id: Hashable, dead: Container = ()) -> int:
+        """Map a session id to its home shard index (pure, deterministic).
+
+        Args:
+            session_id: any hashable key.
+            dead: shard indices to route AROUND — the walk clockwise from the
+                key's ring point skips their vnodes, so only keys homed on a
+                dead shard remap (to the next live point), and they all come
+                back home the moment the shard is restarted. This is the
+                failover remapping the health-check machinery uses.
+
+        Raises:
+            ShardDownError: every shard is in ``dead``.
+        """
         h = _hash64(str(session_id).encode())
-        i = bisect.bisect_right(self._keys, h) % len(self._keys)
-        return self._shards[i]
+        start = bisect.bisect_right(self._keys, h)
+        n = len(self._keys)
+        for off in range(n):
+            shard = self._shards[(start + off) % n]
+            if shard not in dead:
+                return shard
+        raise ShardDownError("no live shard on the ring: all shards are down")
 
 
 @dataclasses.dataclass
@@ -247,61 +307,84 @@ class ShardedSessionPool:
         # Shards co-located on one device (shards > len(devices), e.g. CPU
         # tests) share ONE device-resident params copy and ONE compiled hop
         # step instead of paying per-shard duplicates.
-        shared = step_cache if step_cache is not None else {}
+        self._shared = step_cache if step_cache is not None else {}
         self.elastic = tiers is not None
-        self._pools: List = []
-        for i in range(shards):
-            dev = devices[i % len(devices)]
-            if dev not in shared:
-                placed = jax.device_put(params, dev)
-                shared[dev] = (
-                    placed,
-                    make_stream_hop(
-                        placed, cfg, quant=quant, donate=donate, backend=backend,
-                        prune_keep=prune_keep, prune_axis=prune_axis,
-                        max_hops_per_step=hops_per_step,
-                    ),
-                )
-            placed, step = shared[dev]
-            kw = dict(
-                quant=quant,
-                sample_rate=sample_rate,
-                donate=donate,
-                device=dev,
-                backend=backend,
-                inflight=inflight,
-                max_unread_hops=max_unread_hops,
-                on_unparked=on_unparked,
-                hops_per_step=hops_per_step,
-                step_fn=step,
-            )
-            self._pools.append(
-                ElasticSessionPool(
-                    placed, cfg, tiers,
-                    shrink_fraction=shrink_fraction,
-                    shrink_patience=shrink_patience,
-                    **kw,
-                )
-                if self.elastic
-                else SessionPool(placed, cfg, capacity, **kw)
-            )
+        self._devices = list(devices)
+        self._params = params
+        self._mk = dict(
+            quant=quant, donate=donate, backend=backend,
+            prune_keep=prune_keep, prune_axis=prune_axis,
+            hops_per_step=hops_per_step, capacity=capacity, tiers=tiers,
+            shrink_fraction=shrink_fraction, shrink_patience=shrink_patience,
+            sample_rate=sample_rate, inflight=inflight,
+            max_unread_hops=max_unread_hops, on_unparked=on_unparked,
+        )
+        self._pools: List = [self._make_pool(i) for i in range(shards)]
         self._ring = HashRing(shards, vnodes=vnodes)
         self._sessions: Dict[Hashable, ShardedSession] = {}
         self._auto_sid = itertools.count()
+        # -- fabric health state (kill_shard / check_shards / failover) -----
+        self._dead: set = set()  # shard indices currently down
+        # dead shard -> its surviving host-side pool (exportable tickets), or
+        # None when the failure lost host state too (sessions unrecoverable)
+        self._corpses: Dict[int, object] = {}
+        self._pending_failover: set = set()  # dead shards not yet re-homed
+        self._pump_failures = [0] * shards  # mid-pump deaths per shard index
+        self._failover_counts = [0] * shards  # completed failovers per index
+        self.shard_generations = [0] * shards  # bumped by every restart
+        self.sessions_failed_over = 0  # re-homed bit-exactly via the wire
+        self.sessions_lost = 0  # state died with the shard
+        self.lost_session_ids: List[Hashable] = []  # for client notification
+        self.failover_log: List[Dict[str, object]] = []
+
+    def _make_pool(self, index: int):
+        """Build (or rebuild, for ``restart_shard``) the pool at one index."""
+        m = self._mk
+        dev = self._devices[index % len(self._devices)]
+        if dev not in self._shared:
+            placed = jax.device_put(self._params, dev)
+            self._shared[dev] = (
+                placed,
+                make_stream_hop(
+                    placed, self.cfg, quant=m["quant"], donate=m["donate"],
+                    backend=m["backend"], prune_keep=m["prune_keep"],
+                    prune_axis=m["prune_axis"],
+                    max_hops_per_step=m["hops_per_step"],
+                ),
+            )
+        placed, step = self._shared[dev]
+        kw = dict(
+            quant=m["quant"], sample_rate=m["sample_rate"], donate=m["donate"],
+            device=dev, backend=m["backend"], inflight=m["inflight"],
+            max_unread_hops=m["max_unread_hops"],
+            on_unparked=m["on_unparked"], hops_per_step=m["hops_per_step"],
+            step_fn=step,
+        )
+        if self.elastic:
+            return ElasticSessionPool(
+                placed, self.cfg, m["tiers"],
+                shrink_fraction=m["shrink_fraction"],
+                shrink_patience=m["shrink_patience"], **kw,
+            )
+        return SessionPool(placed, self.cfg, m["capacity"], **kw)
+
+    def _live(self) -> List[Tuple[int, object]]:
+        """(index, pool) for every shard that is up."""
+        return [(i, p) for i, p in enumerate(self._pools) if i not in self._dead]
 
     # -- capacity / introspection -------------------------------------------
 
     @property
     def capacity(self) -> int:
-        """Total CURRENT slots across all shards (elastic shards count their
-        current tier; see ``max_capacity`` for the hard bound)."""
-        return sum(p.capacity for p in self._pools)
+        """Total CURRENT slots across all LIVE shards (elastic shards count
+        their current tier; see ``max_capacity`` for the hard bound)."""
+        return sum(p.capacity for _, p in self._live())
 
     @property
     def max_capacity(self) -> int:
-        """Total slots when every shard is at its top tier (== ``capacity``
-        for fixed shards) — the bound ``PoolFullError`` reports."""
-        return sum(_max_capacity(p) for p in self._pools)
+        """Total live-shard slots at top tier (== ``capacity`` for fixed
+        shards) — the bound ``PoolFullError`` reports."""
+        return sum(_max_capacity(p) for _, p in self._live())
 
     @property
     def num_active(self) -> int:
@@ -309,11 +392,17 @@ class ShardedSessionPool:
 
     @property
     def sample_rate(self) -> int:
-        return self._pools[0].sample_rate
+        return self._mk["sample_rate"]
+
+    @property
+    def dead_shards(self) -> List[int]:
+        """Indices of shards currently down (killed or failed mid-pump)."""
+        return sorted(self._dead)
 
     def route(self, session_id: Hashable) -> int:
-        """The hash home for a session id (before any rebalancing)."""
-        return self._ring.route(session_id)
+        """The hash home for a session id among LIVE shards (before any
+        rebalancing; equals the pure hash home while every shard is up)."""
+        return self._ring.route(session_id, dead=self._dead)
 
     # -- session lifecycle --------------------------------------------------
 
@@ -345,16 +434,17 @@ class ShardedSessionPool:
                 session_id = f"auto-{next(self._auto_sid)}"
         if session_id in self._sessions:
             raise SessionError(f"session id {session_id!r} is already attached")
-        shard = self._ring.route(session_id)
+        self._failover_pending()  # re-home any dead shard's sessions first
+        shard = self._ring.route(session_id, dead=self._dead)
         pool = self._pools[shard]
         # elastic shards grow themselves inside attach(); only a shard whose
         # TOP tier is occupied counts as full here
         if _shard_full(pool):
-            if all(_shard_full(p) for p in self._pools):
+            if all(_shard_full(p) for _, p in self._live()):
                 raise PoolFullError(
-                    f"all {self.n_shards} shards are full (capacity="
+                    f"all {len(self._live())} live shards are full (capacity="
                     f"{self.max_capacity}, active={self.num_active}"
-                    + (f", tiers/shard={self._pools[0].tiers}" if self.elastic else "")
+                    + (f", tiers/shard={self._mk['tiers']}" if self.elastic else "")
                     + "); detach a session first"
                 )
             if rebalance_on_full:
@@ -377,17 +467,36 @@ class ShardedSessionPool:
                 return
 
     def _resolve(self, sess) -> ShardedSession:
-        """Accept a ``ShardedSession`` handle or a raw session id."""
+        """Accept a ``ShardedSession`` handle or a raw session id.
+
+        A session still homed on a dead shard is failed over here first, so
+        client calls transparently land on the session's new live shard; if
+        the failover lost it (the shard's host state died too), the lookup
+        below fails with a ``SessionError`` naming the loss.
+        """
+        sid = sess.session_id if isinstance(sess, ShardedSession) else sess
+        handle = self._sessions.get(sid)
+        if handle is not None and handle.shard in self._dead:
+            self._failover_pending()
+            handle = self._sessions.get(sid)
         if isinstance(sess, ShardedSession):
-            handle = self._sessions.get(sess.session_id)
             if handle is not sess:
                 raise SessionError(
-                    f"session {sess.session_id!r} is not attached to this router"
+                    f"session {sid!r} is not attached to this router"
+                    + (
+                        " (lost when its shard went down)"
+                        if sid in self.lost_session_ids else ""
+                    )
                 )
             return sess
-        handle = self._sessions.get(sess)
         if handle is None:
-            raise SessionError(f"unknown session id {sess!r}")
+            raise SessionError(
+                f"unknown session id {sess!r}"
+                + (
+                    " (lost when its shard went down)"
+                    if sid in self.lost_session_ids else ""
+                )
+            )
         return handle
 
     def detach(self, sess) -> np.ndarray:
@@ -436,31 +545,235 @@ class ShardedSessionPool:
         standalone ``ElasticSessionPool.pump()`` (``dispatch``/``collect``
         never resize mid-pipeline).
 
+        Fault tolerance: a shard that raises mid-pump — from ``dispatch``,
+        ``wait_ready``, or ``collect`` — is marked down and SKIPPED for the
+        rest of the pump instead of taking down the whole loop; the failure
+        is recorded in ``shard_stats()`` (``pump_failures``) and its sessions
+        are immediately failed over to live shards (exported tickets where
+        the host-side state survived, counted lost otherwise). Shards already
+        known dead (``kill_shard``) are never dispatched; their pending
+        failover runs before the first round so re-homed sessions drain their
+        backlogs in this very pump.
+
         Returns:
             Number of dispatch rounds in which at least one shard stepped.
         """
+        self._failover_pending()
         rounds = 0
         while True:
             t0 = time.perf_counter()
-            stepped = sum(pool.dispatch() for pool in self._pools)
+            stepped = 0
+            launched = []
+            for i, pool in self._live():
+                try:
+                    stepped += pool.dispatch()
+                    launched.append((i, pool))
+                except Exception:
+                    self._pump_failure(i)
             if stepped == 0:
                 break
-            for pool in self._pools:
-                pool.wait_ready()
+            ready = []
+            for i, pool in launched:
+                try:
+                    pool.wait_ready()
+                    ready.append((i, pool))
+                except Exception:
+                    self._pump_failure(i)
             share = (time.perf_counter() - t0) / stepped
-            for pool in self._pools:
-                pool.collect(proc_share=share)
+            for i, pool in ready:
+                try:
+                    pool.collect(proc_share=share)
+                except Exception:
+                    self._pump_failure(i)
             rounds += 1
         if self.elastic:
-            for pool in self._pools:
+            for _, pool in self._live():
                 pool.try_shrink()
         return rounds
+
+    # -- shard health: fault injection, heartbeats, failover ----------------
+
+    def kill_shard(self, shard: int, *, lose_state: bool = False) -> None:
+        """Fault injection: take one shard down (the chaos harness's lever).
+
+        Models the two real failure classes a fabric sees:
+
+        - ``lose_state=False`` (default) — the device/process serving the
+          shard died but its host-side state survived (device reset, worker
+          drained). The next health check / router op exports every resident
+          session as a wire ticket and re-imports it on a live shard:
+          streams continue **bit-exactly**.
+        - ``lose_state=True`` — the whole shard is gone, memory included.
+          Resident sessions are unrecoverable; failover records them in
+          ``lost_session_ids`` / ``sessions_lost`` and their handles die
+          (bounded loss: exactly the dead shard's residents, never more).
+
+        Idempotent; killing a dead shard is a no-op. The shard stops
+        receiving routes immediately (the ring walks around its vnodes);
+        failover of its residents runs on the next ``check_shards()``,
+        ``pump_all()``, ``attach()``, or any call touching a resident.
+
+        Raises:
+            ValueError: ``shard`` out of range.
+        """
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        if shard in self._dead:
+            return
+        corpse = self._pools[shard]
+        self._pools[shard] = _DownShard(shard)
+        self._dead.add(shard)
+        self._corpses[shard] = None if lose_state else corpse
+        self._pending_failover.add(shard)
+
+    def restart_shard(self, shard: int) -> None:
+        """Bring a dead shard back with a FRESH pool (empty, zeroed state).
+
+        New sessions whose hash home is this index route here again the
+        moment it is live (the ring walk no longer skips its vnodes);
+        sessions failed over while it was down stay where they landed —
+        ``rebalance()`` drifts load back over time.
+
+        Raises:
+            SessionError: the shard is not down.
+        """
+        if shard not in self._dead:
+            raise SessionError(f"shard {shard} is not down; nothing to restart")
+        self._failover_pending()  # never strand residents of OTHER dead shards
+        self._pools[shard] = self._make_pool(shard)
+        self._dead.discard(shard)
+        self._pending_failover.discard(shard)
+        self._corpses.pop(shard, None)
+        self.shard_generations[shard] += 1
+
+    def check_shards(self) -> List[int]:
+        """Health-check heartbeat: probe every live shard, fail over the dead.
+
+        Probes each live shard with a cheap stats read; a shard that raises
+        is marked down exactly like ``kill_shard`` (its host-side pool is
+        kept as the export source, so sessions migrate bit-exactly whenever
+        the wrapper still works). Then every dead shard with residents is
+        failed over. The gateway's pump loop calls this once per tick.
+
+        Returns:
+            Indices of shards NEWLY detected dead by this probe (shards
+            already known dead are not re-reported).
+        """
+        failed = []
+        for i, pool in self._live():
+            try:
+                pool.shard_stats()
+            except Exception:
+                corpse = pool
+                self._pools[i] = _DownShard(i)
+                self._dead.add(i)
+                self._corpses[i] = corpse
+                self._pending_failover.add(i)
+                failed.append(i)
+        self._failover_pending()
+        return failed
+
+    def _pump_failure(self, shard: int) -> None:
+        """A live shard raised mid-pump: record, mark down, re-home now."""
+        corpse = self._pools[shard]
+        self._pools[shard] = _DownShard(shard)
+        self._dead.add(shard)
+        # host wrapper survived the device fault — per-session export below
+        # decides what is still recoverable
+        self._corpses[shard] = corpse
+        self._pump_failures[shard] += 1
+        self._pending_failover.add(shard)
+        self._failover(shard)
+
+    def _failover_pending(self) -> None:
+        """Re-home the residents of every dead shard not yet failed over."""
+        for shard in sorted(self._pending_failover):
+            self._failover(shard)
+
+    def _failover(self, shard: int) -> None:
+        """Move every session resident on a dead shard to a live shard.
+
+        Each recoverable session travels as WIRE BYTES (``serve.wire``
+        encode → decode around the ticket), exactly as it would between
+        gateway processes — the wire format is load-bearing on this path,
+        not just a test artifact. Destination is the ring's remapped home
+        (walk around dead vnodes), falling back to the live shard with the
+        most headroom when that home is full; a session with no exportable
+        state, or no live slot anywhere, is lost and recorded.
+        """
+        from repro.serve.wire import decode_ticket, encode_ticket
+
+        corpse = self._corpses.pop(shard, None)
+        residents = [h for h in self._sessions.values() if h.shard == shard]
+        moved = lost = 0
+        for handle in residents:
+            blob = None
+            if corpse is not None:
+                try:
+                    blob = encode_ticket(corpse.export_session(handle.inner))
+                except Exception:
+                    blob = None  # this session's state died with the fault
+            dst = self._failover_destination(handle.session_id) if blob else None
+            if blob is None or dst is None:
+                lost += 1
+                handle.inner.detached = True
+                del self._sessions[handle.session_id]
+                self.lost_session_ids.append(handle.session_id)
+                continue
+            handle.inner = self._pools[dst].import_session(decode_ticket(blob))
+            handle.shard = dst
+            moved += 1
+        self._pending_failover.discard(shard)
+        self._failover_counts[shard] += 1
+        self.sessions_failed_over += moved
+        self.sessions_lost += lost
+        self.failover_log.append({"shard": shard, "moved": moved, "lost": lost})
+
+    def _failover_destination(self, session_id: Hashable) -> Optional[int]:
+        """Live shard to re-home one session on: ring remap, else headroom."""
+        live = self._live()
+        if not live:
+            return None
+        dst = self._ring.route(session_id, dead=self._dead)
+        if not _shard_full(self._pools[dst]):
+            return dst
+        frees = [(_max_capacity(p) - p.num_active, i) for i, p in live]
+        free, dst = max(frees)
+        return dst if free > 0 else None
 
     # -- balance ------------------------------------------------------------
 
     def shard_stats(self) -> List[Dict[str, object]]:
-        """Per-shard load counters (see ``SessionPool.shard_stats``)."""
-        return [p.shard_stats() for p in self._pools]
+        """Per-shard load counters (see ``SessionPool.shard_stats``), plus
+        the fabric's health/failover metrics on every entry:
+
+        - ``alive`` — False while the shard is down (its load counters then
+          read as zeros and ``device`` as ``"down"``),
+        - ``pump_failures`` — times this index died MID-pump (the
+          ``pump_all`` skip-don't-raise path),
+        - ``shard_failovers`` — completed failovers of this index,
+        - ``sessions_failed_over`` / ``sessions_lost`` — fleet totals
+          (repeated on each entry for one-stop scraping).
+        """
+        out = []
+        for i, p in enumerate(self._pools):
+            if i in self._dead:
+                s = {
+                    "capacity": 0, "active": 0, "free": 0, "hops": 0,
+                    "backlog_hops": 0, "p50_ms": 0.0, "device": "down",
+                    "backend": self._mk["backend"],
+                    "hops_per_step": self._mk["hops_per_step"],
+                    "alive": False,
+                }
+            else:
+                s = dict(p.shard_stats())
+                s["alive"] = True
+            s["pump_failures"] = self._pump_failures[i]
+            s["shard_failovers"] = self._failover_counts[i]
+            s["sessions_failed_over"] = self.sessions_failed_over
+            s["sessions_lost"] = self.sessions_lost
+            out.append(s)
+        return out
 
     def _migrate(self, handle: ShardedSession, dst: int) -> None:
         """Move one live session to shard ``dst`` (resumes bit-for-bit)."""
@@ -473,7 +786,10 @@ class ShardedSessionPool:
 
         Headroom counts growable tiers: an elastic destination at its current
         capacity still has room — ``import_session`` grows it."""
-        frees = [_max_capacity(p) - p.num_active for p in self._pools]
+        frees = [
+            _max_capacity(p) - p.num_active if i not in self._dead else -1
+            for i, p in enumerate(self._pools)
+        ]
         frees[shard] = -1  # never pick the shard being drained
         dst = max(range(self.n_shards), key=lambda i: frees[i])
         if frees[dst] <= 0:
@@ -501,11 +817,15 @@ class ShardedSessionPool:
             Number of sessions moved.
         """
         tolerance = max(1, tolerance)  # 0 would oscillate a session forever
+        self._failover_pending()  # dead-shard residents re-home first
         moved = 0
         while True:
-            loads = [p.num_active for p in self._pools]
-            src = max(range(self.n_shards), key=lambda i: loads[i])
-            dst = min(range(self.n_shards), key=lambda i: loads[i])
+            live = self._live()
+            if len(live) < 2:
+                break
+            loads = {i: p.num_active for i, p in live}
+            src = max(loads, key=lambda i: loads[i])
+            dst = min(loads, key=lambda i: loads[i])
             if loads[src] - loads[dst] <= tolerance:
                 break
             if _shard_full(self._pools[dst]):
@@ -516,7 +836,7 @@ class ShardedSessionPool:
             self._migrate(handle, dst)
             moved += 1
         if moved and self.elastic:
-            for pool in self._pools:
+            for _, pool in self._live():
                 pool.try_shrink(force=True)
         return moved
 
@@ -525,13 +845,26 @@ class ShardedSessionPool:
     def report(self) -> str:
         lines = [
             f"ShardedSessionPool(shards={self.n_shards}, "
-            f"capacity={self.capacity}, active={self.num_active})"
+            f"capacity={self.capacity}, active={self.num_active}"
+            + (f", dead={self.dead_shards}" if self._dead else "")
+            + ")"
         ]
         for i, stats in enumerate(self.shard_stats()):
+            if not stats["alive"]:
+                lines.append(
+                    f"  shard {i} [down]: {stats['shard_failovers']} "
+                    f"failovers, {stats['pump_failures']} pump failures"
+                )
+                continue
             lines.append(
                 f"  shard {i} [{stats['device']}]: "
                 f"{stats['active']}/{stats['capacity']} active, "
                 f"{stats['hops']} hops, backlog={stats['backlog_hops']}, "
                 f"p50={stats['p50_ms']:.2f}ms"
+            )
+        if self.sessions_failed_over or self.sessions_lost:
+            lines.append(
+                f"  failover: {self.sessions_failed_over} sessions re-homed, "
+                f"{self.sessions_lost} lost"
             )
         return "\n".join(lines)

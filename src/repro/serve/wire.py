@@ -1,0 +1,300 @@
+"""Binary wire format for ``SessionTicket`` — the cross-process migration unit.
+
+``SessionPool.export_session`` snapshots a live stream into a
+``SessionTicket`` (recurrent-state slice, pending input ring, unread output
+ring, accounting, parked flag). Inside one process the ticket moves between
+pools as a Python object; across a process or host boundary it has to move
+as BYTES. This module is that boundary: ``encode_ticket`` /
+``decode_ticket`` give the ticket a versioned, self-describing binary form
+whose round-trip is **bit-exact** — the decoded ticket's every array leaf
+has the same dtype, shape, and bytes as the original, so a stream imported
+from the wire resumes exactly where the exported one stopped
+(``tests/test_wire.py`` proves it on golden fixtures and under hypothesis).
+
+Format (all integers little-endian):
+
+| offset | field | contents |
+|---|---|---|
+| 0 | magic | ``b"RTKT"`` |
+| 4 | version | u16, currently ``1`` |
+| 6 | flags | u16, reserved (0) |
+| 8 | body | one recursively encoded value (the ticket) |
+| -4 | crc32 | u32 of the body bytes (corruption check) |
+
+The body is a tagged recursive encoding; each value starts with a u8 tag:
+
+| tag | type | payload |
+|---|---|---|
+| 0 | None | — |
+| 1 | bool | u8 |
+| 2 | int | i64 |
+| 3 | float | f64 (Python floats are f64: exact) |
+| 4 | str | u32 length + UTF-8 bytes |
+| 5 | ndarray | dtype string, u8 ndim, u32 dims, raw C-order bytes |
+| 6 | list | u32 count + elements |
+| 7 | tuple | u32 count + elements |
+| 8 | dict | u32 count + (str key, value) pairs, insertion order |
+| 9 | dataclass | str class name + dict of fields, declaration order |
+
+Dataclass names are resolved through an explicit registry (``SessionTicket``,
+``SessionStats``, ``StreamState``) — an unknown name on decode is a format
+error, never an arbitrary-code import (this is NOT pickle, by design: the
+format can only ever materialize numpy arrays and plain containers).
+
+Versioning contract: any change to the layout bumps ``WIRE_VERSION``, and the
+committed golden fixture (``tests/fixtures/session_ticket_v1.bin``) pins
+version 1 byte-for-byte — unversioned drift fails tier-1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Any
+
+import numpy as np
+
+from repro.serve.session_server import SessionStats, SessionTicket
+from repro.serve.streaming_se import StreamState
+
+MAGIC = b"RTKT"
+WIRE_VERSION = 1
+
+_TAG_NONE = 0
+_TAG_BOOL = 1
+_TAG_INT = 2
+_TAG_FLOAT = 3
+_TAG_STR = 4
+_TAG_NDARRAY = 5
+_TAG_LIST = 6
+_TAG_TUPLE = 7
+_TAG_DICT = 8
+_TAG_DATACLASS = 9
+
+# decode-side dataclass registry: the ONLY class names the wire can name
+_DATACLASSES = {
+    "SessionTicket": SessionTicket,
+    "SessionStats": SessionStats,
+    "StreamState": StreamState,
+}
+
+
+class WireFormatError(ValueError):
+    """Malformed, truncated, corrupted, or wrong-version ticket bytes.
+
+    Also raised on ENCODE when a ticket holds a value the format cannot
+    represent (e.g. an unregistered dataclass) — better to fail at the
+    sender than to ship bytes no receiver can decode.
+    """
+
+
+def _dtype_str(dtype: np.dtype) -> str:
+    """A string that reconstructs ``dtype`` exactly via ``np.dtype(s)``.
+
+    ``dtype.str`` is byte-order explicit for every standard dtype; extension
+    dtypes (e.g. ml_dtypes' bfloat16) collapse to an anonymous void there,
+    so fall back to ``dtype.name``, which their registrars resolve.
+    """
+    s = dtype.str
+    if np.dtype(s) == dtype and "V" not in s:
+        return s
+    return dtype.name
+
+
+def _encode_value(out: bytearray, value: Any) -> None:
+    if value is None:
+        out.append(_TAG_NONE)
+    elif isinstance(value, (bool, np.bool_)):
+        out.append(_TAG_BOOL)
+        out.append(1 if value else 0)
+    elif isinstance(value, (int, np.integer)):
+        out.append(_TAG_INT)
+        out += struct.pack("<q", int(value))
+    elif isinstance(value, (float, np.floating)):
+        out.append(_TAG_FLOAT)
+        out += struct.pack("<d", float(value))
+    elif isinstance(value, str):
+        raw = value.encode("utf-8")
+        out.append(_TAG_STR)
+        out += struct.pack("<I", len(raw))
+        out += raw
+    elif isinstance(value, np.ndarray):
+        arr = np.ascontiguousarray(value)
+        ds = _dtype_str(arr.dtype).encode("ascii")
+        out.append(_TAG_NDARRAY)
+        out += struct.pack("<I", len(ds))
+        out += ds
+        out.append(arr.ndim)
+        for dim in arr.shape:
+            out += struct.pack("<I", dim)
+        out += arr.tobytes()
+    elif isinstance(value, list):
+        out.append(_TAG_LIST)
+        out += struct.pack("<I", len(value))
+        for v in value:
+            _encode_value(out, v)
+    elif isinstance(value, tuple):
+        out.append(_TAG_TUPLE)
+        out += struct.pack("<I", len(value))
+        for v in value:
+            _encode_value(out, v)
+    elif isinstance(value, dict):
+        out.append(_TAG_DICT)
+        out += struct.pack("<I", len(value))
+        for k, v in value.items():
+            if not isinstance(k, str):
+                raise WireFormatError(
+                    f"dict keys on the wire must be str, got {type(k).__name__}"
+                )
+            _encode_value(out, k)
+            _encode_value(out, v)
+    elif dataclasses.is_dataclass(value):
+        name = type(value).__name__
+        if _DATACLASSES.get(name) is not type(value):
+            raise WireFormatError(
+                f"dataclass {name!r} is not wire-registered "
+                f"(known: {sorted(_DATACLASSES)})"
+            )
+        out.append(_TAG_DATACLASS)
+        _encode_value(out, name)
+        fields = {f.name: getattr(value, f.name) for f in dataclasses.fields(value)}
+        _encode_value(out, fields)
+    else:
+        raise WireFormatError(
+            f"cannot encode {type(value).__name__} on the ticket wire; "
+            "device arrays must be np.asarray'd first (export_session does)"
+        )
+
+
+class _Reader:
+    """Cursor over the body bytes; every read is bounds-checked."""
+
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if n < 0 or self.pos + n > len(self.data):
+            raise WireFormatError(
+                f"truncated ticket: wanted {n} bytes at offset {self.pos}, "
+                f"have {len(self.data) - self.pos}"
+            )
+        raw = self.data[self.pos : self.pos + n]
+        self.pos += n
+        return raw
+
+    def u8(self) -> int:
+        return self.take(1)[0]
+
+    def u32(self) -> int:
+        return struct.unpack("<I", self.take(4))[0]
+
+
+def _decode_value(r: _Reader) -> Any:
+    tag = r.u8()
+    if tag == _TAG_NONE:
+        return None
+    if tag == _TAG_BOOL:
+        return bool(r.u8())
+    if tag == _TAG_INT:
+        return struct.unpack("<q", r.take(8))[0]
+    if tag == _TAG_FLOAT:
+        return struct.unpack("<d", r.take(8))[0]
+    if tag == _TAG_STR:
+        return r.take(r.u32()).decode("utf-8")
+    if tag == _TAG_NDARRAY:
+        try:
+            dtype = np.dtype(r.take(r.u32()).decode("ascii"))
+        except TypeError as e:
+            raise WireFormatError(f"unknown dtype on the wire: {e}") from None
+        shape = tuple(r.u32() for _ in range(r.u8()))
+        nbytes = int(dtype.itemsize * int(np.prod(shape, dtype=np.int64)))
+        arr = np.frombuffer(r.take(nbytes), dtype=dtype).reshape(shape)
+        return arr.copy()  # writable, detached from the wire buffer
+    if tag == _TAG_LIST:
+        return [_decode_value(r) for _ in range(r.u32())]
+    if tag == _TAG_TUPLE:
+        return tuple(_decode_value(r) for _ in range(r.u32()))
+    if tag == _TAG_DICT:
+        n = r.u32()
+        out = {}
+        for _ in range(n):
+            k = _decode_value(r)
+            if not isinstance(k, str):
+                raise WireFormatError("dict key on the wire is not a str")
+            out[k] = _decode_value(r)
+        return out
+    if tag == _TAG_DATACLASS:
+        name = _decode_value(r)
+        cls = _DATACLASSES.get(name)
+        if cls is None:
+            raise WireFormatError(
+                f"unknown dataclass {name!r} on the wire "
+                f"(known: {sorted(_DATACLASSES)})"
+            )
+        fields = _decode_value(r)
+        if not isinstance(fields, dict):
+            raise WireFormatError(f"dataclass {name!r} fields are not a dict")
+        try:
+            return cls(**fields)
+        except TypeError as e:
+            raise WireFormatError(f"bad fields for {name!r}: {e}") from None
+    raise WireFormatError(f"unknown wire tag {tag} at offset {r.pos - 1}")
+
+
+def encode_ticket(ticket: SessionTicket) -> bytes:
+    """Serialize a ``SessionTicket`` to its versioned binary form.
+
+    The encoding is deterministic (field/declaration order, insertion-order
+    dicts), so equal tickets produce equal bytes and decode→re-encode is
+    byte-identical — the golden-fixture property tier-1 pins.
+
+    Raises:
+        WireFormatError: the ticket holds a value the format cannot carry.
+    """
+    if not isinstance(ticket, SessionTicket):
+        raise WireFormatError(
+            f"encode_ticket wants a SessionTicket, got {type(ticket).__name__}"
+        )
+    body = bytearray()
+    _encode_value(body, ticket)
+    return (
+        MAGIC
+        + struct.pack("<HH", WIRE_VERSION, 0)
+        + bytes(body)
+        + struct.pack("<I", zlib.crc32(bytes(body)))
+    )
+
+
+def decode_ticket(data: bytes) -> SessionTicket:
+    """Parse ticket bytes back into a ``SessionTicket``, bit-exactly.
+
+    Raises:
+        WireFormatError: bad magic, unsupported version, truncation, CRC
+            mismatch, or a malformed body.
+    """
+    if len(data) < 12:
+        raise WireFormatError(f"ticket too short ({len(data)} bytes)")
+    if data[:4] != MAGIC:
+        raise WireFormatError(f"bad magic {data[:4]!r} (want {MAGIC!r})")
+    version, _flags = struct.unpack("<HH", data[4:8])
+    if version != WIRE_VERSION:
+        raise WireFormatError(
+            f"unsupported ticket version {version} (this build speaks "
+            f"{WIRE_VERSION})"
+        )
+    body, (crc,) = data[8:-4], struct.unpack("<I", data[-4:])
+    if zlib.crc32(body) != crc:
+        raise WireFormatError("ticket checksum mismatch: corrupted bytes")
+    r = _Reader(body)
+    ticket = _decode_value(r)
+    if r.pos != len(body):
+        raise WireFormatError(
+            f"{len(body) - r.pos} trailing bytes after the ticket body"
+        )
+    if not isinstance(ticket, SessionTicket):
+        raise WireFormatError(
+            f"wire body decodes to {type(ticket).__name__}, not SessionTicket"
+        )
+    return ticket

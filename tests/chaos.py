@@ -1,0 +1,324 @@
+"""Deterministic fault-injection harness for the cross-process fabric.
+
+``run_soak`` (tests/soak.py) churns a pool and checks *structural*
+invariants; this module layers the fabric's *semantic* contract on top:
+named sessions stream known audio schedules while shards are killed and
+restarted — and, on the gateway path, while client connections are severed
+— and at the end every surviving session's total output must be
+**bit-identical** to the same audio through a solo ``SessionPool`` that
+never saw a failure. Sessions that are allowed to die (``lose_state=True``
+kills) must be exactly the pool-recorded losses: bounded loss, never
+silent corruption, never collateral damage to bystander sessions.
+
+Everything is driven by one ``random.Random(seed)`` — same seed, same kill
+schedule, same chunk sizes, same drops — so a chaos failure reproduces.
+
+Two entry points:
+
+- ``run_chaos(pool, audios, reference, ...)`` — in-process: handles talk
+  straight to the ``ShardedSessionPool``.
+- ``run_chaos_gateway(gw, audios, reference, ...)`` — cross-process: real
+  ``GatewayClient`` sockets against a ``GatewayThread``; faults are
+  injected ON the gateway thread (no racing the pump loop) and the
+  ``drop_every`` knob severs a random client mid-stream, re-connects, and
+  re-adopts the same session id with nothing lost.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict
+
+import numpy as np
+
+from soak import SoakChecker
+
+# feed chunks are 0..3 hops of audio — jittery on purpose (dribbles,
+# blobs, empty writes), never aligned to the hop except by accident
+_MAX_CHUNK_HOPS = 3
+
+
+def _expected_out(audio: np.ndarray, hop: int) -> int:
+    return (audio.size // hop) * hop
+
+
+class ChaosResult(dict):
+    """Outcome of one chaos run (also a plain dict for printing).
+
+    Keys: ``outputs`` (sid -> np.ndarray collected), ``lost`` (set of sids
+    whose sessions died), ``kills`` / ``restarts`` / ``drops`` (fault
+    counts actually injected).
+    """
+
+
+def _verify(result: ChaosResult, audios, reference, hop, pool) -> None:
+    """The harness's closing argument: bit-exactness and bounded loss."""
+    recorded_lost = set(getattr(pool, "lost_session_ids", ()))
+    assert result["lost"] == recorded_lost, (
+        f"loss not bounded/recorded: harness saw {sorted(result['lost'])}, "
+        f"pool recorded {sorted(recorded_lost)}"
+    )
+    for sid, audio in audios.items():
+        if sid in result["lost"]:
+            continue
+        got = result["outputs"][sid]
+        want = reference(audio)[: _expected_out(audio, hop)]
+        assert got.size == want.size, (
+            f"{sid}: collected {got.size} samples, expected {want.size}"
+        )
+        assert np.array_equal(got, want), (
+            f"{sid}: stream NOT bit-exact after failover "
+            f"(first mismatch at {np.argmax(got != want)})"
+        )
+
+
+def run_chaos(
+    pool,
+    audios: Dict[str, np.ndarray],
+    reference: Callable[[np.ndarray], np.ndarray],
+    *,
+    seed: int = 0,
+    rounds: int = 30,
+    kill_every: int = 6,
+    restart_after: int = 2,
+    lose_state: bool = False,
+    min_live_shards: int = 1,
+    drain_rounds: int = 200,
+) -> ChaosResult:
+    """Stream every schedule through a sharded pool under shard churn.
+
+    Args:
+        pool: a ``ShardedSessionPool`` with room for ``len(audios)``.
+        audios: session id -> full audio schedule (any lengths).
+        reference: ``reference(audio) -> np.ndarray`` producing the
+            no-failure ground truth (a solo ``SessionPool`` run).
+        seed: drives chunk sizes AND the fault schedule, deterministically.
+        rounds: feeding rounds; each round feeds one random chunk per live
+            session then pumps.
+        kill_every: a shard dies every this-many rounds (when the live
+            count allows).
+        restart_after: dead shards restart this many rounds after dying.
+        lose_state: kill shards destructively — their residents are the
+            expected (bounded) loss instead of migrating.
+        min_live_shards: never kill below this floor.
+        drain_rounds: post-feed pump/read iterations allowed to flush the
+            tail (a bound, not a timing assumption).
+
+    Returns:
+        ``ChaosResult``; every invariant and the bit-exactness contract
+        have already been asserted by the time it returns.
+    """
+    rnd = random.Random(seed)
+    hop = pool.cfg.hop
+    checker = SoakChecker()
+    handles = {sid: pool.attach(sid) for sid in audios}
+    pos = {sid: 0 for sid in audios}
+    outputs = {sid: [] for sid in audios}
+    expected_lost: set = set()
+    dead_since: Dict[int, int] = {}
+    kills = restarts = 0
+
+    def live_sids():
+        return [s for s in audios if s not in expected_lost]
+
+    def collect(sid):
+        try:
+            chunk = pool.read(handles[sid])
+        except Exception:
+            _note_lost(sid)
+            return
+        if chunk.size:
+            outputs[sid].append(chunk)
+
+    def _note_lost(sid):
+        # only pool-recorded losses are legal; _verify re-checks the set
+        assert sid in pool.lost_session_ids, f"{sid} died unrecorded"
+        expected_lost.add(sid)
+
+    for r in range(rounds):
+        # fault schedule first — mid-stream by construction
+        if kill_every and r and r % kill_every == 0:
+            live = [i for i in range(pool.n_shards) if i not in pool._dead]
+            if len(live) > min_live_shards:
+                victim = rnd.choice(live)
+                if lose_state:
+                    # residents at the kill instant are the bounded loss
+                    expected_lost.update(
+                        sid
+                        for sid, h in handles.items()
+                        if sid not in expected_lost and h.shard == victim
+                    )
+                pool.kill_shard(victim, lose_state=lose_state)
+                dead_since[victim] = r
+                kills += 1
+        for shard, since in list(dead_since.items()):
+            if r - since >= restart_after:
+                pool.restart_shard(shard)
+                del dead_since[shard]
+                restarts += 1
+        for sid in live_sids():
+            audio = audios[sid]
+            if pos[sid] >= audio.size:
+                continue
+            n = rnd.randrange(0, _MAX_CHUNK_HOPS * hop + 1)
+            chunk = audio[pos[sid] : pos[sid] + n]
+            try:
+                pool.feed(handles[sid], chunk)
+            except Exception:
+                _note_lost(sid)
+                continue
+            pos[sid] += chunk.size
+        pool.pump_all()
+        for sid in live_sids():
+            collect(sid)
+        checker.check(pool)
+
+    # flush: finish feeding whatever the rounds didn't cover, then drain
+    for sid in live_sids():
+        if pos[sid] < audios[sid].size:
+            try:
+                pool.feed(handles[sid], audios[sid][pos[sid] :])
+                pos[sid] = audios[sid].size
+            except Exception:
+                _note_lost(sid)
+    for _ in range(drain_rounds):
+        pool.pump_all()
+        for sid in live_sids():
+            collect(sid)
+        checker.check(pool)
+        if all(
+            sum(c.size for c in outputs[sid]) >= _expected_out(audios[sid], hop)
+            for sid in live_sids()
+        ):
+            break
+    for sid in live_sids():
+        try:
+            tail = pool.detach(handles[sid])
+            if tail.size:
+                outputs[sid].append(tail)
+        except Exception:
+            _note_lost(sid)
+
+    result = ChaosResult(
+        outputs={
+            sid: (
+                np.concatenate(chunks)
+                if chunks
+                else np.zeros((0,), np.float32)
+            )
+            for sid, chunks in outputs.items()
+        },
+        lost=expected_lost,
+        kills=kills,
+        restarts=restarts,
+        drops=0,
+    )
+    _verify(result, audios, reference, hop, pool)
+    return result
+
+
+def run_chaos_gateway(
+    gw,
+    audios: Dict[str, np.ndarray],
+    reference: Callable[[np.ndarray], np.ndarray],
+    *,
+    seed: int = 0,
+    rounds: int = 30,
+    kill_every: int = 8,
+    restart_after: int = 2,
+    drop_every: int = 5,
+    min_live_shards: int = 1,
+) -> ChaosResult:
+    """The same contract as ``run_chaos``, across real sockets.
+
+    Every session is a ``GatewayClient`` connection to a ``GatewayThread``;
+    shard kills/restarts run via ``gw.call`` (on the gateway's event loop,
+    serialized against its pump ticks), and every ``drop_every`` rounds one
+    random client's connection is severed WITHOUT detach — the session is
+    orphaned on the gateway, keeps streaming, and a fresh connection
+    re-attaches the same id. Kills here never lose state (the bounded-loss
+    leg is exercised in-process, where the loss set is observable
+    synchronously), so EVERY session must finish bit-exactly.
+    """
+    from repro.serve.gateway import GatewayClient
+
+    rnd = random.Random(seed)
+    pool = gw.pool
+    hop = pool.cfg.hop
+    checker = SoakChecker()
+    host, port = gw.address
+    clients = {}
+    for sid in audios:
+        c = GatewayClient(host, port)
+        assert c.attach(sid) == sid
+        clients[sid] = c
+    pos = {sid: 0 for sid in audios}
+    outputs = {sid: [] for sid in audios}
+    dead_since: Dict[int, int] = {}
+    kills = restarts = drops = 0
+
+    for r in range(rounds):
+        if kill_every and r and r % kill_every == 0:
+
+            def _kill(p):
+                live = [i for i in range(p.n_shards) if i not in p._dead]
+                if len(live) > min_live_shards:
+                    victim = rnd.choice(live)
+                    p.kill_shard(victim)
+                    return victim
+                return None
+
+            victim = gw.call(_kill)
+            if victim is not None:
+                kills += 1
+                dead_since[victim] = r
+        for shard, since in list(dead_since.items()):
+            if r - since >= restart_after:
+                gw.call(lambda p, s=shard: p.restart_shard(s))
+                del dead_since[shard]
+                restarts += 1
+        if drop_every and r and r % drop_every == 0:
+            sid = rnd.choice(sorted(audios))
+            clients[sid].drop()  # severed mid-stream, no detach
+            c = GatewayClient(host, port)
+            assert c.attach(sid) == sid, "orphan adoption must keep the id"
+            clients[sid] = c
+            drops += 1
+        for sid, audio in audios.items():
+            if pos[sid] >= audio.size:
+                continue
+            n = rnd.randrange(0, _MAX_CHUNK_HOPS * hop + 1)
+            chunk = audio[pos[sid] : pos[sid] + n]
+            clients[sid].feed(chunk)
+            pos[sid] += chunk.size
+        for sid in audios:
+            chunk = clients[sid].read()
+            if chunk.size:
+                outputs[sid].append(chunk)
+        gw.call(checker.check)
+
+    for sid, audio in audios.items():
+        if pos[sid] < audio.size:
+            clients[sid].feed(audio[pos[sid] :])
+            pos[sid] = audio.size
+        got = sum(c.size for c in outputs[sid])
+        rest = clients[sid].read_until(
+            _expected_out(audio, hop) - got, timeout=60
+        )
+        if rest.size:
+            outputs[sid].append(rest)
+        tail = clients[sid].detach()
+        if tail.size:
+            outputs[sid].append(tail)
+        clients[sid].close()
+    gw.call(checker.check)
+
+    result = ChaosResult(
+        outputs={sid: np.concatenate(chunks) for sid, chunks in outputs.items()},
+        lost=set(),
+        kills=kills,
+        restarts=restarts,
+        drops=drops,
+    )
+    _verify(result, audios, reference, hop, pool)
+    return result

@@ -22,9 +22,14 @@ instant — including mid-pipeline, between a ``dispatch()`` and its
    list over), and never records a negative latency.
 
 ``run_soak`` drives N ops of randomized attach/detach/feed/read/pump churn
-(plus explicit resizes for elastic pools) and re-checks every invariant
-after EVERY op — the cheap always-on cousin of the bit-exactness property
-tests.
+(plus explicit resizes for elastic pools, and — with ``faults=True`` on a
+sharded pool — ``kill_shard`` / ``restart_shard`` fault injection, plus a
+caller-supplied ``drop_client`` op for the gateway path) and re-checks
+every invariant after EVERY op — the cheap always-on cousin of the
+bit-exactness property tests. Under faults, invariant 2 (ring
+conservation) and invariant 4 (latency continuity) hold ACROSS failover:
+a migrated session's counters carry over with its ticket, and a surviving
+shard's latency record never shrinks.
 """
 
 from __future__ import annotations
@@ -36,12 +41,41 @@ import numpy as np
 
 def _inner_pools(pool) -> list:
     """The underlying SessionPool(s): unwrap elastic wrappers and sharded
-    routers (whose shards may themselves be elastic)."""
+    routers (whose shards may themselves be elastic). Dead shards are
+    skipped — a downed shard has no pool to check until it restarts."""
     if hasattr(pool, "_pools"):  # ShardedSessionPool
-        return [q for p in pool._pools for q in _inner_pools(p)]
+        dead = getattr(pool, "_dead", ())
+        return [
+            q
+            for i, p in enumerate(pool._pools)
+            if i not in dead
+            for q in _inner_pools(p)
+        ]
     if hasattr(pool, "tiers"):  # ElasticSessionPool
         return [pool._pool]
     return [pool]
+
+
+def _keyed_inner_pools(pool) -> list:
+    """(stable key, inner pool) pairs for cross-op continuity tracking.
+
+    The key survives shard death of OTHER shards (unlike a flat list
+    position) and rolls over on restart (a restarted shard is a FRESH pool
+    whose latency record legitimately starts empty): ``shard{i}g{gen}``
+    where ``gen`` is the shard's restart generation.
+    """
+    if hasattr(pool, "_pools"):
+        dead = getattr(pool, "_dead", ())
+        gens = getattr(pool, "shard_generations", None)
+        out = []
+        for i, p in enumerate(pool._pools):
+            if i in dead:
+                continue
+            gen = 0 if gens is None else gens[i]
+            for j, q in enumerate(_inner_pools(p)):
+                out.append((f"shard{i}g{gen}.{j}", q))
+        return out
+    return [(f"p{j}", q) for j, q in enumerate(_inner_pools(pool))]
 
 
 def _check_session_pool(p) -> None:
@@ -100,12 +134,13 @@ class SoakChecker:
 
     def check(self, pool) -> None:
         check_pool_invariants(pool)
-        for i, p in enumerate(_inner_pools(pool)):
+        for key, p in _keyed_inner_pools(pool):
             n = len(p.step_seconds)
-            assert n >= self._seen_steps.get(i, 0), (
-                "step-latency record shrank — accounting lost across a resize"
+            assert n >= self._seen_steps.get(key, 0), (
+                f"step-latency record shrank on {key} — accounting lost "
+                "across a resize or failover"
             )
-            self._seen_steps[i] = n
+            self._seen_steps[key] = n
 
 
 def check_pool_invariants(pool) -> None:
@@ -119,11 +154,22 @@ def check_pool_invariants(pool) -> None:
     if hasattr(pool, "tiers"):
         _check_elastic(pool)
     if hasattr(pool, "_pools"):
-        for p in pool._pools:
-            if hasattr(p, "tiers"):
+        dead = getattr(pool, "_dead", set())
+        for i, p in enumerate(pool._pools):
+            if i not in dead and hasattr(p, "tiers"):
                 _check_elastic(p)
-        # router-level: every routed handle lives on the shard it claims
-        assert len(pool._sessions) == sum(p.num_active for p in pool._pools)
+        # router-level conservation: every routed handle is either live on
+        # the shard it claims, or resident on a dead shard awaiting failover
+        # (the next health check / router op re-homes it) — never both,
+        # never neither.
+        live_active = sum(
+            p.num_active for i, p in enumerate(pool._pools) if i not in dead
+        )
+        awaiting = sum(1 for h in pool._sessions.values() if h.shard in dead)
+        assert len(pool._sessions) == live_active + awaiting, (
+            f"router bookkeeping: {len(pool._sessions)} handles != "
+            f"{live_active} live + {awaiting} awaiting failover"
+        )
 
 
 def run_soak(
@@ -134,6 +180,9 @@ def run_soak(
     seed: int = 0,
     max_live: int = 8,
     checker: SoakChecker | None = None,
+    faults: bool = False,
+    min_live_shards: int = 1,
+    drop_client=None,
 ) -> dict:
     """N ops of mixed churn with invariants checked after every single op.
 
@@ -147,22 +196,59 @@ def run_soak(
         max_live: soft cap on concurrently attached soak sessions.
         checker: reuse an existing ``SoakChecker`` to extend its continuity
             window; a fresh one is created otherwise.
+        faults: on a sharded pool, add ``kill_shard`` (host state kept:
+            failover is bit-exact) and ``restart_shard`` to the op mix.
+            Sessions can still be lost (every live shard full at failover);
+            the soak then tolerates exactly the pool-recorded losses
+            (``lost_session_ids``) and nothing else.
+        min_live_shards: ``kill_shard`` never drops the live-shard count
+            below this floor (keep >= 1 or every session strands).
+        drop_client: optional ``drop_client(rnd) -> None`` hook severing a
+            random client connection (the gateway chaos path wires the real
+            socket drop in here); adds a ``drop_client`` op when given.
 
     Returns:
         dict of op counts actually executed (attach/detach/feed/read/pump/
-        resize), so callers can assert the mix was not degenerate.
+        resize/kill_shard/restart_shard/drop_client/lost), so callers can
+        assert the mix was not degenerate.
     """
-    from repro.serve import PoolFullError
+    from repro.serve import PoolFullError, SessionError
 
     rnd = random.Random(seed)
     checker = checker or SoakChecker()
     pump = getattr(pool, "pump_all", None) or pool.pump
     elastic = hasattr(pool, "resize_to")
+    faults = faults and hasattr(pool, "kill_shard")
     handles: list = []
-    counts = {k: 0 for k in ("attach", "detach", "feed", "read", "pump", "resize")}
+    counts = {
+        k: 0
+        for k in (
+            "attach", "detach", "feed", "read", "pump", "resize",
+            "kill_shard", "restart_shard", "drop_client", "lost",
+        )
+    }
     ops = ["attach", "detach", "feed", "feed", "read", "pump"]
     if elastic:
         ops.append("resize")
+    if faults:
+        ops += ["kill_shard", "restart_shard"]
+    if drop_client is not None:
+        ops.append("drop_client")
+
+    def _tolerating_loss(handle, fn, *args):
+        """Run a session op; a session lost to a shard death is the one
+        legal failure — anything else propagates."""
+        try:
+            return fn(handle, *args)
+        except SessionError:
+            lost_ids = list(getattr(pool, "lost_session_ids", ()))
+            if getattr(handle, "session_id", None) in lost_ids:
+                if handle in handles:
+                    handles.remove(handle)
+                counts["lost"] += 1
+                return None
+            raise
+
     for _ in range(n_ops):
         op = rnd.choice(ops)
         if op == "attach" and len(handles) < max_live:
@@ -172,13 +258,15 @@ def run_soak(
             except PoolFullError:
                 pass  # legal outcome at the top tier / full fleet
         elif op == "detach" and handles:
-            pool.detach(handles.pop(rnd.randrange(len(handles))))
+            _tolerating_loss(
+                handles.pop(rnd.randrange(len(handles))), pool.detach
+            )
             counts["detach"] += 1
         elif op == "feed" and handles:
-            pool.feed(rnd.choice(handles), audio_fn(rnd))
+            _tolerating_loss(rnd.choice(handles), pool.feed, audio_fn(rnd))
             counts["feed"] += 1
         elif op == "read" and handles:
-            pool.read(rnd.choice(handles))
+            _tolerating_loss(rnd.choice(handles), pool.read)
             counts["read"] += 1
         elif op == "pump":
             pump()
@@ -188,11 +276,24 @@ def run_soak(
             if fits:
                 pool.resize_to(rnd.choice(fits))
                 counts["resize"] += 1
+        elif op == "kill_shard":
+            live = [i for i in range(pool.n_shards) if i not in pool._dead]
+            if len(live) > min_live_shards:
+                pool.kill_shard(rnd.choice(live))  # host state survives
+                counts["kill_shard"] += 1
+        elif op == "restart_shard":
+            if pool.dead_shards:
+                pool.restart_shard(rnd.choice(pool.dead_shards))
+                counts["restart_shard"] += 1
+        elif op == "drop_client":
+            drop_client(rnd)
+            counts["drop_client"] += 1
         checker.check(pool)
     pump()
     checker.check(pool)
     while handles:
-        tail = pool.detach(handles.pop())
-        assert isinstance(tail, np.ndarray)
+        tail = _tolerating_loss(handles.pop(), pool.detach)
+        if tail is not None:
+            assert isinstance(tail, np.ndarray)
         checker.check(pool)
     return counts

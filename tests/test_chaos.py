@@ -1,0 +1,185 @@
+"""Chaos tests (tests/chaos harness): shard failures mid-stream, in-process.
+
+The fabric's two failure legs, asserted end to end:
+
+- **Bit-exact continuation** — kill a shard whose host state survived and
+  every resident session continues, via wire-ticket failover, to produce
+  output bit-identical to a pool that never failed.
+- **Bounded loss** — kill a shard destructively and EXACTLY its residents
+  are lost (recorded in ``lost_session_ids``); bystanders are untouched.
+
+Plus the pump-loop seam: a shard dying MID-``pump_all`` (dispatch,
+wait_ready, or collect raising) is skipped and recorded, never fatal.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import tftnn as tft
+from repro.serve import (
+    SessionError,
+    SessionPool,
+    ShardedSessionPool,
+)
+from chaos import run_chaos
+from soak import check_pool_invariants, run_soak
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=32,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)),
+        np.float32,
+    )
+
+
+def _reference(audio: np.ndarray) -> np.ndarray:
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    return pool.detach(s)
+
+
+def test_chaos_kill_restart_bit_exact():
+    """Shards die and restart mid-stream; every stream finishes bit-exact."""
+    sp = ShardedSessionPool(PARAMS, CFG, 3, shards=3)
+    audios = {f"user-{i}": _audio(10 + i, 8 + 2 * i) for i in range(4)}
+    result = run_chaos(
+        sp,
+        audios,
+        _reference,
+        seed=1,
+        rounds=18,
+        kill_every=5,
+        restart_after=2,
+    )
+    assert result["kills"] >= 2, "the schedule must actually inject faults"
+    assert result["restarts"] >= 1
+    assert result["lost"] == set(), "state-preserving kills lose nothing"
+    assert sp.sessions_failed_over >= 1
+    assert any(s["shard_failovers"] > 0 for s in sp.shard_stats())
+
+
+def test_chaos_lose_state_bounded_loss():
+    """Destructive kill: exactly the victim's residents die, no one else."""
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=3)
+    sids = [f"s{i}" for i in range(6)]
+    audios = {sid: _audio(30 + i, 8) for i, sid in enumerate(sids)}
+    handles = {sid: sp.attach(sid) for sid in sids}
+    for sid in sids:
+        sp.feed(handles[sid], audios[sid][: 4 * HOP])
+    sp.pump_all()
+    firsts = {sid: sp.read(handles[sid]) for sid in sids}
+
+    victim = handles[sids[0]].shard
+    residents = {sid for sid, h in handles.items() if h.shard == victim}
+    sp.kill_shard(victim, lose_state=True)
+    sp.check_shards()
+
+    assert set(sp.lost_session_ids) == residents
+    assert sp.sessions_lost == len(residents)
+    check_pool_invariants(sp)
+    for sid in residents:  # dead handles fail loudly, naming the loss
+        with pytest.raises(SessionError, match="lost"):
+            sp.feed(handles[sid], audios[sid][4 * HOP :])
+    for sid in sids:  # bystanders stream on, bit-exactly
+        if sid in residents:
+            continue
+        sp.feed(handles[sid], audios[sid][4 * HOP :])
+    sp.pump_all()
+    for sid in sids:
+        if sid in residents:
+            continue
+        out = np.concatenate([firsts[sid], sp.detach(handles[sid])])
+        assert np.array_equal(out, _reference(audios[sid]))
+
+
+def test_pump_all_skips_shard_dying_mid_pump():
+    """Satellite fix: a mid-pump death is a skip + record, not a crash."""
+    sp = ShardedSessionPool(PARAMS, CFG, 5, shards=2)
+    # probe ids until both shards host two sessions each (hashing is
+    # deterministic but not evenly striped over any tiny id set)
+    sids, per_shard, i = [], {0: 0, 1: 0}, 0
+    while min(per_shard.values()) < 2:
+        sid = f"u{i}"
+        i += 1
+        home = sp.route(sid)
+        if per_shard[home] < 2:
+            per_shard[home] += 1
+            sids.append(sid)
+    audios = {sid: _audio(50 + j, 6) for j, sid in enumerate(sids)}
+    handles = {sid: sp.attach(sid) for sid in audios}
+    assert {h.shard for h in handles.values()} == {0, 1}
+    for sid, audio in audios.items():
+        sp.feed(handles[sid], audio)
+
+    victim = handles["u0"].shard
+    sp._pools[victim].dispatch = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("device fell over mid-pump")
+    )
+    sp.pump_all()  # must NOT raise
+
+    assert victim in sp.dead_shards
+    stats = sp.shard_stats()
+    assert stats[victim]["pump_failures"] == 1
+    assert stats[victim]["alive"] is False
+    assert stats[victim]["device"] == "down"
+    # its residents were re-homed mid-pump and their streams completed
+    for sid, audio in audios.items():
+        out = sp.detach(handles[sid])
+        assert np.array_equal(out, _reference(audio)), f"{sid} diverged"
+    assert sp.sessions_failed_over >= 1
+
+
+def test_soak_with_fault_ops():
+    """run_soak's kill/restart vocabulary: invariants hold through churn."""
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=3)
+    counts = run_soak(
+        sp,
+        lambda rnd: _audio(rnd.randrange(1000), rnd.randrange(1, 4)),
+        n_ops=80,
+        seed=3,
+        faults=True,
+    )
+    assert counts["kill_shard"] >= 1, f"degenerate fault mix: {counts}"
+    assert counts["pump"] >= 1 and counts["feed"] >= 1
+
+
+def test_restarted_shard_reclaims_new_sessions():
+    """After restart, the index serves again and generations advance."""
+    sp = ShardedSessionPool(PARAMS, CFG, 3, shards=2)
+    sp.kill_shard(1)
+    assert sp.dead_shards == [1]
+    gen_before = sp.shard_generations[1]
+    sp.restart_shard(1)
+    assert sp.dead_shards == []
+    assert sp.shard_generations[1] == gen_before + 1
+    with pytest.raises(SessionError):
+        sp.restart_shard(1)  # not down: loud, not silent
+    audio = _audio(77, 6)
+    h = sp.attach("back-again")
+    sp.feed(h, audio)
+    sp.pump_all()
+    assert np.array_equal(sp.detach(h), _reference(audio))

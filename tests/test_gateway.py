@@ -1,0 +1,240 @@
+"""Gateway tests (serve/gateway): the fabric's socket front door.
+
+Everything here crosses a REAL localhost TCP boundary — ``GatewayThread``
+runs the asyncio server + pump loop on its own thread, ``GatewayClient``
+speaks the framed protocol from the test thread. The headline contract:
+the network is invisible to audio. A gateway-served session's output is
+bit-identical to the same feed schedule through an in-process
+``SessionPool``, including across a mid-stream shard failover and across a
+severed-and-reconnected client connection.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import tftnn as tft
+from repro.serve import SessionError, SessionPool, ShardedSessionPool
+from repro.serve.gateway import GatewayClient, GatewayThread, MSG_ATTACH
+from chaos import run_chaos_gateway
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=32,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)),
+        np.float32,
+    )
+
+
+def _reference(audio: np.ndarray) -> np.ndarray:
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    return pool.detach(s)
+
+
+@pytest.fixture
+def gw():
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2)
+    g = GatewayThread(sp, pump_interval=0.002)
+    yield g
+    g.stop()
+
+
+def _feed_jittery(client, audio, rnd):
+    pos = 0
+    while pos < audio.size:
+        n = int(rnd.integers(0, 3 * HOP + 1))
+        client.feed(audio[pos : pos + n])
+        pos += n
+
+
+def test_gateway_stream_bit_identical_to_inprocess(gw):
+    """Socket chunks in, bit-identical enhanced audio out."""
+    audio = _audio(1, 10)
+    expect = (audio.size // HOP) * HOP
+    with GatewayClient(*gw.address) as c:
+        sid = c.attach()
+        assert sid
+        _feed_jittery(c, audio, np.random.default_rng(0))
+        out = c.read_until(expect)
+        tail = c.detach()
+    got = np.concatenate([out, tail])
+    assert np.array_equal(got, _reference(audio)[: got.size])
+    assert got.size == expect
+
+
+def test_gateway_two_clients_interleaved(gw):
+    """Two connections multiplex onto the pool without cross-talk."""
+    a1, a2 = _audio(2, 8), _audio(3, 8)
+    e1, e2 = (a1.size // HOP) * HOP, (a2.size // HOP) * HOP
+    c1 = GatewayClient(*gw.address)
+    c2 = GatewayClient(*gw.address)
+    c1.attach("alice")
+    c2.attach("bob")
+    rnd = np.random.default_rng(1)
+    p1 = p2 = 0
+    while p1 < a1.size or p2 < a2.size:
+        n1 = int(rnd.integers(0, 2 * HOP)) if p1 < a1.size else 0
+        n2 = int(rnd.integers(0, 2 * HOP)) if p2 < a2.size else 0
+        c1.feed(a1[p1 : p1 + n1])
+        c2.feed(a2[p2 : p2 + n2])
+        p1, p2 = p1 + n1, p2 + n2
+    o1 = c1.read_until(e1)
+    o2 = c2.read_until(e2)
+    assert np.array_equal(o1, _reference(a1)[:e1])
+    assert np.array_equal(o2, _reference(a2)[:e2])
+    c1.close()
+    c2.close()
+
+
+def test_gateway_failover_mid_stream_bit_exact(gw):
+    """A shard dies while the client streams; the audio never notices."""
+    audio = _audio(4, 12)
+    expect = (audio.size // HOP) * HOP
+    with GatewayClient(*gw.address) as c:
+        sid = c.attach("failover-user")
+        rnd = np.random.default_rng(2)
+        pos = 0
+        killed = False
+        while pos < audio.size:
+            n = int(rnd.integers(1, 3 * HOP))
+            c.feed(audio[pos : pos + n])
+            pos += n
+            if not killed and pos > audio.size // 2:
+                gw.call(lambda p: p.kill_shard(p.route(sid)))
+                killed = True
+        assert killed
+        got = c.read_until(expect)
+        stats = c.stats()
+    assert np.array_equal(got, _reference(audio)[:expect])
+    assert stats["sessions_failed_over"] >= 1
+    assert any(not s["alive"] for s in stats["shards"])
+
+
+def test_gateway_drop_reconnect_adopts_session(gw):
+    """Severed connection, same id re-attached: nothing lost, bit-exact."""
+    audio = _audio(5, 10)
+    expect = (audio.size // HOP) * HOP
+    c1 = GatewayClient(*gw.address)
+    sid = c1.attach("roamer")
+    c1.feed(audio[: 5 * HOP])
+    c1.drop()  # no DETACH: the session is orphaned, keeps streaming
+    c2 = GatewayClient(*gw.address)
+    assert c2.attach("roamer") == sid
+    c2.feed(audio[5 * HOP :])
+    got = c2.read_until(expect)
+    assert np.array_equal(got, _reference(audio)[:expect])
+    c2.close()
+
+
+def test_gateway_duplicate_attach_rejected(gw):
+    """An id live on another connection cannot be stolen."""
+    c1 = GatewayClient(*gw.address)
+    c1.attach("owner")
+    c2 = GatewayClient(*gw.address)
+    with pytest.raises(SessionError, match="another live connection"):
+        c2.attach("owner")
+    # the rejected connection stays usable
+    assert c2.attach("someone-else")
+    c2.close()
+    c1.close()
+
+
+def test_gateway_lost_session_fails_loud_then_recovers(gw):
+    """Destructive shard loss: the client hears about it, then re-attaches."""
+    audio = _audio(6, 6)
+    with GatewayClient(*gw.address) as c:
+        sid = c.attach("doomed")
+        c.feed(audio)
+        gw.call(lambda p: p.kill_shard(p.route(sid), lose_state=True))
+        with pytest.raises(SessionError, match="lost"):
+            c.read()
+        stats = c.stats()
+        assert sid in stats["lost_session_ids"]
+        assert stats["sessions_lost"] >= 1
+        # bounded loss, not a poisoned connection: a fresh stream works
+        assert c.attach("doomed") == "doomed"
+        c.feed(audio)
+        expect = (audio.size // HOP) * HOP
+        assert np.array_equal(c.read_until(expect), _reference(audio)[:expect])
+
+
+def test_gateway_protocol_errors_keep_connection_alive(gw):
+    with GatewayClient(*gw.address) as c:
+        with pytest.raises(SessionError, match="ATTACH first"):
+            c.read()
+        c.attach()
+        with pytest.raises(SessionError, match="not float32"):
+            c._request(2, b"abc")  # 3 bytes: not a float32 array
+        # double attach on one connection is refused
+        with pytest.raises(SessionError, match="already serves"):
+            c._request(MSG_ATTACH, b"second")
+        audio = _audio(7, 4)
+        c.feed(audio)
+        expect = (audio.size // HOP) * HOP
+        assert np.array_equal(c.read_until(expect), _reference(audio)[:expect])
+
+
+def test_gateway_chaos_kills_and_drops(gw):
+    """The full chaos harness over sockets: kills + drops, all bit-exact."""
+    audios = {f"chaos-{i}": _audio(20 + i, 6 + i) for i in range(3)}
+    result = run_chaos_gateway(
+        gw,
+        audios,
+        _reference,
+        seed=4,
+        rounds=16,
+        kill_every=6,
+        restart_after=2,
+        drop_every=5,
+    )
+    assert result["kills"] >= 1
+    assert result["drops"] >= 2
+    assert result["lost"] == set()
+
+
+def test_gateway_orphan_ttl_reaps():
+    """An orphan past its TTL is detached by the pump loop."""
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2)
+    g = GatewayThread(sp, pump_interval=0.002, orphan_ttl=3)
+    try:
+        c = GatewayClient(*g.address)
+        c.attach("ephemeral")
+        c.drop()
+        deadline = 200
+        while g.gateway.orphans_reaped == 0 and deadline:
+            deadline -= 1
+            import time
+
+            time.sleep(0.01)
+        assert g.gateway.orphans_reaped == 1
+        assert g.call(lambda p: p.num_active) == 0
+        # the id is attachable again — as a FRESH session
+        c2 = GatewayClient(*g.address)
+        assert c2.attach("ephemeral") == "ephemeral"
+        c2.close()
+    finally:
+        g.stop()
