@@ -42,6 +42,16 @@ grow/shrink counts; the JSON artifact additionally gets a ``resizes``
 summary (counts + migration-pause ms) per backend — the numbers the
 ROADMAP's elastic-capacity item asks for.
 
+``--adaptive`` instead runs the **bursty-trace scheduler sweep**: the same
+seeded ragged burst arrivals (0..2*k_max hops per session per round, ~30%
+silent rounds) are served three ways — a static K=1 pool, a static K=k_max
+pool, and an adaptive pool (``AdaptiveScheduler`` picking per-dispatch K
+from measured backlog, device ingestion ring) — and the JSON gains
+``adaptive_vs_hops1`` / ``adaptive_vs_hops{k_max}`` scorecards (mean
+aggregate-RTF ratio and mean per-pump p50 ratio, matched on backend and
+session count). The claim under test: adaptive p50 pump latency tracks the
+K=1 fast path while bursty throughput tracks the deep static pool.
+
 ``--shards N`` instead sweeps SHARD COUNT at full per-shard load through
 ``ShardedSessionPool`` (one pool per device, overlapped ``pump_all``). If
 capacity scales linearly with devices, rt_capacity grows ~linearly in the
@@ -63,7 +73,8 @@ deploy path from rotting.
 Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
           [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
           [--buffering single,double] [--hops-per-step 1,4,8] [--ramp]
-          [--transport inproc,socket] [--tiers 4,16,64] [--smoke] [--json PATH]
+          [--adaptive] [--transport inproc,socket] [--tiers 4,16,64]
+          [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
@@ -90,6 +101,7 @@ from repro.serve import (  # noqa: E402
     SessionPool,
     ShardedSessionPool,
     make_stream_hop,
+    scheduler_for_pool,
 )
 
 
@@ -127,6 +139,58 @@ def run_point(pool: SessionPool, n_sessions: int, audio: np.ndarray) -> dict:
     }
 
 
+
+
+def run_bursty_point(pool: SessionPool, n_sessions: int, audio: np.ndarray,
+                     *, rounds: int, k_max: int, seed: int = 1234,
+                     sched=None) -> dict:
+    """One bursty-trace point: seeded ragged bursts, per-pump latency p50.
+
+    Every round feeds each session an independent burst of 0..2*k_max hops
+    (~30% of rounds are silent for a session) and pumps — with the adaptive
+    scheduler when ``sched`` is given, the static full-K pump otherwise.
+    The SAME ``seed`` drives every configuration, so adaptive and static
+    points see identical arrival sequences and the ratios compare schedules,
+    not workloads. p50/p95 are over per-PUMP wall times (what a caller's
+    event loop blocks on), aggregate RTF over the whole trace.
+    """
+    import random
+
+    rnd = random.Random(seed)
+    hop, sr = pool.cfg.hop, pool.sample_rate
+    sessions = [pool.attach() for _ in range(n_sessions)]
+    pool.step_seconds.clear()
+    pump_walls = []
+    wall = 0.0
+    for _ in range(rounds):
+        for i, s in enumerate(sessions):
+            if rnd.random() < 0.3:
+                continue  # silent round for this session
+            hops = rnd.randint(1, 2 * k_max)
+            pool.feed(s, audio[i % audio.shape[0]][: hops * hop])
+        t0 = time.perf_counter()
+        pool.pump(sched) if sched is not None else pool.pump()
+        dt = time.perf_counter() - t0
+        pump_walls.append(dt)
+        wall += dt
+    audio_sec = sum(s.stats.hops for s in sessions) * hop / sr
+    for s in sessions:
+        pool.detach(s)
+    rtf = wall / audio_sec if audio_sec else float("inf")
+    walls_ms = np.asarray(pump_walls) * 1e3
+    point = {
+        "sessions": n_sessions,
+        "aggregate_rtf": rtf,
+        "rt_capacity": 1.0 / rtf if rtf > 0 else float("inf"),
+        "p50_pump_ms": float(np.percentile(walls_ms, 50)),
+        "p95_pump_ms": float(np.percentile(walls_ms, 95)),
+        "rounds": rounds,
+    }
+    if sched is not None:
+        stats = sched.stats()
+        point["k_mean"] = stats["k_mean"]
+        point["k_max_seen"] = stats["k_max_seen"]
+    return point
 
 
 def run_socket_point(gw, n_sessions: int, audio: np.ndarray) -> dict:
@@ -335,7 +399,8 @@ def _csv_ints(raw: str, what: str) -> list:
     return sorted(set(vals))
 
 
-_SWEEP_AXES = ("backend", "buffering", "hops_per_step", "transport")
+_SWEEP_AXES = ("backend", "buffering", "hops_per_step", "transport",
+               "scheduler")
 
 
 def _ratio(points: list, key: str, a: str, b: str) -> dict:
@@ -351,6 +416,33 @@ def _ratio(points: list, key: str, a: str, b: str) -> dict:
               for p in points if p[key] == b and mk(p) in pa]
     return {"num_points": len(ratios),
             "mean_rtf_ratio": float(np.mean(ratios)) if ratios else None}
+
+
+def _adaptive_ratio(points: list, static_k: int) -> dict:
+    """Adaptive-vs-static ratios on the bursty sweep, matched on
+    (backend, sessions): mean aggregate-RTF ratio AND mean per-pump p50
+    ratio of the adaptive points against the static K=``static_k`` points
+    (< 1.0 = the adaptive schedule is cheaper on that metric)."""
+    base = {
+        (p["backend"], p["sessions"]): p
+        for p in points
+        if p.get("mode") == "bursty" and p["scheduler"] == "static"
+        and p["hops_per_step"] == static_k
+    }
+    rtf, p50 = [], []
+    for p in points:
+        if p.get("mode") != "bursty" or p["scheduler"] != "adaptive":
+            continue
+        ref = base.get((p["backend"], p["sessions"]))
+        if ref is None:
+            continue
+        rtf.append(p["aggregate_rtf"] / ref["aggregate_rtf"])
+        p50.append(p["p50_pump_ms"] / ref["p50_pump_ms"])
+    return {
+        "num_points": len(rtf),
+        "mean_rtf_ratio": float(np.mean(rtf)) if rtf else None,
+        "mean_p50_ratio": float(np.mean(p50)) if p50 else None,
+    }
 
 
 def main() -> None:
@@ -382,6 +474,13 @@ def main() -> None:
                     "inproc,socket — socket serves each point through a "
                     "localhost StreamingGateway (real TCP clients, framed "
                     "chunk protocol); sessions-sweep mode only")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="bursty-trace sweep comparing the self-tuning "
+                    "scheduler (AdaptiveScheduler + device ingestion ring) "
+                    "against static K=1 and static K=k_max pools on "
+                    "IDENTICAL seeded burst arrivals; the JSON gains "
+                    "adaptive_vs_hops1 / adaptive_vs_hops{k_max} ratios "
+                    "(aggregate RTF and per-pump p50)")
     ap.add_argument("--shards", type=int, default=0,
                     help="sweep ShardedSessionPool from 1 up to N shards at full "
                     "per-shard load (0 = single-pool sessions sweep); fake CPU "
@@ -416,6 +515,12 @@ def main() -> None:
     transports = _csv_list(args.transport, ("inproc", "socket"))
     if "socket" in transports and (args.ramp or args.shards > 0):
         raise SystemExit("--transport socket only sweeps in sessions mode")
+    if args.adaptive and (args.ramp or args.shards > 0):
+        raise SystemExit("--adaptive is its own mode: drop --ramp/--shards")
+    if args.adaptive and "socket" in transports:
+        raise SystemExit("--adaptive sweeps in-process pools only")
+    # the adaptive sweep's static reference depths: K=1 and the ceiling
+    adaptive_kmax = max(hops_sweep) if max(hops_sweep) > 1 else 8
     if args.repeats < 1:
         raise SystemExit("--repeats must be >= 1")
     if args.smoke:
@@ -427,6 +532,8 @@ def main() -> None:
             # only the hops{K}_vs_hops1 ratios need best-of-N stability;
             # don't quintuple the pallas-interpret smoke for other sweeps
             args.repeats = max(args.repeats, 5)
+        if args.adaptive:
+            args.repeats = max(args.repeats, 3)
         if args.ramp and args.tiers == "4,16,64":
             args.tiers = "2,4,8"  # CI-sized ladder, still two boundaries
     tiers = parse_tiers(args.tiers)
@@ -456,6 +563,8 @@ def main() -> None:
             "transports": transports,
             "shards_max": args.shards,
             "ramp": args.ramp,
+            "adaptive": args.adaptive,
+            "adaptive_k_max": adaptive_kmax if args.adaptive else None,
             "tiers": list(tiers) if args.ramp else None,
             "smoke": args.smoke,
             "hop_budget_ms": budget_ms,
@@ -500,6 +609,68 @@ def main() -> None:
                           f"grows={summary['grows']} shrinks={summary['shrinks']} "
                           f"max_pause={summary['max_pause_ms']:.2f}ms "
                           f"dropped={summary['dropped_sessions']}")
+    elif args.adaptive:
+        kmax = adaptive_kmax
+        rounds = 6 if args.smoke else 16
+        sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
+        print(f"# bursty adaptive sweep: k_max={kmax}, rounds={rounds}, "
+              f"backends={backends}, repeats={args.repeats}, "
+              f"quant={'fp10' if args.quant else 'fp32'}")
+        variants = [("static", 1), ("static", kmax), ("adaptive", kmax)]
+        combos = []
+        for backend in backends:
+            steps: dict = {}  # ONE step cache per backend: static keys are
+            # (k, None), adaptive ring keys (k, 2*kmax) — shared across
+            # variants and every interleaved repeat, no recompiles mid-sweep
+            for label, k in variants:
+                ring = 2 * kmax if label == "adaptive" else None
+                pool = SessionPool(
+                    params, cfg, capacity=args.capacity, quant=quant,
+                    backend=backend, hops_per_step=k, ingest_ring=ring,
+                    step_fns=steps,
+                )
+                # warm every lane depth this variant can pick OUTSIDE the
+                # timed points (the adaptive pool compiles its whole ladder)
+                ladder = (
+                    scheduler_for_pool(k).config.k_ladder
+                    if label == "adaptive" else (k,)
+                )
+                w = pool.attach()
+                for kk in ladder:
+                    pool.feed(w, audio[0][: kk * cfg.hop])
+                    pool.pump(scheduler_for_pool(k)
+                              if label == "adaptive" else None)
+                pool.detach(w)
+                combos.append((backend, label, k, pool))
+        # interleaved best-of-N, exactly like the sessions sweep: every
+        # variant sees the same seeded arrival trace on every repeat
+        best = {}
+        for _ in range(args.repeats):
+            for backend, label, k, pool in combos:
+                for n in sweep:
+                    sched = (scheduler_for_pool(k)
+                             if label == "adaptive" else None)
+                    r = run_bursty_point(pool, n, audio, rounds=rounds,
+                                         k_max=kmax, sched=sched)
+                    key = (backend, label, k, n)
+                    if key not in best or r["aggregate_rtf"] < best[key]["aggregate_rtf"]:
+                        best[key] = r
+        for backend, label, k, _pool in combos:
+            for n in sweep:
+                r = best[(backend, label, k, n)]
+                r.update(mode="bursty", backend=backend, buffering="single",
+                         hops_per_step=k, transport="inproc", scheduler=label)
+                points.append(r)
+                emit(
+                    f"backend={backend} scheduler={label} hops={k} "
+                    f"sessions={n}",
+                    r["p50_pump_ms"] * 1e3,
+                    f"aggregate_rtf={r['aggregate_rtf']:.3f} "
+                    f"p95_pump_ms={r['p95_pump_ms']:.2f}"
+                    + (f" k_mean={r['k_mean']:.2f}"
+                       f" k_max_seen={r['k_max_seen']}"
+                       if label == "adaptive" else ""),
+                )
     elif args.shards > 0:
         print(f"# shard sweep up to {args.shards}, capacity/shard={args.capacity}, "
               f"audio/session={args.seconds}s, backends={backends}, "
@@ -615,19 +786,41 @@ def main() -> None:
         # pump loop) relative to direct pool calls on the same host
         comparisons["socket_vs_inproc"] = _ratio(points, "transport", "inproc", "socket")
     for k in hops_sweep:
-        if k != 1 and 1 in hops_sweep:
+        if k != 1 and 1 in hops_sweep and not args.adaptive:
             # < 1.0 means the fused path lowered aggregate RTF (a speedup of
             # 1/ratio); the acceptance bar for K=8 on a backlogged CPU smoke
             # run is <= 1/1.5
             comparisons[f"hops{k}_vs_hops1"] = _ratio(
                 points, "hops_per_step", 1, k)
+    if args.adaptive:
+        # the self-tuning scheduler's scorecard: against the always-shallow
+        # static pool (throughput headroom) and against the always-deep one
+        # (p50 pump latency), on the SAME seeded bursty arrivals
+        comparisons["adaptive_vs_hops1"] = _adaptive_ratio(points, 1)
+        comparisons[f"adaptive_vs_hops{adaptive_kmax}"] = _adaptive_ratio(
+            points, adaptive_kmax)
     result["comparisons"] = comparisons
 
     out_path = Path(args.json)
     out_path.write_text(json.dumps(result, indent=2) + "\n", encoding="utf-8")
     print(f"# wrote {out_path} ({len(points)} points)")
 
-    if args.smoke:
+    if args.smoke and args.adaptive:
+        # CI contract for the adaptive sweep: both scorecard ratios must be
+        # populated (num_points and both metric means), else the sweep
+        # silently lost a configuration
+        for name in ("adaptive_vs_hops1", f"adaptive_vs_hops{adaptive_kmax}"):
+            ratio = comparisons[name]
+            if (not ratio["num_points"] or ratio["mean_rtf_ratio"] is None
+                    or ratio["mean_p50_ratio"] is None):
+                raise SystemExit(
+                    f"smoke: {name} comparison is empty — adaptive points "
+                    "found no matching static points"
+                )
+            print(f"# {name}: rtf_ratio={ratio['mean_rtf_ratio']:.3f} "
+                  f"p50_ratio={ratio['mean_p50_ratio']:.3f} "
+                  f"({ratio['num_points']} matched points)")
+    if args.smoke and not args.adaptive:
         # CI contract: a smoke sweep must actually produce the comparison
         # fields it claims (an empty ratio means the sweep silently skipped
         # a configuration)

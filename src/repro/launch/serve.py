@@ -84,6 +84,24 @@ def parse_tiers(raw: str) -> tuple:
         raise SystemExit(f"--tiers must be a comma list of ints, got {raw!r}")
 
 
+def adaptive_setup(args):
+    """``--adaptive`` wiring shared by the pool/sharded/gateway tasks.
+
+    Returns ``(hops_per_step, scheduler-or-None, extra pool kwargs)``: the
+    fused-dispatch ceiling the controller may use (the given
+    ``--hops-per-step`` when fused, else 8), a fresh ``AdaptiveScheduler``
+    for single-pool tasks, and the device-ingestion-ring kwarg.
+    """
+    if not args.adaptive:
+        return args.hops_per_step, None, {}
+    from repro.serve import scheduler_for_pool
+    from repro.serve.scheduler import ring_depth_for
+
+    kmax = args.hops_per_step if args.hops_per_step > 1 else 8
+    sched = scheduler_for_pool(kmax)
+    return kmax, sched, {"ingest_ring": ring_depth_for(sched.config)}
+
+
 def serve_pool(args) -> None:
     """Multi-session server: --batch concurrent streams through one
     SessionPool (or an ElasticSessionPool tier ladder with --elastic)."""
@@ -96,26 +114,29 @@ def serve_pool(args) -> None:
     if args.reduced:
         cfg = reduced_cfg(cfg)
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    kmax, sched, extra = adaptive_setup(args)
     if args.elastic:
         # starts at the smallest tier and grows as sessions attach
         pool = ElasticSessionPool(params, cfg, parse_tiers(args.tiers),
                                   quant=FP10 if args.quant else None,
                                   backend=args.backend, prune_keep=args.prune_keep,
                                   inflight=2 if args.double_buffer else 1,
-                                  hops_per_step=args.hops_per_step)
+                                  hops_per_step=kmax, **extra)
     else:
         pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
                            quant=FP10 if args.quant else None,
                            backend=args.backend, prune_keep=args.prune_keep,
                            inflight=2 if args.double_buffer else 1,
-                           hops_per_step=args.hops_per_step)
+                           hops_per_step=kmax, **extra)
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
     sessions = [pool.attach() for _ in range(args.batch)]
     for i, s in enumerate(sessions):
         pool.feed(s, audio[i])
-    pool.pump()
+    pool.pump(sched)
     print(pool.report())
+    if sched is not None:
+        print(f"scheduler: {sched.stats()}")
     for s in sessions:
         pool.detach(s)
 
@@ -134,14 +155,17 @@ def serve_sharded(args) -> None:
     n_dev = len(jax.local_devices())
     per_shard = max(1, -(-args.batch // args.shards))  # ceil; hash skew absorbed below
     tiers = parse_tiers(args.tiers) if args.elastic else None
+    kmax, _, extra = adaptive_setup(args)
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, prune_keep=args.prune_keep,
                               inflight=2 if args.double_buffer else 1,
-                              hops_per_step=args.hops_per_step,
-                              tiers=tiers)
+                              hops_per_step=kmax,
+                              tiers=tiers, adaptive=args.adaptive or None,
+                              **extra)
     slots = f"tiers {tiers}" if args.elastic else f"{per_shard} slots"
-    print(f"{args.shards} shards x {slots} over {n_dev} local device(s)")
+    print(f"{args.shards} shards x {slots} over {n_dev} local device(s)"
+          + (" [adaptive]" if args.adaptive else ""))
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
     audio = jnp.asarray(noisy)
     # rebalance_on_full: consistent hashing is not perfectly uniform, so a
@@ -177,12 +201,14 @@ def serve_gateway(args) -> None:
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     per_shard = max(2, -(-args.batch // args.shards))
     tiers = parse_tiers(args.tiers) if args.elastic else None
+    kmax, _, extra = adaptive_setup(args)
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, prune_keep=args.prune_keep,
                               inflight=2 if args.double_buffer else 1,
-                              hops_per_step=args.hops_per_step,
-                              tiers=tiers)
+                              hops_per_step=kmax,
+                              tiers=tiers, adaptive=args.adaptive or None,
+                              **extra)
     gateway = StreamingGateway(pool, host=args.host, port=args.port)
 
     async def _serve() -> None:
@@ -242,6 +268,13 @@ def main() -> None:
                     "drain up to K hops per session per device call "
                     "(scan-batched step, bit-identical to K=1; amortizes "
                     "the per-hop dispatch overhead for backlogged sessions)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="pool/sharded/gateway tasks: closed-loop scheduling "
+                    "— per-dispatch K from measured backlog (deep fused "
+                    "lanes only for lagging sessions), slope-triggered tier "
+                    "growth and cost-modeled shrink on elastic pools, plus "
+                    "a device-resident ingestion ring; decisions are "
+                    "recorded and replayable")
     ap.add_argument("--prune-keep", type=float, default=None,
                     help="pool/sharded tasks with --backend pallas: keep-"
                     "fraction for the deploy-time zero-skipping weight masks "

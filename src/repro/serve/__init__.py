@@ -8,7 +8,10 @@ masks, FP10 weights, Pallas kernels — ``backend="pallas"``);
 ``elastic_pool`` grows/shrinks a pool along pre-compiled capacity tiers with
 live bit-exact session migration; ``sharded_pool`` runs one pool per device
 behind a consistent-hash router (optionally with elastic shards) with shard
-health-checks and ticket-based failover; ``wire`` is the versioned binary
+health-checks and ticket-based failover; ``scheduler`` closes the control
+loop (per-dispatch K from measured backlog, slope-triggered tier growth,
+cost-modeled shrink — every decision a pure function of an explicit
+observation, so traces replay); ``wire`` is the versioned binary
 form of ``SessionTicket`` (bit-exact round-trip — the cross-process
 contract); ``gateway`` is the network front door (asyncio socket server +
 client speaking a chunked streaming protocol over the sharded pool).
@@ -28,6 +31,16 @@ from repro.serve.gateway import (  # noqa: F401
     GatewayClient,
     GatewayThread,
     StreamingGateway,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    AdaptiveScheduler,
+    SchedulerConfig,
+    SchedulerDecision,
+    SchedulerObservation,
+    SchedulerState,
+    decide,
+    ring_depth_for,
+    scheduler_for_pool,
 )
 from repro.serve.session_server import (  # noqa: F401
     PoolFullError,

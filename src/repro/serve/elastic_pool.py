@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
+from repro.serve.scheduler import SchedulerDecision, SchedulerObservation
 from repro.serve.session_server import (
     PoolFullError,
     Session,
@@ -60,7 +61,7 @@ from repro.serve.session_server import (
     SessionPool,
     SessionTicket,
 )
-from repro.serve.streaming_se import init_stream, make_stream_hop
+from repro.serve.streaming_se import init_stream
 
 Pytree = dict
 
@@ -122,7 +123,16 @@ class ElasticSessionPool:
             ever pays a jit compile. Off by default (tests construct many
             pools); the ramp benchmark turns it on.
         step_fn: pre-built hop step shared with other pools (see
-            ``SessionPool``); built via ``make_stream_hop`` when omitted.
+            ``SessionPool``); seeds the default lane-count entry of the
+            shared step cache when given.
+        step_fns: shared compiled-step cache forwarded to every tier's
+            ``SessionPool`` (ONE dict for the whole ladder — and, via the
+            router, for a whole fleet): each ``(max_hops, ingest_ring)``
+            lane count the adaptive scheduler explores compiles once per
+            batch shape, ever.
+        ingest_ring: device-resident ingestion ring depth forwarded to every
+            tier (see ``SessionPool``); ring backlogs migrate bit-exactly
+            across tiers through the same ``SessionTicket`` seam.
 
     Raises:
         ValueError: empty/non-increasing ``tiers``, bad ``shrink_fraction``.
@@ -149,6 +159,8 @@ class ElasticSessionPool:
         shrink_patience: int = 8,
         prewarm: bool = False,
         step_fn=None,
+        step_fns: Optional[Dict[Any, Any]] = None,
+        ingest_ring: Optional[int] = None,
     ) -> None:
         tiers = tuple(int(t) for t in tiers)
         if not tiers:
@@ -189,17 +201,14 @@ class ElasticSessionPool:
         if device is not None:
             params = jax.device_put(params, device)
         self._params = params
-        # ONE step callable for every tier: jit specializes per (capacity,)
-        # batch shape, so each tier costs one compilation, ever.
-        self._step = (
-            step_fn
-            if step_fn is not None
-            else make_stream_hop(
-                params, cfg, quant=quant, donate=donate, backend=backend,
-                prune_keep=prune_keep, prune_axis=prune_axis,
-                max_hops_per_step=hops_per_step,
-            )
-        )
+        self._prune_keep = prune_keep
+        self._prune_axis = prune_axis
+        self._ingest_ring = ingest_ring
+        # ONE step cache for every tier: jit specializes per (capacity,)
+        # batch shape and pools fill one entry per lane count on demand, so
+        # each (lane count, tier shape) costs one compilation, ever.
+        self._step_fns: Dict[Any, Any] = step_fns if step_fns is not None else {}
+        self._step_fn_seed = step_fn
         self._pool = self._make_pool(tiers[0])
         self._handles: Dict[int, ElasticSession] = {}
         self._sid_counter = itertools.count()
@@ -231,26 +240,37 @@ class ElasticSessionPool:
             max_unread_hops=self._max_unread_hops,
             on_unparked=self._on_unparked,
             hops_per_step=self.hops_per_step,
-            step_fn=self._step,
+            prune_keep=self._prune_keep,
+            prune_axis=self._prune_axis,
+            step_fn=self._step_fn_seed,
+            step_fns=self._step_fns,
+            ingest_ring=self._ingest_ring,
         )
 
     def _prewarm(self) -> None:
         """Compile every tier's batch shape now (one masked-out step each),
         so a serving-path resize never stalls on jit."""
-        hop, K = self.cfg.hop, self.hops_per_step
+        hop, K, R = self.cfg.hop, self.hops_per_step, self._ingest_ring
+        step = self._pool._step_for(K)
         for cap in self.tiers:
             state = init_stream(self._params, self.cfg, cap)
-            if K == 1:
-                hops = np.zeros((cap, hop), np.float32)
-                active = np.zeros((cap,), bool)
+            lanes = (
+                np.zeros((cap,), bool) if K == 1 else np.zeros((cap,), np.int32)
+            )
+            if R is not None:  # ring form: gather lanes from the device ring
+                inputs = (
+                    np.zeros((cap, R, hop), np.float32),
+                    np.zeros((cap,), np.int32),
+                    lanes,
+                )
+            elif K == 1:
+                inputs = (np.zeros((cap, hop), np.float32), lanes)
             else:  # fused step: packed lanes + per-slot hop counts
-                hops = np.zeros((cap, K, hop), np.float32)
-                active = np.zeros((cap,), np.int32)
+                inputs = (np.zeros((cap, K, hop), np.float32), lanes)
             if self.device is not None:
                 state = jax.device_put(state, self.device)
-                hops = jax.device_put(hops, self.device)
-                active = jax.device_put(active, self.device)
-            new_state, out = self._step(state, hops, active)
+                inputs = tuple(jax.device_put(x, self.device) for x in inputs)
+            new_state, out = step(state, *inputs)
             jax.block_until_ready(out)
             del new_state  # donated dummy state; the live pool keeps its own
 
@@ -437,7 +457,47 @@ class ElasticSessionPool:
 
     # -- the batched hop loop ------------------------------------------------
 
-    def dispatch(self) -> int:
+    def observation(self) -> SchedulerObservation:
+        """The inner pool's snapshot plus the elastic tier context.
+
+        Adds what the scheduler's grow/shrink policy needs: the tier ladder
+        position, the next-lower tier's capacity, and the measured mean
+        migration pause (the cost side of the shrink cost model) — all pure
+        data, so recorded traces replay deterministically.
+        """
+        obs = self._pool.observation()
+        i = self.tier_index
+        pause_ms = (
+            float(np.mean(self.resize_seconds)) * 1e3
+            if self.resize_seconds else 0.0
+        )
+        return dataclasses.replace(
+            obs,
+            tier_index=i,
+            n_tiers=len(self.tiers),
+            lower_capacity=self.tiers[i - 1] if i > 0 else 0,
+            mean_pause_ms=pause_ms,
+        )
+
+    def apply_decision(self, decision: SchedulerDecision) -> bool:
+        """Act on the grow/shrink component of a scheduler decision.
+
+        Grow climbs one tier immediately — the EWMA slope trigger fires
+        BEFORE attach-overflow would have forced it. Shrink drops one tier
+        only when every live session still fits in it (the scheduler's cost
+        model already gated on occupancy, slope, patience, and the measured
+        migration pause vs freed slots). Returns True iff a resize happened.
+        """
+        if decision.grow:
+            return self._grow()
+        if decision.shrink:
+            i = self.tier_index
+            if i > 0 and self.num_active <= self.tiers[i - 1]:
+                self._resize(self.tiers[i - 1])
+                return True
+        return False
+
+    def dispatch(self, max_hops: Optional[int] = None) -> int:
         """Non-blocking batched step launch (see ``SessionPool.dispatch``).
 
         No resize can happen between a ``dispatch()`` and its ``collect()``
@@ -445,7 +505,7 @@ class ElasticSessionPool:
         ``pump``/``step``/``try_shrink`` (shrink), and ``_resize`` drains the
         pipeline first regardless.
         """
-        return self._pool.dispatch()
+        return self._pool.dispatch(max_hops=max_hops)
 
     def wait_ready(self) -> None:
         self._pool.wait_ready()
@@ -458,9 +518,29 @@ class ElasticSessionPool:
         self.try_shrink()
         return n
 
-    def pump(self) -> int:
-        steps = self._pool.pump()
-        self.try_shrink()
+    def pump(self, scheduler=None) -> int:
+        """Drain every eligible hop; optionally under adaptive control.
+
+        Without a scheduler this is the legacy heartbeat: full-K dispatches
+        plus the watermark/patience shrink check. With an
+        ``AdaptiveScheduler`` every iteration observes, decides, applies the
+        grow/shrink component (``apply_decision``), and dispatches at the
+        decided lane count — the watermark check is NOT run, because the
+        decision trace replaces it (and must stay replayable).
+        """
+        if scheduler is None:
+            steps = self._pool.pump()
+            self.try_shrink()
+            return steps
+        steps = 0
+        while True:
+            decision = scheduler.observe(self.observation())
+            self.apply_decision(decision)
+            k = min(decision.k, self.hops_per_step)
+            if not self._pool.dispatch(max_hops=k):
+                break
+            steps += 1
+        self._pool.collect()
         return steps
 
     # -- migration seam (elastic shards) --------------------------------------

@@ -281,6 +281,11 @@ class StreamingGateway:
                 "active": self.pool.num_active,
                 "orphans": len(self._orphans),
             }
+            sched_stats = getattr(self.pool, "scheduler_stats", None)
+            if sched_stats is not None:
+                scheds = sched_stats()
+                if scheds is not None:  # adaptive fleet: expose the traces
+                    stats["scheduler"] = scheds
             return MSG_STATS_REPLY, json.dumps(stats).encode("utf-8"), sid
         # everything below needs a live session on this connection
         if sid is None:

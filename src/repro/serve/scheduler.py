@@ -1,0 +1,341 @@
+"""Self-tuning scheduler: backlog-driven adaptive dispatch for the serving stack.
+
+The paper's accelerator meets real time at a fixed 62.5 MHz budget because its
+workload is static — one stream, one hop, every 16 ms. The serving stack
+faces jittery variable-sized chunks instead, and until this module every
+scheduling knob was a static flag: ``hops_per_step=K`` (deep fused lanes for
+everyone, ~10 ms p50 per pump even when nobody lags), the elastic tier
+ladder (grow only on attach-overflow, after the pressure already hit), and
+``max_unread_hops`` parking. ``AdaptiveScheduler`` closes the control loop:
+
+- **Per-dispatch K from measured backlog** — each pump iteration picks the
+  fused-dispatch depth from the deepest *eligible* per-slot backlog (clipped
+  to the parking headroom), rounded up onto a small power-of-two ladder
+  ``1, 2, 4, ... k_max`` so at most ``log2(k_max)+1`` step shapes ever
+  compile. When nobody lags the choice is the K=1 fast path; deep lanes are
+  spent only on sessions that actually queued them.
+- **Tier growth on backlog slope** — an EWMA estimator tracks the level and
+  the first difference (slope) of the total backlog; a sustained positive
+  slope at high occupancy grows the elastic pool BEFORE attach-overflow
+  forces it mid-burst.
+- **Shrink cost model** — shrinking is proposed only when the measured
+  migration pause (``ElasticSessionPool.resize_seconds``, milliseconds) is
+  worth the freed idle-tier slots: ``mean_pause_ms <=
+  slot_value_ms * (capacity - lower_capacity)``, on top of the occupancy
+  watermark, a calm slope, and a patience streak (hysteresis against
+  oscillation).
+
+**Every decision is a pure function of an explicit snapshot.** ``decide``
+takes ``(SchedulerConfig, SchedulerState, SchedulerObservation)`` and returns
+``(SchedulerDecision, SchedulerState)`` — no clocks, no pool references, no
+hidden state. ``AdaptiveScheduler`` merely threads the state and records the
+``(observation, decision)`` trace, so the same trace replays to the same
+decisions (``AdaptiveScheduler.replay``), a static pool can re-drive the
+recorded K sequence bit-exactly (the hypothesis property in
+``tests/test_scheduler.py``), and the virtual-clock simulator
+(``tests/sched_sim.py``) exercises the controller open-loop with no real
+pools at all.
+
+Wiring: ``SessionPool.pump(scheduler)`` consults a scheduler per dispatch;
+``ElasticSessionPool.pump(scheduler)`` additionally applies grow/shrink
+decisions (at most one tier move per decision);
+``ShardedSessionPool(adaptive=...)`` runs one scheduler per shard inside
+``pump_all``; ``launch/serve.py --adaptive`` turns it all on, together with
+the device-resident ingestion ring that makes per-pump re-tuning cheap
+(``SessionPool(ingest_ring=...)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Controller constants. Frozen: a config never changes mid-trace.
+
+    Args:
+        k_max: deepest fused-dispatch depth the scheduler may pick. Must not
+            exceed the pool's compiled ``hops_per_step``. The K ladder is
+            the powers of two up to ``k_max`` (plus ``k_max`` itself), so
+            the number of distinct compiled step shapes is bounded.
+        ewma_alpha: smoothing factor in (0, 1] for the backlog level/slope
+            estimators (higher = faster reaction, noisier).
+        grow_slope: grow a tier when the EWMA backlog slope (hops per
+            observation) exceeds this AND occupancy is high (below).
+        grow_occupancy: occupancy fraction of the current tier at/above
+            which a rising backlog is capacity pressure rather than a lone
+            lagging session (growing for one straggler wastes a tier).
+        shrink_fraction: occupancy watermark relative to the NEXT LOWER
+            tier, as in ``ElasticSessionPool``: shrink-eligible only while
+            ``num_active <= shrink_fraction * lower_capacity``.
+        shrink_slope: backlog slope must be at or below this to shrink
+            (default 0.0 — never shrink into a growing backlog).
+        shrink_patience: consecutive shrink-eligible decisions required
+            before a shrink is actually proposed (hysteresis).
+        slot_value_ms: the shrink cost model's exchange rate — how many
+            milliseconds of one-off migration pause one freed idle-tier
+            slot is worth. A shrink is proposed only when
+            ``mean_pause_ms <= slot_value_ms * freed_slots``.
+
+    Raises:
+        ValueError: out-of-range constants.
+    """
+
+    k_max: int = 8
+    ewma_alpha: float = 0.5
+    grow_slope: float = 0.5
+    grow_occupancy: float = 0.75
+    shrink_fraction: float = 0.5
+    shrink_slope: float = 0.0
+    shrink_patience: int = 4
+    slot_value_ms: float = 5.0
+
+    def __post_init__(self) -> None:
+        if self.k_max < 1:
+            raise ValueError("k_max must be >= 1")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if not 0.0 < self.shrink_fraction <= 1.0:
+            raise ValueError("shrink_fraction must be in (0, 1]")
+        if not 0.0 <= self.grow_occupancy <= 1.0:
+            raise ValueError("grow_occupancy must be in [0, 1]")
+        if self.shrink_patience < 1:
+            raise ValueError("shrink_patience must be >= 1")
+        if self.slot_value_ms < 0:
+            raise ValueError("slot_value_ms must be >= 0")
+
+    @property
+    def k_ladder(self) -> Tuple[int, ...]:
+        """The admissible K values: powers of two up to (and incl.) k_max."""
+        ladder = []
+        k = 1
+        while k < self.k_max:
+            ladder.append(k)
+            k *= 2
+        ladder.append(self.k_max)
+        return tuple(ladder)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerState:
+    """The controller's whole memory between decisions (explicit, frozen).
+
+    ``decide`` maps (config, state, observation) -> (decision, new state);
+    replaying a trace from ``SchedulerState()`` reproduces every decision.
+    """
+
+    level: float = 0.0  # EWMA of total backlog hops
+    slope: float = 0.0  # EWMA of the backlog first difference
+    prev_total: int = 0  # last observed raw total (for the next difference)
+    seeded: bool = False  # False until the first observation primes the EWMA
+    low_streak: int = 0  # consecutive shrink-eligible decisions (hysteresis)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerObservation:
+    """One measured snapshot of a pool — everything a decision may depend on.
+
+    Produced by ``SessionPool.observation()`` /
+    ``ElasticSessionPool.observation()``; JSON-safe (tuples and scalars), so
+    traces serialize for offline replay.
+
+    Args:
+        backlogs: per-ACTIVE-slot whole hops queued but not yet dispatched
+            (host ring + device ingestion ring).
+        headrooms: per-active-slot remaining unread-output headroom under
+            ``max_unread_hops`` (aligned with ``backlogs``), or ``None``
+            when the pool is unbounded.
+        num_active: attached sessions.
+        capacity: current tier capacity (fixed capacity for plain pools).
+        tier_index / n_tiers: position on the elastic ladder (0 of 1 for
+            fixed pools — grow/shrink then never fire).
+        lower_capacity: capacity of the next tier down (0 at the bottom).
+        mean_pause_ms: measured mean migration pause of past resizes
+            (0.0 before any resize — first shrink is assumed cheap until
+            measured otherwise).
+    """
+
+    backlogs: Tuple[int, ...]
+    headrooms: Optional[Tuple[int, ...]] = None
+    num_active: int = 0
+    capacity: int = 0
+    tier_index: int = 0
+    n_tiers: int = 1
+    lower_capacity: int = 0
+    mean_pause_ms: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerDecision:
+    """What one observation bought: a dispatch depth and at most one tier
+    move (``grow`` and ``shrink`` are mutually exclusive by construction)."""
+
+    k: int
+    grow: bool = False
+    shrink: bool = False
+
+
+def _ladder_round_up(depth: int, ladder: Sequence[int]) -> int:
+    """Smallest ladder value >= depth (the ladder top when depth exceeds it)."""
+    for k in ladder:
+        if k >= depth:
+            return k
+    return ladder[-1]
+
+
+def decide(
+    config: SchedulerConfig,
+    state: SchedulerState,
+    obs: SchedulerObservation,
+) -> Tuple[SchedulerDecision, SchedulerState]:
+    """THE control law — a pure function, the seam every test drives.
+
+    Given the same (config, state, obs) this returns the same (decision,
+    state'), with no reads of clocks, globals, or pools: determinism and
+    replayability are structural, not best-effort.
+
+    Returns:
+        ``(decision, new_state)``. ``decision.k`` is always on
+        ``config.k_ladder``; ``decision.grow``/``decision.shrink`` request at
+        most ONE tier move (the pool applies it if legal).
+    """
+    # -- EWMA level + slope of the total backlog ----------------------------
+    total = int(sum(obs.backlogs))
+    a = config.ewma_alpha
+    if not state.seeded:
+        level, slope = float(total), 0.0
+    else:
+        level = (1.0 - a) * state.level + a * total
+        slope = (1.0 - a) * state.slope + a * (total - state.prev_total)
+
+    # -- K: deepest ELIGIBLE backlog, rounded up the power-of-two ladder ----
+    # Eligible depth = what a dispatch could actually take from the slot:
+    # its backlog clipped to its parking headroom. A slot at headroom 0 is
+    # parked regardless of K, so it must not inflate the chosen depth.
+    if obs.headrooms is None:
+        eligible = obs.backlogs
+    else:
+        eligible = tuple(
+            min(b, max(h, 0)) for b, h in zip(obs.backlogs, obs.headrooms)
+        )
+    deepest = max(eligible, default=0)
+    k = 1 if deepest <= 1 else _ladder_round_up(deepest, config.k_ladder)
+
+    # -- grow: rising backlog at high occupancy, below the top tier ---------
+    grow = (
+        obs.tier_index + 1 < obs.n_tiers
+        and obs.num_active >= config.grow_occupancy * max(obs.capacity, 1)
+        and slope > config.grow_slope
+    )
+
+    # -- shrink: watermark + calm slope + cost model + patience -------------
+    freed = obs.capacity - obs.lower_capacity
+    eligible_shrink = (
+        not grow
+        and obs.tier_index > 0
+        and obs.num_active <= config.shrink_fraction * obs.lower_capacity
+        and slope <= config.shrink_slope
+        and obs.mean_pause_ms <= config.slot_value_ms * max(freed, 0)
+    )
+    low_streak = state.low_streak + 1 if eligible_shrink else 0
+    shrink = eligible_shrink and low_streak >= config.shrink_patience
+    if shrink:
+        low_streak = 0
+
+    decision = SchedulerDecision(k=k, grow=grow, shrink=shrink)
+    new_state = SchedulerState(
+        level=level,
+        slope=slope,
+        prev_total=total,
+        seeded=True,
+        low_streak=low_streak,
+    )
+    return decision, new_state
+
+
+class AdaptiveScheduler:
+    """Stateful wrapper threading ``decide`` over a live pool's observations.
+
+    Owns nothing but a ``SchedulerConfig``, the current ``SchedulerState``,
+    and the ``(observation, decision)`` trace. The pools call
+    ``observe(pool.observation())`` once per pump iteration and obey the
+    returned decision; the trace is the replay/debug artifact.
+
+    Args:
+        config: controller constants (defaults are the serving defaults).
+    """
+
+    def __init__(self, config: Optional[SchedulerConfig] = None) -> None:
+        self.config = config or SchedulerConfig()
+        self.state = SchedulerState()
+        self.trace: List[Tuple[SchedulerObservation, SchedulerDecision]] = []
+
+    def observe(self, obs: SchedulerObservation) -> SchedulerDecision:
+        """Advance the controller by one observation; record and return the
+        decision."""
+        decision, self.state = decide(self.config, self.state, obs)
+        self.trace.append((obs, decision))
+        return decision
+
+    @staticmethod
+    def replay(
+        config: SchedulerConfig, observations: Sequence[SchedulerObservation]
+    ) -> List[SchedulerDecision]:
+        """Re-derive the decision sequence for a recorded observation trace.
+
+        Because ``decide`` is pure and ``SchedulerState()`` is the fixed
+        start, this reproduces a live run's decisions exactly — the
+        determinism contract ``tests/test_scheduler.py`` pins.
+        """
+        state = SchedulerState()
+        out = []
+        for obs in observations:
+            decision, state = decide(config, state, obs)
+            out.append(decision)
+        return out
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """JSON-safe controller counters for ``shard_stats()`` / STATS."""
+        ks = [d.k for _, d in self.trace]
+        return {
+            "decisions": len(self.trace),
+            "k_last": ks[-1] if ks else 0,
+            "k_mean": float(sum(ks) / len(ks)) if ks else 0.0,
+            "k_max_seen": max(ks, default=0),
+            "grow_decisions": sum(1 for _, d in self.trace if d.grow),
+            "shrink_decisions": sum(1 for _, d in self.trace if d.shrink),
+            "backlog_level": self.state.level,
+            "backlog_slope": self.state.slope,
+            "k_ladder": list(self.config.k_ladder),
+        }
+
+
+def ring_depth_for(config: SchedulerConfig) -> int:
+    """Default device-ingestion-ring depth for an adaptive pool: two full
+    ``k_max`` dispatches of headroom, so a burst rarely overflows to the
+    host path mid-pump."""
+    return max(2 * config.k_max, 4)
+
+
+def scheduler_for_pool(hops_per_step: int, **overrides) -> "AdaptiveScheduler":
+    """An ``AdaptiveScheduler`` whose K ladder tops out at the pool's
+    compiled ``hops_per_step`` (a decision deeper than the packed staging
+    buffer could never be obeyed)."""
+    cfg = SchedulerConfig(k_max=max(1, hops_per_step), **overrides)
+    return AdaptiveScheduler(cfg)
+
+
+__all__ = [
+    "AdaptiveScheduler",
+    "SchedulerConfig",
+    "SchedulerDecision",
+    "SchedulerObservation",
+    "SchedulerState",
+    "decide",
+    "ring_depth_for",
+    "scheduler_for_pool",
+]

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
+from repro.serve.scheduler import SchedulerObservation
 from repro.serve.streaming_se import (
     StreamState,
     init_stream,
@@ -67,6 +68,24 @@ from repro.serve.streaming_se import (
 )
 
 Pytree = dict
+
+
+@jax.jit
+def _ring_write(ring, slot, start, block, n):
+    """Write ``block[:n]`` whole hops into one slot's device ingestion ring
+    at positions ``(start + i) % R``.
+
+    Fixed shapes by construction — ``block`` is always (R, hop) with lanes
+    >= ``n`` masked out, and the scalars are traced (not static) — so every
+    ``feed()`` hits ONE compilation regardless of chunk size or position.
+    The ring is NOT donated: an in-flight pipelined step may still be
+    reading the superseded array (functional update keeps it alive).
+    """
+    R = ring.shape[1]
+    idx = (start + jnp.arange(R)) % R
+    live = (jnp.arange(R) < n)[:, None]
+    cur = ring[slot][idx]
+    return ring.at[slot, idx].set(jnp.where(live, block, cur))
 
 
 class SessionError(RuntimeError):
@@ -266,11 +285,29 @@ class SessionPool:
             step this way — the router uses it so co-located shards don't
             pay N identical XLA compilations. The caller is responsible for
             the match.
+        step_fns: a dict to cache compiled steps in, keyed by
+            ``(max_hops, ingest_ring)``. The pool builds steps lazily per
+            lane count (``dispatch(max_hops=k)``, the adaptive scheduler's
+            seam) and looks them up here first; pass ONE shared dict to
+            pools that share device/params/config/quant/backend so a
+            scheduler exploring K values compiles each lane count once per
+            fleet, not once per pool. ``step_fn`` (if also given) seeds the
+            ``(hops_per_step, ingest_ring)`` entry.
+        ingest_ring: depth (in hops) of the **device-resident ingestion
+            ring**, or ``None`` (default) for the classic host staging
+            path. With a ring, every whole hop a ``feed()`` completes is
+            shipped to the device immediately (one fixed-shape jitted
+            scatter per feed) and ``dispatch()`` gathers up to K consecutive
+            ring lanes in place (``make_stream_hop(..., from_ring=R)``) —
+            sub-hop dribbles stop round-tripping through host numpy at
+            dispatch time, which is what makes per-pump K re-tuning cheap.
+            Must be >= ``hops_per_step``; outputs are bit-identical to the
+            staged path.
 
     Raises:
         ValueError: ``capacity < 1``, ``inflight < 1``, ``hops_per_step <
-            1``, ``on_unparked`` without ``max_unread_hops``, bad
-            ``backend``.
+            1``, ``ingest_ring < hops_per_step``, ``on_unparked`` without
+            ``max_unread_hops``, bad ``backend``.
     """
 
     def __init__(
@@ -291,6 +328,8 @@ class SessionPool:
         on_unparked=None,
         hops_per_step: int = 1,
         step_fn=None,
+        step_fns: Optional[Dict[Any, Any]] = None,
+        ingest_ring: Optional[int] = None,
     ) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -306,6 +345,12 @@ class SessionPool:
             )
         if hops_per_step < 1:
             raise ValueError("hops_per_step must be >= 1")
+        if ingest_ring is not None and ingest_ring < hops_per_step:
+            raise ValueError(
+                f"ingest_ring depth ({ingest_ring}) must be >= hops_per_step "
+                f"({hops_per_step}): one dispatch may gather up to K "
+                f"consecutive device-ring lanes"
+            )
         self.cfg = cfg
         self.capacity = capacity
         self.sample_rate = sample_rate
@@ -315,15 +360,15 @@ class SessionPool:
         self.hops_per_step = hops_per_step
         if device is not None:
             params = jax.device_put(params, device)
-        self._step = (
-            step_fn
-            if step_fn is not None
-            else make_stream_hop(
-                params, cfg, quant=quant, donate=donate, backend=backend,
-                prune_keep=prune_keep, prune_axis=prune_axis,
-                max_hops_per_step=hops_per_step,
-            )
-        )
+        self._params = params
+        self._donate = donate
+        self._prune_keep = prune_keep
+        self._prune_axis = prune_axis
+        self._ring_depth = ingest_ring
+        self._steps: Dict[Any, Any] = step_fns if step_fns is not None else {}
+        if step_fn is not None:
+            self._steps.setdefault((hops_per_step, ingest_ring), step_fn)
+        self._step = self._step_for(hops_per_step)  # default full-K step
         state = init_stream(params, cfg, capacity)
         self._state: StreamState = (
             jax.device_put(state, device) if device is not None else state
@@ -341,17 +386,53 @@ class SessionPool:
         # only after the step that consumed it has been collected (see
         # dispatch). At hops_per_step=K the buffer packs up to K hops per
         # slot so a dispatch ships ONE array instead of re-staging per hop.
-        shape = (
-            (capacity, cfg.hop) if hops_per_step == 1
-            else (capacity, hops_per_step, cfg.hop)
-        )
-        self._hop_bufs = [np.zeros(shape, np.float32) for _ in range(inflight)]
+        # With a device-resident ingest ring there is no host staging at all.
+        if ingest_ring is None:
+            shape = (
+                (capacity, cfg.hop) if hops_per_step == 1
+                else (capacity, hops_per_step, cfg.hop)
+            )
+            self._hop_bufs = [np.zeros(shape, np.float32) for _ in range(inflight)]
+            self._ring_arr = None
+            self._ring_start = None
+            self._ring_count = None
+        else:
+            self._hop_bufs = []
+            ring = jnp.zeros((capacity, ingest_ring, cfg.hop), jnp.float32)
+            self._ring_arr = (
+                jax.device_put(ring, device) if device is not None else ring
+            )
+            # host-side cursors: FIFO position + fill level per slot
+            self._ring_start = np.zeros((capacity,), np.int64)
+            self._ring_count = np.zeros((capacity,), np.int64)
         self._buf_i = 0
         # in-flight batched steps launched by dispatch(), drained in FIFO
         # order by collect(); at most ``inflight`` deep
         self._pending: List[_Pending] = []
         self._last_ready_t = 0.0  # when the previous step's output was ready
         self.step_seconds: List[float] = []  # pool-wide per-step latency
+
+    def _step_for(self, k: int):
+        """The compiled step for a ``dispatch(max_hops=k)`` call.
+
+        Built lazily per lane count and cached in ``self._steps`` keyed by
+        ``(k, ingest_ring)`` — a dict the caller may share across pools
+        (``step_fns=``) so elastic tiers and co-located shards pay each lane
+        count's XLA compilation once per fleet, not once per pool. Ring
+        pools build the ``from_ring`` gather form; staged pools the packed
+        buffer form.
+        """
+        key = (k, self._ring_depth)
+        step = self._steps.get(key)
+        if step is None:
+            step = make_stream_hop(
+                self._params, self.cfg, quant=self.quant, donate=self._donate,
+                backend=self.backend, prune_keep=self._prune_keep,
+                prune_axis=self._prune_axis, max_hops_per_step=k,
+                from_ring=self._ring_depth,
+            )
+            self._steps[key] = step
+        return step
 
     # -- session lifecycle --------------------------------------------------
 
@@ -389,6 +470,11 @@ class SessionPool:
         self._rings[slot] = _RingBuffer()
         self._out[slot] = []
         self._parked[slot] = False
+        if self._ring_depth is not None:
+            # cursors only: the step masks lanes by hop_counts, so stale
+            # device-ring contents from the previous tenant are never read
+            self._ring_start[slot] = 0
+            self._ring_count[slot] = 0
         return sess
 
     def detach(self, sess: Session) -> np.ndarray:
@@ -434,6 +520,10 @@ class SessionPool:
         arr = np.array(samples, np.float32, copy=True).reshape(-1)
         self._rings[sess.slot].push(arr)
         sess.stats.samples_in += arr.size
+        # device-resident ingestion: ship every completed hop immediately so
+        # dispatch() finds the backlog already on-device (sub-hop remainders
+        # stay host-side until the next feed completes them)
+        self._fill_ring(sess.slot)
 
     def read(self, sess: Session) -> np.ndarray:
         """Pop all enhanced audio produced for this session so far.
@@ -475,7 +565,62 @@ class SessionPool:
         queued = sum(c.size for c in self._out[slot]) // hop
         return queued + sum(int(p.counts[slot]) for p in self._pending)
 
-    def dispatch(self) -> int:
+    def _fill_ring(self, slot: int) -> None:
+        """Move whole hops from the slot's host ring into the device ring.
+
+        Called from ``feed()`` (and as a dispatch-time top-up) so sub-hop
+        dribbles accumulate host-side but every completed hop ships
+        immediately: by dispatch time the backlog is already device-resident
+        and the step gathers its lanes in place instead of round-tripping
+        through a host staging buffer. No-op without ``ingest_ring``.
+        """
+        if self._ring_depth is None:
+            return
+        hop, R = self.cfg.hop, self._ring_depth
+        ring = self._rings[slot]
+        n = min(len(ring) // hop, R - int(self._ring_count[slot]))
+        if n <= 0:
+            return
+        block = np.zeros((R, hop), np.float32)
+        block[:n] = ring.pop(n * hop).reshape(n, hop)
+        start = (int(self._ring_start[slot]) + int(self._ring_count[slot])) % R
+        self._ring_arr = _ring_write(self._ring_arr, slot, start, block, n)
+        self._ring_count[slot] += n
+
+    def _backlog_hops(self, slot: int) -> int:
+        """Whole hops queued for this slot (host ring + device ring)."""
+        n = len(self._rings[slot]) // self.cfg.hop
+        if self._ring_depth is not None:
+            n += int(self._ring_count[slot])
+        return n
+
+    def observation(self) -> SchedulerObservation:
+        """Snapshot the scheduler-relevant pool state as pure data.
+
+        Everything an ``AdaptiveScheduler`` decision depends on is captured
+        explicitly here, so a recorded (observation, decision) trace replays
+        to the same decisions (``AdaptiveScheduler.replay``) — the
+        determinism seam the scheduler tests drive. Backlogs count whole
+        hops wherever they live (host ring + device ring); headrooms are
+        present only under ``max_unread_hops``.
+        """
+        backlogs: List[int] = []
+        headrooms: List[int] = []
+        bounded = self._max_unread_hops
+        for slot, sess in enumerate(self._slot_session):
+            if sess is None:
+                continue
+            backlogs.append(self._backlog_hops(slot))
+            if bounded is not None:
+                headrooms.append(bounded - self._unread_hops(slot))
+        return SchedulerObservation(
+            backlogs=tuple(backlogs),
+            headrooms=tuple(headrooms) if bounded is not None else None,
+            num_active=self.num_active,
+            capacity=self.capacity,
+        )
+
+    def dispatch(self, max_hops: Optional[int] = None) -> int:
         """Launch ONE batched (multi-)hop step without waiting for its result.
 
         Pops up to ``hops_per_step`` whole hops from every backlogged session
@@ -498,24 +643,50 @@ class SessionPool:
         constructor); with ``hops_per_step > 1`` a session near the bound is
         clipped to its remaining headroom rather than skipped outright.
 
+        Args:
+            max_hops: cap on hops drained per session by THIS dispatch
+                (1 <= max_hops <= ``hops_per_step``; default = the full
+                compiled ceiling). This is the adaptive scheduler's seam: a
+                controller picks the lane count per dispatch from measured
+                backlog, so an idle pool pays the cheap K=1 step and only
+                lagging sessions buy deep fused lanes. Each distinct value
+                uses a lazily built per-lane-count step (``step_fns``
+                shares the cache across pools); running k lanes is
+                bit-identical to the full-K step with counts <= k.
+
         Returns:
             Total hops included in the launched step across all sessions
             (0 = nothing ready, no compute enqueued; at ``hops_per_step=1``
             this is exactly the number of sessions stepped). Starved/empty
             slots and idle scan lanes are masked inside the step: their
             state is kept bit-for-bit.
+
+        Raises:
+            ValueError: ``max_hops`` outside ``[1, hops_per_step]``.
         """
         while len(self._pending) >= self._inflight:
             self._collect_one()
         hop = self.cfg.hop
-        K = self.hops_per_step
-        buf = self._hop_bufs[self._buf_i]
+        k = self.hops_per_step if max_hops is None else max_hops
+        if not 1 <= k <= self.hops_per_step:
+            raise ValueError(
+                f"max_hops must be in [1, hops_per_step="
+                f"{self.hops_per_step}], got {k}"
+            )
+        use_ring = self._ring_depth is not None
+        buf = None if use_ring else self._hop_bufs[self._buf_i]
         counts = np.zeros((self.capacity,), np.int32)
+        starts = np.zeros((self.capacity,), np.int32)
         bounded = self._max_unread_hops
         for slot, sess in enumerate(self._slot_session):
             if sess is None:
                 continue
-            take = min(len(self._rings[slot]) // hop, K)
+            if use_ring:
+                self._fill_ring(slot)  # top up lanes freed since the feed
+                avail = int(self._ring_count[slot])
+            else:
+                avail = len(self._rings[slot]) // hop
+            take = min(avail, k)
             if take == 0:
                 continue
             if bounded is not None:
@@ -527,7 +698,14 @@ class SessionPool:
                     # a read() drains the queue (which un-parks + wakes up)
                     self._parked[slot] = True
                     continue
-            if K == 1:
+            if use_ring:
+                # consume in place: advance the FIFO cursor, no host staging
+                starts[slot] = int(self._ring_start[slot])
+                self._ring_start[slot] = (
+                    int(self._ring_start[slot]) + take
+                ) % self._ring_depth
+                self._ring_count[slot] -= take
+            elif buf.ndim == 2:
                 buf[slot] = self._rings[slot].pop(hop)
             else:
                 buf[slot, :take] = self._rings[slot].pop(take * hop).reshape(take, hop)
@@ -535,18 +713,31 @@ class SessionPool:
         n_hops = int(counts.sum())
         if n_hops == 0:
             return 0
-        self._buf_i = (self._buf_i + 1) % len(self._hop_bufs)
 
         # K=1 steps take the (B,) bool active mask; fused steps take the
         # (B,) int hop_counts vector driving the per-lane scan masks
-        lanes = counts.astype(bool) if K == 1 else counts
+        lanes = counts.astype(bool) if k == 1 else counts
+        step = self._step_for(k)
         t0 = time.perf_counter()
-        if self.device is not None:
-            hops = jax.device_put(buf, self.device)
-            act = jax.device_put(lanes, self.device)
+        if use_ring:
+            if self.device is not None:
+                starts_d = jax.device_put(starts, self.device)
+                act = jax.device_put(lanes, self.device)
+            else:
+                starts_d, act = jnp.asarray(starts), jnp.asarray(lanes)
+            self._state, out = step(self._state, self._ring_arr, starts_d, act)
         else:
-            hops, act = jnp.asarray(buf), jnp.asarray(lanes)
-        self._state, out = self._step(self._state, hops, act)
+            self._buf_i = (self._buf_i + 1) % len(self._hop_bufs)
+            # narrow the staged view to k lanes so the per-lane-count step
+            # sees its own shape; lane data beyond each slot's count is
+            # stale garbage, masked inside the step
+            view = buf if buf.ndim == 2 else (buf[:, 0] if k == 1 else buf[:, :k])
+            if self.device is not None:
+                hops = jax.device_put(view, self.device)
+                act = jax.device_put(lanes, self.device)
+            else:
+                hops, act = jnp.asarray(view), jnp.asarray(lanes)
+            self._state, out = step(self._state, hops, act)
         self._pending.append(_Pending(out=out, counts=counts, t0=t0))
         return n_hops
 
@@ -593,7 +784,18 @@ class SessionPool:
         self.step_seconds.append(pending.dt)
 
         n_hops = int(pending.counts.sum())
-        share = pending.dt / n_hops if proc_share is None else proc_share
+        max_c = int(pending.counts.max())
+        # lane-occupancy cost split: a fused dispatch's wall time scales
+        # with its DEEPEST lane (the scan runs max(counts) lanes for every
+        # live slot), not with total hops — a flat per-hop share over-bills
+        # shallow slots whenever counts vary per slot. Each of the max_c
+        # lanes costs total/max_c, split evenly among the slots still live
+        # in it. Uniform counts reduce exactly to the per-hop scheme, and
+        # the slot shares always sum to the full step cost, so the router's
+        # round-wall conservation (see collect) is preserved.
+        total = pending.dt if proc_share is None else proc_share * n_hops
+        lane_occ = [int((pending.counts > j).sum()) for j in range(max_c)]
+        lane_cost = total / max_c if max_c else 0.0
         for slot in np.flatnonzero(pending.counts):
             c = int(pending.counts[slot])
             sess = self._slot_session[slot]
@@ -602,19 +804,25 @@ class SessionPool:
             else:
                 self._out[slot].append(out[slot])
             sess.stats.hops += c
-            sess.stats.proc_seconds += share * c
+            sess.stats.proc_seconds += lane_cost * sum(
+                1.0 / lane_occ[j] for j in range(c)
+            )
         return n_hops
 
     def collect(self, proc_share: Optional[float] = None) -> int:
         """Block on every in-flight step (if any) and distribute the output.
 
         Args:
-            proc_share: per-HOP compute-seconds to charge for this step
-                instead of the default ``latency / hops_in_step``. A router
+            proc_share: mean per-HOP compute-seconds to charge for this step
+                instead of the default (the step's own latency). A router
                 passes ``round_wall / total_hops_stepped`` here so that
                 summed ``proc_seconds`` across ALL shards equals the round's
                 wall-clock — device work that overlapped is not
-                double-counted into session RTFs.
+                double-counted into session RTFs. Either way the step's
+                total cost is split across its slots by lane occupancy, not
+                per hop (see ``_collect_one``): fused wall time follows the
+                deepest lane, so shallow slots in a ragged dispatch are
+                charged less than deep ones.
 
         Returns:
             Number of hops whose output was delivered (0 = nothing was in
@@ -642,7 +850,7 @@ class SessionPool:
             self.collect()
         return n
 
-    def pump(self) -> int:
+    def pump(self, scheduler=None) -> int:
         """Dispatch until no session has a full (eligible) hop buffered.
 
         With ``inflight=1`` this is the classic serial loop; with
@@ -650,10 +858,25 @@ class SessionPool:
         compute of hop k (double buffering). Either way every launched step
         is collected before returning.
 
+        Args:
+            scheduler: optional ``repro.serve.AdaptiveScheduler``. When
+                given, every iteration snapshots ``observation()``, asks
+                the controller for a decision, and dispatches with
+                ``max_hops=decision.k`` (clamped to this pool's compiled
+                ``hops_per_step`` ceiling) — deep fused lanes only when
+                some session actually lags, the cheap K=1 fast path
+                otherwise. Grow/shrink components of the decision are
+                ignored here; the elastic pool acts on them.
+
         Returns total steps dispatched.
         """
         steps = 0
-        while self.dispatch():
+        while True:
+            k = None
+            if scheduler is not None:
+                k = min(scheduler.observe(self.observation()).k, self.hops_per_step)
+            if not self.dispatch(max_hops=k):
+                break
             steps += 1
         self.collect()
         return steps
@@ -670,9 +893,8 @@ class SessionPool:
             the pressure signal), ``p50_ms`` (median dispatch→ready step
             latency), and ``device`` (where this shard's state lives).
         """
-        hop = self.cfg.hop
         backlog = sum(
-            len(self._rings[slot]) // hop
+            self._backlog_hops(slot)
             for slot, s in enumerate(self._slot_session)
             if s is not None
         )
@@ -705,7 +927,23 @@ class SessionPool:
         slot = sess.slot
         state = jax.tree_util.tree_map(lambda leaf: np.asarray(leaf[slot]), self._state)
         ring = self._rings[slot]
-        pending = ring.pop(len(ring)) if len(ring) else np.zeros((0,), np.float32)
+        parts: List[np.ndarray] = []
+        if self._ring_depth is not None and int(self._ring_count[slot]):
+            # drain the device ring in FIFO order back to host: the ticket's
+            # pending_in must carry the full unprocessed backlog regardless
+            # of where it was resident at export time
+            R = self._ring_depth
+            ring_host = np.asarray(self._ring_arr[slot])
+            order = [
+                (int(self._ring_start[slot]) + i) % R
+                for i in range(int(self._ring_count[slot]))
+            ]
+            parts.append(ring_host[order].reshape(-1))
+            self._ring_start[slot] = 0
+            self._ring_count[slot] = 0
+        if len(ring):
+            parts.append(ring.pop(len(ring)))
+        pending = np.concatenate(parts) if parts else np.zeros((0,), np.float32)
         chunks = self._out[slot]
         unread = np.concatenate(chunks) if chunks else np.zeros((0,), np.float32)
         sess.detached = True
@@ -738,6 +976,7 @@ class SessionPool:
         )
         if ticket.pending_in.size:
             self._rings[slot].push(ticket.pending_in)
+            self._fill_ring(slot)
         if ticket.unread_out.size:
             self._out[slot] = [ticket.unread_out]
         sess.stats = ticket.stats

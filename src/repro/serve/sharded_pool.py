@@ -69,13 +69,17 @@ import numpy as np
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
 from repro.serve.elastic_pool import ElasticSessionPool
+from repro.serve.scheduler import (
+    AdaptiveScheduler,
+    SchedulerConfig,
+    scheduler_for_pool,
+)
 from repro.serve.session_server import (
     PoolFullError,
     Session,
     SessionError,
     SessionPool,
 )
-from repro.serve.streaming_se import make_stream_hop
 
 Pytree = dict
 
@@ -254,11 +258,22 @@ class ShardedSessionPool:
         vnodes: virtual nodes per shard on the hash ring (more = smoother
             key-space balance at slightly larger ring).
         step_cache: optional mutable dict mapping device -> (device-resident
-            params, compiled step). Co-located shards always share one entry;
-            pass the same dict to several ``ShardedSessionPool`` instances
-            with identical params/cfg/quant/donate/capacity/hops_per_step
-            (e.g. a benchmark sweeping shard counts) to also share
-            compilations ACROSS pools.
+            params, per-lane-count step cache). Co-located shards always
+            share one entry; pass the same dict to several
+            ``ShardedSessionPool`` instances with identical
+            params/cfg/quant/donate/capacity/hops_per_step (e.g. a benchmark
+            sweeping shard counts) to also share compilations ACROSS pools.
+        adaptive: closed-loop scheduling. ``True`` gives every shard its own
+            ``AdaptiveScheduler`` sized to ``hops_per_step``
+            (``scheduler_for_pool``); a ``SchedulerConfig`` uses that
+            configuration instead. Each ``pump_all`` round then observes
+            each shard, picks its lane count from measured backlog, and (on
+            elastic shards) applies slope-triggered grow / cost-modeled
+            shrink decisions — replacing the legacy per-pump watermark
+            check. Per-shard decision traces are replayable
+            (``scheduler_stats()`` / ``shard_stats()``).
+        ingest_ring: device-resident ingestion ring depth forwarded to every
+            shard (see ``SessionPool``).
 
     Raises:
         ValueError: ``shards < 1`` or empty ``devices``.
@@ -287,6 +302,8 @@ class ShardedSessionPool:
         shrink_patience: int = 8,
         vnodes: int = 64,
         step_cache: Optional[dict] = None,
+        adaptive=None,
+        ingest_ring: Optional[int] = None,
     ) -> None:
         if devices is None:
             devices = jax.local_devices()
@@ -318,8 +335,15 @@ class ShardedSessionPool:
             shrink_fraction=shrink_fraction, shrink_patience=shrink_patience,
             sample_rate=sample_rate, inflight=inflight,
             max_unread_hops=max_unread_hops, on_unparked=on_unparked,
+            ingest_ring=ingest_ring,
         )
+        self._adaptive = adaptive if adaptive is not None else False
         self._pools: List = [self._make_pool(i) for i in range(shards)]
+        # one controller per shard: each shard's backlog/tier trajectory is
+        # its own control problem, and each trace replays independently
+        self._scheds: List[Optional[AdaptiveScheduler]] = [
+            self._make_sched() for _ in range(shards)
+        ]
         self._ring = HashRing(shards, vnodes=vnodes)
         self._sessions: Dict[Hashable, ShardedSession] = {}
         self._auto_sid = itertools.count()
@@ -337,28 +361,31 @@ class ShardedSessionPool:
         self.lost_session_ids: List[Hashable] = []  # for client notification
         self.failover_log: List[Dict[str, object]] = []
 
+    def _make_sched(self) -> Optional[AdaptiveScheduler]:
+        """A fresh per-shard controller (None when not adaptive)."""
+        if not self._adaptive:
+            return None
+        if isinstance(self._adaptive, SchedulerConfig):
+            return AdaptiveScheduler(self._adaptive)
+        return scheduler_for_pool(self._mk["hops_per_step"])
+
     def _make_pool(self, index: int):
         """Build (or rebuild, for ``restart_shard``) the pool at one index."""
         m = self._mk
         dev = self._devices[index % len(self._devices)]
         if dev not in self._shared:
-            placed = jax.device_put(self._params, dev)
-            self._shared[dev] = (
-                placed,
-                make_stream_hop(
-                    placed, self.cfg, quant=m["quant"], donate=m["donate"],
-                    backend=m["backend"], prune_keep=m["prune_keep"],
-                    prune_axis=m["prune_axis"],
-                    max_hops_per_step=m["hops_per_step"],
-                ),
-            )
-        placed, step = self._shared[dev]
+            # one params copy + ONE per-lane-count step cache per device:
+            # co-located shards (and every tier of an elastic shard) fill
+            # and share it instead of paying per-shard compilations
+            self._shared[dev] = (jax.device_put(self._params, dev), {})
+        placed, step_fns = self._shared[dev]
         kw = dict(
             quant=m["quant"], sample_rate=m["sample_rate"], donate=m["donate"],
             device=dev, backend=m["backend"], inflight=m["inflight"],
             max_unread_hops=m["max_unread_hops"],
             on_unparked=m["on_unparked"], hops_per_step=m["hops_per_step"],
-            step_fn=step,
+            prune_keep=m["prune_keep"], prune_axis=m["prune_axis"],
+            step_fns=step_fns, ingest_ring=m["ingest_ring"],
         )
         if self.elastic:
             return ElasticSessionPool(
@@ -543,7 +570,10 @@ class ShardedSessionPool:
         Elastic shards take their lazy shrink heartbeat here too — once per
         ``pump_all`` after the rounds drain, mirroring the cadence of a
         standalone ``ElasticSessionPool.pump()`` (``dispatch``/``collect``
-        never resize mid-pipeline).
+        never resize mid-pipeline). Under ``adaptive=`` each round instead
+        observes every shard, dispatches it at its controller's lane count,
+        and applies grow/shrink decisions per shard — the watermark
+        heartbeat is replaced by the replayable decision trace.
 
         Fault tolerance: a shard that raises mid-pump — from ``dispatch``,
         ``wait_ready``, or ``collect`` — is marked down and SKIPPED for the
@@ -566,7 +596,17 @@ class ShardedSessionPool:
             launched = []
             for i, pool in self._live():
                 try:
-                    stepped += pool.dispatch()
+                    sched = self._scheds[i]
+                    if sched is None:
+                        stepped += pool.dispatch()
+                    else:
+                        # adaptive: observe this shard, act on grow/shrink
+                        # (elastic shards only), dispatch at the decided K
+                        decision = sched.observe(pool.observation())
+                        if self.elastic:
+                            pool.apply_decision(decision)
+                        k = min(decision.k, self._mk["hops_per_step"])
+                        stepped += pool.dispatch(max_hops=k)
                     launched.append((i, pool))
                 except Exception:
                     self._pump_failure(i)
@@ -586,7 +626,9 @@ class ShardedSessionPool:
                 except Exception:
                     self._pump_failure(i)
             rounds += 1
-        if self.elastic:
+        if self.elastic and not self._adaptive:
+            # legacy watermark heartbeat; adaptive fleets shrink through the
+            # scheduler's cost-modeled decisions instead
             for _, pool in self._live():
                 pool.try_shrink()
         return rounds
@@ -641,6 +683,9 @@ class ShardedSessionPool:
             raise SessionError(f"shard {shard} is not down; nothing to restart")
         self._failover_pending()  # never strand residents of OTHER dead shards
         self._pools[shard] = self._make_pool(shard)
+        # a fresh pool gets a fresh controller: the new generation's decision
+        # trace must replay from SchedulerState() like any cold start
+        self._scheds[shard] = self._make_sched()
         self._dead.discard(shard)
         self._pending_failover.discard(shard)
         self._corpses.pop(shard, None)
@@ -772,8 +817,19 @@ class ShardedSessionPool:
             s["shard_failovers"] = self._failover_counts[i]
             s["sessions_failed_over"] = self.sessions_failed_over
             s["sessions_lost"] = self.sessions_lost
+            if self._scheds[i] is not None:
+                s["scheduler"] = self._scheds[i].stats()
             out.append(s)
         return out
+
+    def scheduler_stats(self) -> Optional[List[Dict[str, object]]]:
+        """Per-shard adaptive-controller counters (None when not adaptive)."""
+        if not self._adaptive:
+            return None
+        return [
+            sched.stats() if sched is not None else {}
+            for sched in self._scheds
+        ]
 
     def _migrate(self, handle: ShardedSession, dst: int) -> None:
         """Move one live session to shard ``dst`` (resumes bit-for-bit)."""

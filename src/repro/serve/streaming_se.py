@@ -191,7 +191,8 @@ def make_stream_hop(
     prune_keep: Optional[float] = None,
     prune_axis: Optional[int] = None,
     max_hops_per_step: int = 1,
-) -> Callable[[StreamState, jax.Array, jax.Array], Tuple[StreamState, jax.Array]]:
+    from_ring: Optional[int] = None,
+) -> Callable[..., Tuple[StreamState, jax.Array]]:
     """Build the jit-compiled batched hop step shared by server and benchmarks.
 
     With ``max_hops_per_step=1`` (default) returns
@@ -223,6 +224,25 @@ def make_stream_hop(
     hops, the standard streaming-throughput lever — and is BIT-identical to
     driving the K=1 step K times with the per-iteration active masks.
 
+    With ``from_ring=R`` the step reads its input from a **device-resident
+    ingestion ring** instead of a freshly staged host buffer:
+    ``step(state, ring, starts, active_or_counts) -> (state, out)`` where
+
+    - ``ring``: (B, R, hop) — the pool's persistent per-slot hop ring,
+      written incrementally at ``feed()`` time (``SessionPool`` with
+      ``ingest_ring=R``); NOT donated, so an in-flight pipelined step can
+      keep reading the array a later ``feed`` functionally superseded,
+    - ``starts``: (B,) int — each slot's ring read position; the step
+      gathers lanes ``(starts[b] + k) % R`` for k < K and then runs the
+      IDENTICAL masked/scan hop math as the staged form (the gathered
+      values are exact copies of the fed samples, so outputs stay
+      bit-identical — ``tests/test_scheduler.py`` proves it under churn).
+
+    A dispatch then ships only two (B,)-int vectors instead of a packed
+    (B, K, hop) audio buffer — what makes per-pump re-tuning by the
+    adaptive scheduler cheap. ``R >= max_hops_per_step`` is required (the
+    gather reads K lanes).
+
     ``quant`` switches the whole path onto a ``repro.core.quant`` grid:
     weights are pre-quantized here (once), activations per hop inside
     ``stream_hop``.
@@ -243,6 +263,11 @@ def make_stream_hop(
         raise ValueError("prune_keep requires backend='pallas' (the deploy path)")
     if max_hops_per_step < 1:
         raise ValueError("max_hops_per_step must be >= 1")
+    if from_ring is not None and from_ring < max_hops_per_step:
+        raise ValueError(
+            f"from_ring depth {from_ring} < max_hops_per_step "
+            f"{max_hops_per_step}: the ring gather reads K lanes"
+        )
     if backend == "pallas":
         from repro.serve.deploy import build_deploy_plan, stream_hop_fused
 
@@ -291,6 +316,21 @@ def make_stream_hop(
             # harness in tests/test_fused_hops.py proves it on both backends).
             state, outs = jax.lax.scan(body, state, xs, unroll=True)
             return state, jnp.moveaxis(outs, 0, 1)
+
+    if from_ring is not None:
+        R, K, staged = from_ring, max_hops_per_step, step
+
+        def step(state: StreamState, ring: jax.Array, starts: jax.Array, lanes: jax.Array):
+            idx = (starts[:, None] + jnp.arange(K)) % R  # (B, K) ring lanes
+            hops = jnp.take_along_axis(ring, idx[:, :, None], axis=1)
+            # the gather is value-exact (no arithmetic on the audio), so the
+            # staged step sees bit-identical inputs; the barrier pins the
+            # gathered buffer as a unit so XLA cannot re-fuse the hop math
+            # with the gather and change its lowering vs the staged form
+            hops = jax.lax.optimization_barrier(hops)
+            if K == 1:
+                hops = hops[:, 0]
+            return staged(state, hops, lanes)
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())
 

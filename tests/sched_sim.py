@@ -1,0 +1,206 @@
+"""Deterministic virtual-clock simulator for the adaptive scheduler.
+
+``tests/test_scheduler.py`` needs to assert CONVERGENCE properties of the
+control law — "K falls back to 1 within N pumps of a drain", "no
+grow/shrink oscillation at steady load", "parking never triggers while
+adaptive K has headroom" — and those are statements about closed-loop
+*trajectories*, not single decisions. Driving a real ``SessionPool`` for
+that would entangle the controller with JAX dispatch latency and make the
+trajectory depend on wall-clock noise. This harness replaces the pool with
+a few integers per session:
+
+- a **virtual clock** that advances one tick per pump (no ``time``);
+- seeded **arrival traces** (``bursty``, ``trickle``, ``bimodal``) that map
+  tick -> hops fed per session, via ``random.Random(seed)`` only;
+- a **reader model** (hops read per tick) so ``max_unread_hops``
+  backpressure is exercised: a slot whose unread output is at the cap
+  contributes zero dispatch headroom, exactly like the real pool's parking;
+- the pool's obey-the-decision semantics: dispatch takes
+  ``min(backlog, headroom, K)`` hops per slot, a grow/shrink moves one tier.
+
+Everything is a pure function of ``(trace_name, seed, config, knobs)`` —
+two runs with the same arguments produce identical ``SimResult``s, so the
+convergence asserts are exact, not statistical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.serve.scheduler import (
+    AdaptiveScheduler,
+    SchedulerConfig,
+    SchedulerObservation,
+)
+
+# ---------------------------------------------------------------------------
+# Seeded arrival traces: (rnd, tick, session index) -> hops fed this tick.
+# ---------------------------------------------------------------------------
+
+
+def _bursty(rnd: random.Random, tick: int, sess: int) -> int:
+    """Alternating burst/silence phases, per-session jitter: 8-tick bursts
+    of 2-6 hops per tick, then 8 ticks of near-silence."""
+    in_burst = (tick // 8) % 2 == 0
+    if in_burst:
+        return rnd.randint(2, 6)
+    return 1 if rnd.random() < 0.2 else 0
+
+
+def _trickle(rnd: random.Random, tick: int, sess: int) -> int:
+    """Sparse single-hop arrivals: the steady low-rate regime where the
+    fast path (K=1) should dominate."""
+    return 1 if rnd.random() < 0.6 else 0
+
+
+def _bimodal(rnd: random.Random, tick: int, sess: int) -> int:
+    """Half the sessions stream hard, half dribble — the mixed fleet where
+    per-dispatch K must serve laggards without slowing the light half."""
+    if sess % 2 == 0:
+        return rnd.randint(2, 4)
+    return 1 if rnd.random() < 0.3 else 0
+
+
+TRACES: Dict[str, Callable[[random.Random, int, int], int]] = {
+    "bursty": _bursty,
+    "trickle": _trickle,
+    "bimodal": _bimodal,
+}
+
+
+@dataclasses.dataclass
+class SimResult:
+    """One simulated run: the full decision trajectory plus the events the
+    convergence asserts pin down."""
+
+    ks: List[int]
+    tier_moves: List[Tuple[int, str]]  # (tick, "grow" | "shrink")
+    parked_ticks: List[int]  # ticks where a slot had backlog but 0 headroom
+    backlogs_end: List[int]
+    drain_tick: Optional[int]  # first all-empty tick once arrivals ended
+    # (with feed_until=None: the first all-empty tick anywhere in the run)
+    scheduler: AdaptiveScheduler  # trace retained for replay/invariant checks
+    capacity_history: List[int]
+
+
+def run_sim(
+    trace: str,
+    *,
+    seed: int = 0,
+    ticks: int = 64,
+    sessions: int = 3,
+    config: Optional[SchedulerConfig] = None,
+    tiers: Tuple[int, ...] = (4,),
+    max_unread_hops: Optional[int] = None,
+    read_rate: int = 10**9,
+    slow_read_rate: Optional[int] = None,
+    feed_until: Optional[int] = None,
+) -> SimResult:
+    """Drive the scheduler open-loop over a seeded arrival trace.
+
+    Args:
+        trace: key into ``TRACES``.
+        seed: arrival-jitter seed; the run is a pure function of it.
+        ticks: virtual pumps to simulate.
+        sessions: concurrently attached sessions (constant; churn is the
+            soak harness's job, not the simulator's).
+        config: controller constants (defaults to ``SchedulerConfig()``).
+        tiers: capacity ladder; ``len(tiers) == 1`` disables tier moves.
+        max_unread_hops: backpressure cap (``None`` = unbounded, the
+            observation then carries no headrooms).
+        read_rate: hops each session reads per tick (default: attentive
+            readers who always drain their output).
+        slow_read_rate: if set, every ODD session reads at this rate
+            instead — the bimodal fast/slow reader split.
+        feed_until: stop arrivals after this tick (``None`` = feed for the
+            whole run); used to measure post-drain K convergence.
+
+    Returns:
+        ``SimResult`` with the K trajectory, tier moves, parking events and
+        the scheduler (its trace replays deterministically).
+    """
+    cfg = config or SchedulerConfig()
+    sched = AdaptiveScheduler(cfg)
+    arrive = TRACES[trace]
+    rnd = random.Random(seed)
+
+    backlogs = [0] * sessions  # hops queued, not yet dispatched
+    unread = [0] * sessions  # hops dispatched, not yet read
+    tier_index = 0
+    tier_moves: List[Tuple[int, str]] = []
+    parked: List[int] = []
+    ks: List[int] = []
+    cap_hist: List[int] = []
+    drain_tick: Optional[int] = None
+
+    for tick in range(ticks):
+        # -- arrivals -------------------------------------------------------
+        if feed_until is None or tick < feed_until:
+            for s in range(sessions):
+                backlogs[s] += arrive(rnd, tick, s)
+
+        # -- observe --------------------------------------------------------
+        if max_unread_hops is None:
+            headrooms = None
+        else:
+            headrooms = tuple(max_unread_hops - u for u in unread)
+        capacity = tiers[tier_index]
+        obs = SchedulerObservation(
+            backlogs=tuple(backlogs),
+            headrooms=headrooms,
+            num_active=sessions,
+            capacity=capacity,
+            tier_index=tier_index,
+            n_tiers=len(tiers),
+            lower_capacity=tiers[tier_index - 1] if tier_index > 0 else 0,
+            mean_pause_ms=0.0,
+        )
+        decision = sched.observe(obs)
+        ks.append(decision.k)
+        cap_hist.append(capacity)
+
+        # -- apply the tier move (at most one, as the elastic pool does) ----
+        if decision.grow and tier_index + 1 < len(tiers):
+            tier_index += 1
+            tier_moves.append((tick, "grow"))
+        elif decision.shrink and tier_index > 0 and sessions <= tiers[tier_index - 1]:
+            tier_index -= 1
+            tier_moves.append((tick, "shrink"))
+
+        # -- dispatch: the pool takes min(backlog, headroom, K) per slot ----
+        for s in range(sessions):
+            room = decision.k
+            if max_unread_hops is not None:
+                room = min(room, max(max_unread_hops - unread[s], 0))
+                if backlogs[s] > 0 and max_unread_hops - unread[s] <= 0:
+                    parked.append(tick)  # backlog present, slot parked
+            take = min(backlogs[s], room)
+            backlogs[s] -= take
+            unread[s] += take
+
+        # -- readers drain output ------------------------------------------
+        for s in range(sessions):
+            rate = read_rate
+            if slow_read_rate is not None and s % 2 == 1:
+                rate = slow_read_rate
+            unread[s] = max(unread[s] - rate, 0)
+
+        fed_done = feed_until is not None and tick >= feed_until
+        if (
+            drain_tick is None
+            and (feed_until is None or fed_done)
+            and all(b == 0 for b in backlogs)
+        ):
+            drain_tick = tick
+
+    return SimResult(
+        ks=ks,
+        tier_moves=tier_moves,
+        parked_ticks=parked,
+        backlogs_end=list(backlogs),
+        drain_tick=drain_tick,
+        scheduler=sched,
+        capacity_history=cap_hist,
+    )

@@ -88,14 +88,27 @@ def _check_session_pool(p) -> None:
         assert sess.slot == slot and not sess.detached
         assert p._sessions[sess.sid] is sess
     assert len(p._pending) <= p._inflight
+    ring_depth = getattr(p, "_ring_depth", None)
     for slot, sess in occupied.items():
         st = sess.stats
         # a fused step may hold up to hops_per_step hops of one slot in flight
         inflight = sum(int(pend.counts[slot]) for pend in p._pending)
-        # 2. ring conservation: fed == buffered + in flight + processed
-        assert st.samples_in == len(p._rings[slot]) + hop * (st.hops + inflight), (
+        # with a device-resident ingestion ring, whole hops live on-device
+        # between feed() and dispatch() — they are neither host-buffered nor
+        # in flight nor processed, and the cursors must stay in range
+        dev_hops = 0
+        if ring_depth is not None:
+            dev_hops = int(p._ring_count[slot])
+            assert 0 <= dev_hops <= ring_depth
+            assert 0 <= int(p._ring_start[slot]) < ring_depth
+        # 2. ring conservation: fed == buffered + device ring + in flight
+        #    + processed (backlog is conserved across the device ring)
+        assert st.samples_in == len(p._rings[slot]) + hop * (
+            dev_hops + st.hops + inflight
+        ), (
             f"slot {slot}: fed {st.samples_in} != ring {len(p._rings[slot])} "
-            f"+ {hop} * ({st.hops} hops + {inflight} in flight)"
+            f"+ {hop} * ({dev_hops} device + {st.hops} hops + {inflight} "
+            f"in flight)"
         )
         queued = sum(c.size for c in p._out[slot])
         assert st.samples_out + queued == st.hops * hop, (
@@ -120,6 +133,61 @@ def _check_elastic(pool) -> None:
         assert p._sessions.get(handle.inner.sid) is handle.inner
 
 
+def check_scheduler_trace(scheduler) -> None:
+    """Scheduler-trace invariants: every recorded decision must be legal
+    w.r.t. its own observation, and the whole trace must replay bit-exactly
+    from the pure control law (``decide`` + a fresh ``SchedulerState``).
+
+    Checked per (observation, decision) pair:
+
+    - chosen K is on the config's ladder and within ``[1, k_max]``;
+    - chosen K never exceeds the ladder round-up of the deepest ELIGIBLE
+      backlog (each slot's backlog clipped to its ``max_unread_hops``
+      headroom) — the scheduler must not pick deep lanes no slot can use;
+    - tier transitions are monotone per decision: at most ONE move (never
+      grow and shrink together), grow only below the top tier, shrink only
+      above the bottom tier.
+    """
+    from repro.serve.scheduler import AdaptiveScheduler, _ladder_round_up
+
+    cfg = scheduler.config
+    ladder = cfg.k_ladder
+    for obs, decision in scheduler.trace:
+        assert 1 <= decision.k <= cfg.k_max
+        assert decision.k in ladder, f"K={decision.k} off ladder {ladder}"
+        # chosen K <= headroom: deepest dispatchable depth, ladder-rounded
+        if obs.headrooms is None:
+            eligible = obs.backlogs
+        else:
+            eligible = tuple(
+                min(b, max(h, 0)) for b, h in zip(obs.backlogs, obs.headrooms)
+            )
+        deepest = max(eligible, default=0)
+        bound = 1 if deepest <= 1 else _ladder_round_up(deepest, ladder)
+        assert decision.k <= bound, (
+            f"K={decision.k} exceeds eligible-backlog bound {bound} "
+            f"(backlogs={obs.backlogs}, headrooms={obs.headrooms})"
+        )
+        # tier transitions monotone: at most one legal move per decision
+        assert not (decision.grow and decision.shrink)
+        if decision.grow:
+            assert obs.tier_index + 1 < obs.n_tiers
+        if decision.shrink:
+            assert obs.tier_index > 0
+    # replay determinism: the recorded decisions ARE the pure control law
+    replayed = AdaptiveScheduler.replay(cfg, [o for o, _ in scheduler.trace])
+    assert replayed == [d for _, d in scheduler.trace], (
+        "scheduler trace does not replay — decide() is impure or the trace "
+        "was mutated"
+    )
+
+
+def _schedulers(pool) -> list:
+    """Every live AdaptiveScheduler attached to a pool (sharded adaptive
+    fleets carry one per shard; non-adaptive pools carry none)."""
+    return [s for s in getattr(pool, "_scheds", []) or [] if s is not None]
+
+
 class SoakChecker:
     """Re-checkable invariant probe with cross-op continuity state.
 
@@ -134,6 +202,8 @@ class SoakChecker:
 
     def check(self, pool) -> None:
         check_pool_invariants(pool)
+        for sched in _schedulers(pool):
+            check_scheduler_trace(sched)
         for key, p in _keyed_inner_pools(pool):
             n = len(p.step_seconds)
             assert n >= self._seen_steps.get(key, 0), (

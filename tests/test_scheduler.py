@@ -1,0 +1,466 @@
+"""Adaptive scheduler tests: the pure control law, its convergence
+trajectories, and the bit-exactness contract of adaptive serving.
+
+Three layers, cheapest first:
+
+1. **Unit tests on ``decide``** — ladder shape, config validation, the
+   shrink cost model (measured migration pause vs freed-slot value), and
+   patience hysteresis, all on hand-built observations. Pure python.
+2. **Virtual-clock convergence** (``tests/sched_sim.py``) — seeded bursty /
+   trickle / bimodal arrival traces drive the controller open-loop and the
+   asserts pin trajectories: K falls back to 1 within one pump of a drain,
+   steady load never grow/shrink-oscillates, and parking NEVER fires while
+   adaptive K still has headroom. Deterministic per seed — exact asserts,
+   no statistics. Pure python.
+3. **Live-pool properties** — the hypothesis churn test: an adaptive pool
+   (device ingestion ring + per-dispatch K from its scheduler) must emit
+   BIT-IDENTICAL audio to a static pool that merely replays the recorded
+   K-decision trace, on xla and pallas, with the double-buffered pipeline
+   in flight. Plus the lane-occupancy accounting regression, the
+   ``dispatch(max_hops=...)`` validation seam, and chaos soak on an
+   adaptive elastic sharded fleet (kill/restart during adaptive resize,
+   scheduler-trace invariants checked after every op by ``SoakChecker``).
+"""
+
+import dataclasses
+import functools
+import itertools
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import tftnn as tft
+from repro.serve import (
+    AdaptiveScheduler,
+    SchedulerConfig,
+    SchedulerObservation,
+    SessionPool,
+    ShardedSessionPool,
+    decide,
+    ring_depth_for,
+    scheduler_for_pool,
+)
+from repro.serve.scheduler import SchedulerState, _ladder_round_up
+from sched_sim import run_sim
+from soak import check_pool_invariants, check_scheduler_trace, run_soak
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=16,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+        downsample=2,
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+K = 4  # adaptive ceiling under test (ladder 1, 2, 4)
+RING = 8  # = ring_depth_for(k_max=4)
+CAP = 4
+MAX_HOPS = 18
+
+# ONE lazily-filled step cache per backend, shared across every pool and
+# hypothesis example in this module (keys are (k, ring_depth), so ring and
+# staged forms coexist; backends must NOT share a dict).
+STEPS = {"xla": {}, "pallas": {}}
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)),
+        np.float32,
+    )
+
+
+def _obs(**kw) -> SchedulerObservation:
+    base = dict(backlogs=(), num_active=0, capacity=4)
+    base.update(kw)
+    return SchedulerObservation(**base)
+
+
+# -- layer 1: the pure control law -------------------------------------------
+
+
+def test_k_ladder_shapes():
+    assert SchedulerConfig(k_max=8).k_ladder == (1, 2, 4, 8)
+    assert SchedulerConfig(k_max=6).k_ladder == (1, 2, 4, 6)
+    assert SchedulerConfig(k_max=1).k_ladder == (1,)
+    assert _ladder_round_up(3, (1, 2, 4, 8)) == 4
+    assert _ladder_round_up(9, (1, 2, 4, 8)) == 8  # clipped to the top
+
+
+def test_config_validation():
+    for bad in (
+        dict(k_max=0),
+        dict(ewma_alpha=0.0),
+        dict(ewma_alpha=1.5),
+        dict(shrink_fraction=0.0),
+        dict(grow_occupancy=1.5),
+        dict(shrink_patience=0),
+        dict(slot_value_ms=-1.0),
+    ):
+        with pytest.raises(ValueError):
+            SchedulerConfig(**bad)
+
+
+def test_k_from_deepest_eligible_backlog():
+    cfg = SchedulerConfig(k_max=8)
+    st0 = SchedulerState()
+    # unbounded pool: deepest backlog, ladder-rounded
+    d, _ = decide(cfg, st0, _obs(backlogs=(0, 3, 1), num_active=3))
+    assert d.k == 4
+    # headroom clips: the deep slot is parked, the shallow one rules
+    d, _ = decide(
+        cfg, st0, _obs(backlogs=(7, 2), headrooms=(0, 5), num_active=2)
+    )
+    assert d.k == 2
+    # nothing eligible -> the K=1 fast path
+    d, _ = decide(cfg, st0, _obs(backlogs=(5,), headrooms=(0,), num_active=1))
+    assert d.k == 1
+    d, _ = decide(cfg, st0, _obs(backlogs=()))
+    assert d.k == 1
+
+
+def test_shrink_cost_model_gates_on_measured_pause():
+    """A shrink is proposed only when the measured migration pause is worth
+    the freed idle-tier slots: pause_ms <= slot_value_ms * freed."""
+    cfg = SchedulerConfig(k_max=4, shrink_patience=2, slot_value_ms=5.0)
+    kw = dict(
+        backlogs=(0,), num_active=1, capacity=4,
+        tier_index=1, n_tiers=2, lower_capacity=2,
+    )  # freed = 2 slots -> worth 10 ms of pause
+    state = SchedulerState()
+    for expensive in (True, False):
+        state = SchedulerState()
+        pause = 100.0 if expensive else 5.0
+        shrinks = []
+        for _ in range(6):
+            d, state = decide(cfg, state, _obs(mean_pause_ms=pause, **kw))
+            assert not d.grow
+            shrinks.append(d.shrink)
+        if expensive:
+            assert not any(shrinks), "100 ms pause > 10 ms value: keep tier"
+        else:
+            # patience=2: eligible on decisions 1,2 -> first shrink at 2;
+            # streak resets, so shrinks come at most every patience-th step
+            assert shrinks == [False, True, False, True, False, True]
+
+
+def test_shrink_never_oscillates_into_grow():
+    """After a shrink the same steady observation stream must not grow
+    back: constant backlog -> zero slope -> grow stays off (hysteresis is
+    structural, not tuned)."""
+    cfg = SchedulerConfig(k_max=4, shrink_patience=2)
+    state = SchedulerState()
+    for i in range(10):
+        tier = 1 if i < 2 else 0  # the pool obeys the first shrink
+        d, state = decide(
+            cfg,
+            state,
+            _obs(
+                backlogs=(1,), num_active=1,
+                capacity=4 if tier else 2,
+                tier_index=tier, n_tiers=2,
+                lower_capacity=2 if tier else 0,
+            ),
+        )
+        assert not d.grow
+
+
+def test_replay_is_deterministic():
+    sched = scheduler_for_pool(4)
+    rng = np.random.default_rng(0)
+    for _ in range(32):
+        sched.observe(
+            _obs(
+                backlogs=tuple(int(b) for b in rng.integers(0, 9, size=3)),
+                num_active=3,
+            )
+        )
+    check_scheduler_trace(sched)
+    replayed = AdaptiveScheduler.replay(
+        sched.config, [o for o, _ in sched.trace]
+    )
+    assert replayed == [d for _, d in sched.trace]
+
+
+def test_scheduler_helpers():
+    assert ring_depth_for(SchedulerConfig(k_max=8)) == 16
+    assert ring_depth_for(SchedulerConfig(k_max=1)) == 4  # floor
+    assert scheduler_for_pool(3).config.k_max == 3
+    assert scheduler_for_pool(0).config.k_max == 1  # K=1 pools still legal
+    stats = scheduler_for_pool(4).stats()
+    assert stats["decisions"] == 0 and stats["k_ladder"] == [1, 2, 4]
+
+
+# -- layer 2: virtual-clock convergence (sched_sim) --------------------------
+
+
+def test_sim_is_deterministic_per_seed():
+    a = run_sim("bursty", seed=7, ticks=48, max_unread_hops=16)
+    b = run_sim("bursty", seed=7, ticks=48, max_unread_hops=16)
+    assert a.ks == b.ks
+    assert a.tier_moves == b.tier_moves
+    assert a.parked_ticks == b.parked_ticks
+
+
+def test_sim_k_converges_to_1_after_drain():
+    """Open-loop convergence: once arrivals stop, the backlog drains within
+    a few pumps and from the very next pump on every decision is the K=1
+    fast path — deep lanes are never idled on an empty pool."""
+    r = run_sim("bursty", seed=3, ticks=48, feed_until=24)
+    assert r.drain_tick is not None and r.drain_tick < 24 + 4
+    assert r.backlogs_end == [0, 0, 0]
+    assert all(k == 1 for k in r.ks[r.drain_tick + 1 :])
+    assert max(r.ks[:24]) > 1  # the bursts actually bought deep lanes
+    check_scheduler_trace(r.scheduler)
+
+
+def test_sim_no_grow_shrink_oscillation_at_steady_load():
+    """Steady trickle on an elastic ladder: the controller may settle onto
+    a tier, but it never oscillates — all tier moves (if any) point the
+    same direction, and the capacity trajectory is monotone."""
+    r = run_sim(
+        "trickle", seed=11, ticks=96, sessions=2, tiers=(2, 3, 4)
+    )
+    directions = {d for _, d in r.tier_moves}
+    assert len(directions) <= 1, f"oscillation: {r.tier_moves}"
+    caps = r.capacity_history
+    assert caps == sorted(caps) or caps == sorted(caps, reverse=True)
+    check_scheduler_trace(r.scheduler)
+
+
+def test_sim_parking_never_fires_with_headroom():
+    """With attentive readers the adaptive K always fits the backpressure
+    headroom, so the parking path (backlog present, zero headroom) must
+    never trigger — adaptive K replaces parking, it does not race it."""
+    r = run_sim("bursty", seed=5, ticks=64, max_unread_hops=16)
+    assert r.parked_ticks == []
+    assert max(r.ks) > 1
+    check_scheduler_trace(r.scheduler)
+
+
+def test_sim_bimodal_slow_readers_park_without_breaking_invariants():
+    """Bimodal fleet, slow readers on the odd sessions: parking is the
+    CORRECT outcome for a reader that stops draining, and the chosen K must
+    keep respecting the headroom clip throughout (checked per decision by
+    ``check_scheduler_trace``)."""
+    r = run_sim(
+        "bursty",  # heavy identical arrivals: only the read rate differs
+        seed=9,
+        ticks=64,
+        sessions=4,
+        max_unread_hops=4,
+        slow_read_rate=0,  # stalled readers: the pathological half
+    )
+    assert r.parked_ticks, "slow readers never hit backpressure?"
+    check_scheduler_trace(r.scheduler)
+    # the bimodal ARRIVAL trace also exercises mixed lanes cleanly
+    check_scheduler_trace(
+        run_sim("bimodal", seed=9, ticks=64, sessions=4).scheduler
+    )
+
+
+# -- layer 3: live pools -----------------------------------------------------
+
+
+def _adaptive_pool(backend: str, inflight: int, **kw) -> SessionPool:
+    return SessionPool(
+        PARAMS, CFG, capacity=CAP, backend=backend, inflight=inflight,
+        hops_per_step=K, ingest_ring=RING, step_fns=STEPS[backend], **kw,
+    )
+
+
+def _static_pool(backend: str, inflight: int, **kw) -> SessionPool:
+    return SessionPool(
+        PARAMS, CFG, capacity=CAP, backend=backend, inflight=inflight,
+        hops_per_step=K, step_fns=STEPS[backend], **kw,
+    )
+
+
+def _replay_pump(ref: SessionPool, decisions) -> None:
+    """Drive a static pool through a recorded K-decision sequence, exactly
+    as the adaptive pump obeyed it (one dispatch per decision, in order)."""
+    for d in decisions:
+        ref.dispatch(max_hops=min(d.k, ref.hops_per_step))
+    ref.collect()
+
+
+def _run_adaptive_churn(ops, backend: str, inflight: int) -> None:
+    """The property: adaptive serving is INVISIBLE to audio. An adaptive
+    pool (scheduler-chosen per-dispatch K, device ingestion ring) and a
+    static pool replaying the recorded decision trace emit bit-identical
+    output for the same op sequence."""
+    adaptive = _adaptive_pool(backend, inflight, max_unread_hops=2 * K)
+    ref = _static_pool(backend, inflight, max_unread_hops=2 * K)
+    sched = scheduler_for_pool(K)
+    streams = []  # [adaptive handle, ref handle, audio, cursor]
+    seeds = itertools.count(7000)
+    for code, arg in ops:
+        op = code % 5
+        if op == 0 and ref.num_active < CAP:
+            streams.append(
+                [adaptive.attach(), ref.attach(), _audio(next(seeds), MAX_HOPS), 0]
+            )
+        elif op == 1 and streams:  # identical ragged feed to both pools
+            s = streams[arg % len(streams)]
+            chunk = s[2][s[3] : s[3] + 1 + arg % ((K + 1) * HOP)]
+            s[3] += chunk.size
+            if chunk.size:
+                adaptive.feed(s[0], chunk)
+                ref.feed(s[1], chunk)
+        elif op == 2:  # adaptive pump; ref replays the new decisions
+            before = len(sched.trace)
+            adaptive.pump(sched)
+            _replay_pump(ref, [d for _, d in sched.trace[before:]])
+        elif op == 3 and streams:
+            s = streams[arg % len(streams)]
+            np.testing.assert_array_equal(adaptive.read(s[0]), ref.read(s[1]))
+        elif op == 4 and streams:
+            s = streams.pop(arg % len(streams))
+            np.testing.assert_array_equal(
+                adaptive.detach(s[0]), ref.detach(s[1])
+            )
+        check_pool_invariants(adaptive)
+        check_pool_invariants(ref)
+        check_scheduler_trace(sched)
+    before = len(sched.trace)
+    adaptive.pump(sched)
+    _replay_pump(ref, [d for _, d in sched.trace[before:]])
+    for s in streams:  # every survivor: identical audio AND accounting
+        assert s[0].stats.hops == s[1].stats.hops
+        np.testing.assert_array_equal(adaptive.detach(s[0]), ref.detach(s[1]))
+
+
+OPS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=4),
+              st.integers(min_value=0, max_value=2**16)),
+    min_size=4,
+    max_size=14,
+)
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=3, deadline=None)
+@given(ops=OPS)
+def test_adaptive_bit_identical_to_replayed_static_xla(inflight, ops):
+    _run_adaptive_churn(ops, "xla", inflight)
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=2, deadline=None)
+@given(ops=OPS)
+def test_adaptive_bit_identical_to_replayed_static_pallas(inflight, ops):
+    _run_adaptive_churn(ops, "pallas", inflight)
+
+
+# -- the pump() accounting fix: cost splits by lane occupancy ----------------
+
+
+def test_proc_share_splits_by_lane_occupancy():
+    """Regression for the fused-dispatch accounting gap: a ragged dispatch
+    (counts 3 and 1) must charge the deep slot for the lanes it alone kept
+    busy. With ``proc_share=1.0`` per hop the step's total cost is 4.0s over
+    3 lanes; lane 0 is shared by both slots, lanes 1-2 belong to the deep
+    slot — shares 10/3 and 2/3, NOT the old per-hop 3.0/1.0 split (which
+    pretended the shallow slot's hop cost as much as a full fused step)."""
+    pool = _static_pool("xla", 1)
+    a, b = pool.attach(), pool.attach()
+    pool.feed(a, _audio(1, 3))
+    pool.feed(b, _audio(2, 1))
+    assert pool.dispatch(max_hops=3) == 4
+    pool.collect(proc_share=1.0)
+    assert a.stats.proc_seconds == pytest.approx(10.0 / 3.0)
+    assert b.stats.proc_seconds == pytest.approx(2.0 / 3.0)
+    # totals conserve: the step's whole cost lands on its slots exactly once
+    assert a.stats.proc_seconds + b.stats.proc_seconds == pytest.approx(4.0)
+    pool.detach(a), pool.detach(b)
+
+
+def test_proc_share_uniform_counts_match_per_hop_split():
+    """Equal lane counts reduce lane-occupancy accounting to the old
+    per-hop scheme — the fix only changes RAGGED dispatches."""
+    pool = _static_pool("xla", 1)
+    a, b = pool.attach(), pool.attach()
+    for h in (a, b):
+        pool.feed(h, _audio(3, 2))
+    assert pool.dispatch(max_hops=2) == 4
+    pool.collect(proc_share=0.5)
+    assert a.stats.proc_seconds == pytest.approx(1.0)
+    assert b.stats.proc_seconds == pytest.approx(1.0)
+    pool.detach(a), pool.detach(b)
+
+
+def test_dispatch_max_hops_validation():
+    pool = _static_pool("xla", 1)
+    for bad in (0, K + 1, -1):
+        with pytest.raises(ValueError, match="max_hops"):
+            pool.dispatch(max_hops=bad)
+    with pytest.raises(ValueError, match="ingest_ring"):
+        SessionPool(
+            PARAMS, CFG, capacity=1, hops_per_step=4, ingest_ring=2,
+        )
+
+
+def test_pump_with_scheduler_reports_stats():
+    """The live wiring: ``pump(scheduler)`` consults the controller per
+    dispatch, clamps K to the compiled ceiling, and the trace both passes
+    the soak invariants and replays."""
+    pool = _adaptive_pool("xla", 2, max_unread_hops=2 * K)
+    sched = scheduler_for_pool(K)
+    h = pool.attach()
+    pool.feed(h, _audio(42, 6))
+    pool.pump(sched)
+    stats = sched.stats()
+    assert stats["decisions"] > 0
+    assert 1 <= stats["k_max_seen"] <= K
+    assert stats["k_last"] == 1  # the final (empty) dispatch saw no backlog
+    check_scheduler_trace(sched)
+    assert h.stats.hops == 6
+    pool.detach(h)
+
+
+# -- chaos: adaptive elastic sharded fleet under faults ----------------------
+
+
+def test_soak_adaptive_sharded_chaos():
+    """Kill/restart during adaptive operation: the scheduler-trace
+    invariants (K on ladder and within eligible headroom, tier moves legal,
+    replay determinism) and every pool invariant (incl. backlog
+    conservation across the device ring) hold after EVERY op, and a
+    restarted shard starts with a FRESH controller."""
+    pool = ShardedSessionPool(
+        PARAMS, CFG, capacity=3, shards=2, tiers=(2, 3), hops_per_step=K,
+        max_unread_hops=2 * K, adaptive=True, ingest_ring=RING,
+    )
+    counts = run_soak(
+        pool,
+        lambda rnd: _audio(rnd.randrange(20_000), K)[
+            : rnd.randrange(1, (K + 1) * HOP)
+        ],
+        n_ops=50,
+        seed=4,
+        faults=True,
+    )
+    assert counts["pump"] > 0 and counts["feed"] > 0
+    stats = pool.scheduler_stats()
+    assert stats is not None and len(stats) == pool.n_shards
+    assert sum(s.get("decisions", 0) for s in stats) > 0
+    # a restart replaces the controller: no stale trace carries over
+    victim = 0
+    pool.kill_shard(victim)
+    pool.restart_shard(victim)
+    assert pool._scheds[victim].trace == []
+    for sched in pool._scheds:
+        check_scheduler_trace(sched)
