@@ -31,6 +31,13 @@ for:
   ``StreamingGateway`` (real TCP, framed protocol, the gateway's own pump
   loop over a 1-shard ``ShardedSessionPool``), so ``socket_vs_inproc`` is
   the measured price of the network front door. Sessions-sweep mode only.
+- ``--durability off,on`` — the crash-recovery tax: ``on`` points serve
+  through a pool wired to a ``DurabilityManager`` (write-ahead hop journal
+  on every feed, ticket snapshot every ``--snapshot-every`` hops), so
+  ``durability_vs_off`` is the measured RTF overhead of crash-proof
+  sessions. Durable points additionally record the raw I/O the manager
+  performed (``journal_records`` / ``journal_bytes`` / ``snapshots`` /
+  ``snapshot_bytes``). Sessions-sweep mode, inproc transport only.
 
 ``--ramp`` instead drives an **elastic** pool (``ElasticSessionPool``,
 ``--tiers`` capacity ladder) through a session ramp that climbs past at
@@ -73,8 +80,8 @@ deploy path from rotting.
 Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
           [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
           [--buffering single,double] [--hops-per-step 1,4,8] [--ramp]
-          [--adaptive] [--transport inproc,socket] [--tiers 4,16,64]
-          [--smoke] [--json PATH]
+          [--adaptive] [--transport inproc,socket] [--durability off,on]
+          [--snapshot-every N] [--tiers 4,16,64] [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
@@ -82,6 +89,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -96,6 +104,7 @@ from repro.core.quant import FP10  # noqa: E402
 from repro.launch.serve import parse_tiers, reduced_cfg  # noqa: E402
 from repro.models import tftnn as tft  # noqa: E402
 from repro.serve import (  # noqa: E402
+    DurabilityManager,
     ElasticSessionPool,
     PoolFullError,
     SessionPool,
@@ -400,7 +409,7 @@ def _csv_ints(raw: str, what: str) -> list:
 
 
 _SWEEP_AXES = ("backend", "buffering", "hops_per_step", "transport",
-               "scheduler")
+               "scheduler", "durability")
 
 
 def _ratio(points: list, key: str, a: str, b: str) -> dict:
@@ -474,6 +483,15 @@ def main() -> None:
                     "inproc,socket — socket serves each point through a "
                     "localhost StreamingGateway (real TCP clients, framed "
                     "chunk protocol); sessions-sweep mode only")
+    ap.add_argument("--durability", default="off",
+                    help="comma list of crash-recovery modes to sweep: "
+                    "off,on — on serves through a pool wired to a "
+                    "DurabilityManager (write-ahead hop journal + periodic "
+                    "ticket snapshots in a temp dir), recording the RTF tax "
+                    "and the raw journal/snapshot I/O per point; "
+                    "sessions-sweep mode, inproc transport only")
+    ap.add_argument("--snapshot-every", type=int, default=16,
+                    help="snapshot cadence in hops for --durability on points")
     ap.add_argument("--adaptive", action="store_true",
                     help="bursty-trace sweep comparing the self-tuning "
                     "scheduler (AdaptiveScheduler + device ingestion ring) "
@@ -513,8 +531,15 @@ def main() -> None:
     bufferings = _csv_list(args.buffering, ("single", "double"))
     hops_sweep = _csv_ints(args.hops_per_step, "--hops-per-step")
     transports = _csv_list(args.transport, ("inproc", "socket"))
+    durabilities = _csv_list(args.durability, ("off", "on"))
     if "socket" in transports and (args.ramp or args.shards > 0):
         raise SystemExit("--transport socket only sweeps in sessions mode")
+    if "on" in durabilities and (args.ramp or args.shards > 0 or args.adaptive):
+        raise SystemExit("--durability on only sweeps in sessions mode")
+    if "on" in durabilities and "socket" in transports:
+        raise SystemExit("--durability on sweeps the inproc transport only")
+    if args.snapshot_every < 1:
+        raise SystemExit("--snapshot-every must be >= 1")
     if args.adaptive and (args.ramp or args.shards > 0):
         raise SystemExit("--adaptive is its own mode: drop --ramp/--shards")
     if args.adaptive and "socket" in transports:
@@ -561,6 +586,8 @@ def main() -> None:
             "bufferings": bufferings,
             "hops_per_step": hops_sweep,
             "transports": transports,
+            "durability": durabilities,
+            "snapshot_every": args.snapshot_every if "on" in durabilities else None,
             "shards_max": args.shards,
             "ramp": args.ramp,
             "adaptive": args.adaptive,
@@ -704,6 +731,7 @@ def main() -> None:
         sweep = [n for n in (1, 2, 4, 8, 16) if n <= args.capacity]
         combos = []
         gateways = []
+        tmpdirs = []
         for backend in backends:
             for hps in hops_sweep:
                 # buffering changes only host-side pipelining, not the
@@ -712,62 +740,87 @@ def main() -> None:
                                        backend=backend, max_hops_per_step=hps)
                 for buffering in bufferings:
                     for transport in transports:
-                        inflight = 2 if buffering == "double" else 1
-                        if transport == "inproc":
-                            pool = SessionPool(params, cfg,
-                                               capacity=args.capacity,
-                                               quant=quant, backend=backend,
-                                               inflight=inflight,
-                                               hops_per_step=hps, step_fn=step)
-                            # warm up the compilation outside the timed points
-                            w = pool.attach()
-                            pool.feed(w, audio[0][: 2 * hps * cfg.hop])
-                            pool.pump()
-                            pool.detach(w)
-                            runner = pool
-                        else:
-                            from repro.serve.gateway import GatewayThread
-                            # one shard: same batched step as the in-process
-                            # pool, so the delta IS the socket + gateway loop
-                            spool = ShardedSessionPool(
-                                params, cfg, args.capacity, shards=1,
-                                quant=quant, backend=backend,
-                                inflight=inflight, hops_per_step=hps)
-                            h = spool.attach("warmup")
-                            spool.feed(h, audio[0][: 2 * hps * cfg.hop])
-                            spool.pump_all()
-                            spool.detach(h)
-                            runner = GatewayThread(spool, pump_interval=0.001)
-                            gateways.append(runner)
-                        combos.append((backend, hps, buffering, transport,
-                                       runner))
+                        for durability in durabilities:
+                            inflight = 2 if buffering == "double" else 1
+                            manager = None
+                            if durability == "on":
+                                # temp-dir journal/snapshot store; detach at
+                                # the end of each point forgets the files, so
+                                # repeats never replay a prior point's state
+                                tmp = tempfile.TemporaryDirectory(
+                                    prefix="bench_durability_")
+                                tmpdirs.append(tmp)
+                                manager = DurabilityManager(
+                                    tmp.name,
+                                    snapshot_every=args.snapshot_every)
+                            if transport == "inproc":
+                                pool = SessionPool(params, cfg,
+                                                   capacity=args.capacity,
+                                                   quant=quant, backend=backend,
+                                                   inflight=inflight,
+                                                   hops_per_step=hps,
+                                                   step_fn=step,
+                                                   durability=manager)
+                                # warm up the compilation outside the timed points
+                                w = pool.attach()
+                                pool.feed(w, audio[0][: 2 * hps * cfg.hop])
+                                pool.pump()
+                                pool.detach(w)
+                                runner = pool
+                            else:
+                                from repro.serve.gateway import GatewayThread
+                                # one shard: same batched step as the in-process
+                                # pool, so the delta IS the socket + gateway loop
+                                spool = ShardedSessionPool(
+                                    params, cfg, args.capacity, shards=1,
+                                    quant=quant, backend=backend,
+                                    inflight=inflight, hops_per_step=hps)
+                                h = spool.attach("warmup")
+                                spool.feed(h, audio[0][: 2 * hps * cfg.hop])
+                                spool.pump_all()
+                                spool.detach(h)
+                                runner = GatewayThread(spool, pump_interval=0.001)
+                                gateways.append(runner)
+                            combos.append((backend, hps, buffering, transport,
+                                           durability, manager, runner))
         # --repeats are INTERLEAVED across configurations (round-robin, min
         # wall-clock per point wins, as in timeit): a noisy scheduler phase
         # spanning one whole pass penalizes every config equally instead of
         # silently skewing the cross-config comparison ratios.
         best: dict = {}
         for _ in range(args.repeats):
-            for backend, hps, buffering, transport, runner in combos:
+            for (backend, hps, buffering, transport, durability, manager,
+                 runner) in combos:
                 for n in sweep:
+                    pre = manager.totals() if manager is not None else None
                     if transport == "inproc":
                         r = run_point(runner, n, audio)
                     else:
                         r = run_socket_point(runner, n, audio)
-                    key = (backend, hps, buffering, transport, n)
+                    if manager is not None:
+                        # raw I/O the manager performed during this point —
+                        # delta, because totals() accumulate across repeats
+                        post = manager.totals()
+                        for field in ("journal_records", "journal_bytes",
+                                      "snapshots", "snapshot_bytes"):
+                            r[field] = post[field] - pre[field]
+                    key = (backend, hps, buffering, transport, durability, n)
                     if key not in best or r["aggregate_rtf"] < best[key]["aggregate_rtf"]:
                         best[key] = r
         for gw in gateways:
             gw.stop()
-        for backend, hps, buffering, transport, _runner in combos:
+        for (backend, hps, buffering, transport, durability, _manager,
+             _runner) in combos:
             for n in sweep:
-                r = best[(backend, hps, buffering, transport, n)]
+                r = best[(backend, hps, buffering, transport, durability, n)]
                 r.update(mode="sessions", backend=backend,
                          buffering=buffering, hops_per_step=hps,
-                         transport=transport)
+                         transport=transport, durability=durability)
                 points.append(r)
                 emit(
                     f"backend={backend} buffering={buffering} "
-                    f"hops={hps} transport={transport} sessions={n}",
+                    f"hops={hps} transport={transport} "
+                    f"durability={durability} sessions={n}",
                     r["p50_ms"] * 1e3,
                     f"aggregate_rtf={r['aggregate_rtf']:.3f} "
                     f"rt_capacity={r['rt_capacity']:.1f} "
@@ -775,6 +828,8 @@ def main() -> None:
                     f"p95_ms={r['p95_ms']:.2f} "
                     f"real_time={'yes' if r['aggregate_rtf'] < 1 else 'no'}",
                 )
+        for tmp in tmpdirs:
+            tmp.cleanup()
 
     comparisons = {}
     if "xla" in backends and "pallas" in backends:
@@ -785,6 +840,11 @@ def main() -> None:
         # > 1.0 is the fabric's measured overhead (socket framing + gateway
         # pump loop) relative to direct pool calls on the same host
         comparisons["socket_vs_inproc"] = _ratio(points, "transport", "inproc", "socket")
+    if "off" in durabilities and "on" in durabilities:
+        # > 1.0 is the crash-recovery tax (write-ahead journal append per
+        # feed + periodic ticket snapshot) relative to the same pool with
+        # durability disabled
+        comparisons["durability_vs_off"] = _ratio(points, "durability", "off", "on")
     for k in hops_sweep:
         if k != 1 and 1 in hops_sweep and not args.adaptive:
             # < 1.0 means the fused path lowered aggregate RTF (a speedup of
@@ -836,6 +896,37 @@ def main() -> None:
             print(f"# hops{k}_vs_hops1 mean RTF ratio: "
                   f"{ratio['mean_rtf_ratio']:.3f} "
                   f"({1.0 / ratio['mean_rtf_ratio']:.2f}x speedup)")
+    if args.smoke and "on" in durabilities:
+        # CI contract for the durability sweep: every durable point must
+        # carry the manager's I/O accounting, and journaling must actually
+        # have happened (a zero journal_bytes point means feeds bypassed the
+        # write-ahead log and the overhead being measured is fiction)
+        durable_points = [p for p in points
+                          if p.get("mode") == "sessions"
+                          and p.get("durability") == "on"]
+        if not durable_points:
+            raise SystemExit("smoke: --durability on produced no points")
+        for p in durable_points:
+            for field in ("journal_records", "journal_bytes", "snapshots",
+                          "snapshot_bytes"):
+                if field not in p:
+                    raise SystemExit(
+                        f"smoke: durable point missing {field!r}")
+            if p["journal_bytes"] <= 0 or p["journal_records"] <= 0:
+                raise SystemExit(
+                    "smoke: durable point recorded no journal writes")
+        if "off" in durabilities:
+            ratio = comparisons["durability_vs_off"]
+            if not ratio["num_points"] or ratio["mean_rtf_ratio"] is None:
+                raise SystemExit(
+                    "smoke: durability_vs_off comparison is empty — the "
+                    "durable sweep produced no points matching the "
+                    "non-durable sweep"
+                )
+            print(f"# durability_vs_off mean RTF ratio: "
+                  f"{ratio['mean_rtf_ratio']:.3f} "
+                  f"(journal_bytes/point max "
+                  f"{max(p['journal_bytes'] for p in durable_points)})")
 
 
 if __name__ == "__main__":

@@ -102,6 +102,24 @@ def adaptive_setup(args):
     return kmax, sched, {"ingest_ring": ring_depth_for(sched.config)}
 
 
+def durability_setup(args) -> dict:
+    """``--durability-dir`` wiring shared by the pool/sharded/gateway tasks.
+
+    Returns the extra pool kwarg: a ``DurabilityManager`` rooted at the
+    given directory, snapshotting every ``--snapshot-every`` hops (0 means
+    journal-only — replay from the last full snapshot or from birth).
+    Restarting any task against the same directory recovers its sessions
+    bit-exactly.
+    """
+    if not args.durability_dir:
+        return {}
+    from repro.serve import DurabilityManager
+
+    every = args.snapshot_every if args.snapshot_every > 0 else None
+    return {"durability": DurabilityManager(args.durability_dir,
+                                            snapshot_every=every)}
+
+
 def serve_pool(args) -> None:
     """Multi-session server: --batch concurrent streams through one
     SessionPool (or an ElasticSessionPool tier ladder with --elastic)."""
@@ -115,6 +133,7 @@ def serve_pool(args) -> None:
         cfg = reduced_cfg(cfg)
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     kmax, sched, extra = adaptive_setup(args)
+    extra.update(durability_setup(args))
     if args.elastic:
         # starts at the smallest tier and grows as sessions attach
         pool = ElasticSessionPool(params, cfg, parse_tiers(args.tiers),
@@ -156,6 +175,7 @@ def serve_sharded(args) -> None:
     per_shard = max(1, -(-args.batch // args.shards))  # ceil; hash skew absorbed below
     tiers = parse_tiers(args.tiers) if args.elastic else None
     kmax, _, extra = adaptive_setup(args)
+    extra.update(durability_setup(args))
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, prune_keep=args.prune_keep,
@@ -202,6 +222,7 @@ def serve_gateway(args) -> None:
     per_shard = max(2, -(-args.batch // args.shards))
     tiers = parse_tiers(args.tiers) if args.elastic else None
     kmax, _, extra = adaptive_setup(args)
+    extra.update(durability_setup(args))
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, prune_keep=args.prune_keep,
@@ -279,6 +300,15 @@ def main() -> None:
                     help="pool/sharded tasks with --backend pallas: keep-"
                     "fraction for the deploy-time zero-skipping weight masks "
                     "(lossy, the paper's pruned serving point)")
+    ap.add_argument("--durability-dir", default="",
+                    help="pool/sharded/gateway tasks: root directory for "
+                    "durable session state (ticket snapshots + hop "
+                    "journals); restarting against the same directory "
+                    "recovers every session bit-exactly")
+    ap.add_argument("--snapshot-every", type=int, default=64,
+                    help="snapshot cadence in hops per session (0 = journal "
+                    "only; smaller = shorter replay on recovery, more "
+                    "snapshot I/O while serving)")
     ap.add_argument("--shards", type=int, default=2,
                     help="sharded/gateway tasks: number of SessionPool shards")
     ap.add_argument("--host", default="127.0.0.1",

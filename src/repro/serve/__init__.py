@@ -13,8 +13,11 @@ loop (per-dispatch K from measured backlog, slope-triggered tier growth,
 cost-modeled shrink — every decision a pure function of an explicit
 observation, so traces replay); ``wire`` is the versioned binary
 form of ``SessionTicket`` (bit-exact round-trip — the cross-process
-contract); ``gateway`` is the network front door (asyncio socket server +
-client speaking a chunked streaming protocol over the sharded pool).
+contract); ``durability`` makes sessions crash-proof (generation-numbered
+ticket snapshots + a crc-framed hop journal; recovery replays journaled
+hops through the same pure step bit-exactly); ``gateway`` is the network
+front door (asyncio socket server + self-healing client speaking a chunked
+streaming protocol over the sharded pool).
 Architecture tour: ``docs/serving.md`` and ``docs/deploy.md``.
 """
 
@@ -23,11 +26,19 @@ from repro.serve.deploy import (  # noqa: F401
     build_deploy_plan,
     stream_hop_fused,
 )
+from repro.serve.durability import (  # noqa: F401
+    DurabilityError,
+    DurabilityManager,
+    SessionJournal,
+    SnapshotStore,
+    recover_session,
+)
 from repro.serve.elastic_pool import (  # noqa: F401
     ElasticSession,
     ElasticSessionPool,
 )
 from repro.serve.gateway import (  # noqa: F401
+    GatewayBusyError,
     GatewayClient,
     GatewayThread,
     StreamingGateway,

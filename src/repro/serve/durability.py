@@ -1,0 +1,674 @@
+"""Durable session recovery: snapshot + hop journal + bit-exact replay.
+
+The fabric so far survives shard death only when host memory survives —
+``kill_shard(lose_state=True)`` dumps resident sessions into
+``lost_session_ids`` and they are gone. This module closes that hole with
+the classic database recipe, built from pieces the stack already proves
+deterministic:
+
+- **``SessionJournal``** — an append-only, per-session log of everything
+  the client fed (and how much it has read) since the last snapshot. Each
+  record is length-prefixed and crc32-framed exactly like ``wire.py``'s
+  ticket body, so a crash mid-append leaves a *torn tail* that is detected
+  and truncated on the next open — never silently replayed.
+- **``SnapshotStore``** — periodic bit-exact ``SessionTicket`` snapshots
+  (``wire.encode_ticket`` bytes, whose decode→re-encode round trip is
+  byte-identical), written to a temp file and ``os.replace``d into place so
+  a snapshot is either fully durable or absent, never half-written.
+  Generation-numbered; the newest ``keep`` generations are retained so a
+  corrupted snapshot falls back one generation instead of losing the
+  stream.
+- **``recover_session``** — decode the newest valid snapshot, import it
+  into a pool, and replay the journaled feeds through the same pure hop
+  step. Because the step is pure and the scheduling machinery is
+  bit-identical across K/inflight/backend (PRs 3-7), the recovered
+  session's output stream is **bit-exact** with the uninterrupted one —
+  pinned by the hypothesis property in ``tests/test_durability.py`` and
+  the gateway kill/restart driver in ``tests/chaos.py``.
+
+On-disk layout (one directory per fleet, shared by every shard):
+
+    <root>/<quoted-session-id>.gen000003.snap      encode_ticket bytes
+    <root>/<quoted-session-id>.gen000003.journal   records fed AFTER snap 3
+
+Journal segment ``g`` holds the records appended after snapshot ``g`` was
+taken (segment 0 = since the session was born, before any snapshot).
+Recovery from snapshot ``g`` therefore replays segments ``g..latest`` in
+order; falling back to ``g-1`` replays ``g-1..latest``, which reproduces
+the exact same final state. Segments older than the oldest retained
+snapshot are pruned together with their snapshots.
+
+Journal file format (all integers little-endian):
+
+| offset | field   | contents                                   |
+|--------|---------|--------------------------------------------|
+| 0      | magic   | ``RJNL``                                   |
+| 4      | version | u16, currently 1                           |
+| 6      | flags   | u16, reserved (0)                          |
+| 8...   | records | ``u32 len | payload | u32 crc32(payload)`` |
+
+Record payload: ``u8 type`` + body. Types: ``1`` FEED (raw float32
+samples, the exact bytes the client fed), ``2`` READ (u64 cumulative
+samples delivered to the client — replay uses the max to discard
+already-delivered output so a recovered stream resumes at the client's
+read cursor instead of re-sending audio).
+
+Corruption policy — loud failure over silent corruption:
+
+- an *incomplete* trailing frame (length or crc runs past EOF) is a torn
+  append: truncated, the rest of the file replays (the torn feed was never
+  acknowledged to the client);
+- a *complete* frame whose crc mismatches is in-place corruption (an
+  append-only writer cannot produce it): ``DurabilityError``, because
+  records after it would replay against a wrong prefix;
+- a snapshot whose ``decode_ticket`` fails (bad crc/magic/body) is skipped
+  and recovery falls back to the previous generation; when no retained
+  generation decodes and the full-replay chain (segment 0 onward) is gone,
+  recovery raises ``DurabilityError`` instead of fabricating audio.
+
+What is and is not replayed: audio (state, pending input, unread output,
+hop/sample counters) is reproduced bit-exactly; wall-clock accounting
+(``proc_seconds``/RTF, pool step-latency percentiles) is *not* — replay
+compute time is the recovery machine's, not the dead machine's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import struct
+import zlib
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+from urllib.parse import quote, unquote
+
+import numpy as np
+
+from repro.serve.wire import WireFormatError, decode_ticket, encode_ticket
+
+JOURNAL_MAGIC = b"RJNL"
+JOURNAL_VERSION = 1
+_JHDR = struct.Struct("<4sHH")
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+
+REC_FEED = 1
+REC_READ = 2
+
+_FILE_RE = re.compile(r"^(?P<q>.+)\.gen(?P<g>\d{6,})\.(?P<ext>snap|journal)$")
+
+
+class DurabilityError(RuntimeError):
+    """Durable session state that cannot be trusted or reconstructed.
+
+    Raised on in-place journal corruption, an unrecoverable snapshot chain,
+    or replay bookkeeping that contradicts the journal (e.g. more samples
+    acknowledged as read than the replay can produce). Never degrades to
+    returning wrong audio.
+    """
+
+
+def _fname(sid: str, gen: int, ext: str) -> str:
+    return f"{quote(str(sid), safe='')}.gen{gen:06d}.{ext}"
+
+
+class SessionJournal:
+    """One append-only journal segment file (see the module docstring).
+
+    Opening an existing segment validates the header, scans every record,
+    and TRUNCATES a torn tail (a crash mid-append) before positioning the
+    write cursor — so an append never lands after garbage. In-place
+    corruption (a complete frame with a bad crc) raises ``DurabilityError``.
+
+    Args:
+        path: segment file; created (with header) when absent.
+        fsync: fsync after every append. Off by default — the chaos model
+            here is process death (buffers survive in the page cache), and
+            the benchmark's ``--durability`` axis prices the journaling
+            overhead without conflating it with disk sync latency.
+    """
+
+    def __init__(self, path: os.PathLike, *, fsync: bool = False) -> None:
+        self.path = Path(path)
+        self._fsync = fsync
+        self.feed_samples = 0  # float32 samples across all FEED records
+        self.records = 0
+        if self.path.exists():
+            records, valid_end, torn = self.scan(self.path, allow_torn=True)
+            if torn:
+                with open(self.path, "r+b") as f:
+                    f.truncate(valid_end)
+            for rtype, body in records:
+                self.records += 1
+                if rtype == REC_FEED:
+                    self.feed_samples += len(body) // 4
+        else:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            with open(self.path, "wb") as f:
+                f.write(_JHDR.pack(JOURNAL_MAGIC, JOURNAL_VERSION, 0))
+        self._f = open(self.path, "ab")
+
+    # -- writing -------------------------------------------------------------
+
+    def _append(self, rtype: int, body: bytes) -> int:
+        payload = bytes([rtype]) + body
+        frame = _U32.pack(len(payload)) + payload + _U32.pack(zlib.crc32(payload))
+        self._f.write(frame)
+        self._f.flush()
+        if self._fsync:
+            os.fsync(self._f.fileno())
+        self.records += 1
+        return len(frame)
+
+    def append_feed(self, samples: np.ndarray) -> int:
+        """Log one fed chunk (the exact float32 bytes); returns frame size."""
+        arr = np.ascontiguousarray(np.asarray(samples, np.float32).reshape(-1))
+        self.feed_samples += arr.size
+        return self._append(REC_FEED, arr.tobytes())
+
+    def append_read(self, acked_samples: int) -> int:
+        """Log the client's cumulative read cursor; returns frame size."""
+        return self._append(REC_READ, _U64.pack(int(acked_samples)))
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    # -- reading -------------------------------------------------------------
+
+    @staticmethod
+    def scan(
+        path: os.PathLike, *, allow_torn: bool
+    ) -> Tuple[List[Tuple[int, bytes]], int, bool]:
+        """Parse a segment file into ``(records, valid_end, torn_tail)``.
+
+        Args:
+            path: segment file to read.
+            allow_torn: an incomplete trailing frame is tolerated (returned
+                ``torn_tail=True`` with the valid prefix) — legal only on
+                the LAST segment of a chain, where it means a crash
+                mid-append. On earlier segments (closed by a snapshot
+                rotation) the same condition is corruption and raises.
+
+        Raises:
+            DurabilityError: bad header, a complete frame with a crc
+                mismatch (in-place corruption anywhere), or a torn tail
+                where ``allow_torn`` is False.
+        """
+        data = Path(path).read_bytes()
+        if len(data) < _JHDR.size:
+            if allow_torn:  # crash during file creation: nothing to replay
+                return [], 0, True
+            raise DurabilityError(f"{path}: truncated journal header")
+        magic, version, _flags = _JHDR.unpack_from(data, 0)
+        if magic != JOURNAL_MAGIC:
+            raise DurabilityError(f"{path}: bad journal magic {magic!r}")
+        if version != JOURNAL_VERSION:
+            raise DurabilityError(
+                f"{path}: unsupported journal version {version} "
+                f"(this build speaks {JOURNAL_VERSION})"
+            )
+        records: List[Tuple[int, bytes]] = []
+        pos = _JHDR.size
+        n = len(data)
+        while pos < n:
+            if pos + _U32.size > n:
+                break  # torn length prefix
+            (length,) = _U32.unpack_from(data, pos)
+            end = pos + _U32.size + length + _U32.size
+            if length < 1 or end > n:
+                break  # torn frame: payload or crc ran past EOF
+            payload = data[pos + _U32.size : pos + _U32.size + length]
+            (crc,) = _U32.unpack_from(data, end - _U32.size)
+            if zlib.crc32(payload) != crc:
+                raise DurabilityError(
+                    f"{path}: journal record at offset {pos} fails its crc "
+                    "— in-place corruption, refusing to replay past it"
+                )
+            records.append((payload[0], payload[1:]))
+            pos = end
+        torn = pos != n
+        if torn and not allow_torn:
+            raise DurabilityError(
+                f"{path}: torn frame at offset {pos} in a non-final segment "
+                "— the chain cannot replay exactly"
+            )
+        return records, pos, torn
+
+
+class SnapshotStore:
+    """Generation-numbered, atomically-written ``SessionTicket`` snapshots.
+
+    One file per (session, generation): ``encode_ticket`` bytes written to
+    a temp file and ``os.replace``d into place, so a snapshot is either
+    fully present or absent. ``keep`` newest generations are retained per
+    session (older ones — and, via the manager, their journal segments —
+    are pruned), which is the fallback budget when the newest snapshot is
+    found corrupted at recovery.
+    """
+
+    def __init__(self, root: os.PathLike, *, keep: int = 2) -> None:
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def path(self, sid: str, gen: int) -> Path:
+        return self.root / _fname(sid, gen, "snap")
+
+    def generations(self, sid: str) -> List[int]:
+        """Snapshot generations on disk for one session, ascending."""
+        q = quote(str(sid), safe="")
+        gens = []
+        for p in self.root.iterdir():
+            m = _FILE_RE.match(p.name)
+            if m and m.group("q") == q and m.group("ext") == "snap":
+                gens.append(int(m.group("g")))
+        return sorted(gens)
+
+    def write(self, sid: str, blob: bytes, gen: int) -> Path:
+        """Durably install snapshot ``gen`` (atomic rename), then prune."""
+        final = self.path(sid, gen)
+        tmp = final.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        for old in self.generations(sid)[: -self.keep or None]:
+            if old < gen - self.keep + 1:
+                self.path(sid, old).unlink(missing_ok=True)
+        return final
+
+    def load(self, sid: str, gen: int):
+        """Decode one generation; raises ``WireFormatError`` on corruption."""
+        return decode_ticket(self.path(sid, gen).read_bytes())
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Open journaling state for one live durable session."""
+
+    sid: str
+    gen: int  # newest snapshot generation (0 = none yet)
+    journal: SessionJournal  # current (== newest) segment, open for append
+    samples_since: int  # raw samples journaled since the last snapshot
+    snap_samples_in: int  # stats.samples_in captured by the last snapshot
+
+
+@dataclasses.dataclass
+class RecoveryPlan:
+    """What ``load_for_recovery`` found on disk for one session."""
+
+    ticket: Optional[object]  # decoded SessionTicket, or None (fresh replay)
+    base_gen: int  # generation the ticket came from (0 = fresh)
+    records: List[Tuple[int, bytes]]  # journal records to replay, in order
+    skipped_gens: List[int]  # newer generations skipped as corrupt/unusable
+
+
+class DurabilityManager:
+    """Fleet-level durability: one directory of snapshots + journals.
+
+    The pools' hook surface (``SessionPool``/``ElasticSessionPool`` via
+    ``durability=``, keyed per session): ``begin`` on attach, ``record_feed``
+    on every feed (returns True when the snapshot cadence is due),
+    ``record_read`` on every non-empty read, ``snapshot`` with a fresh
+    ``SessionTicket`` when due, ``forget`` on clean detach, ``release``
+    (close handles, keep files) when a session migrates away.
+
+    Args:
+        root: directory for every session's snapshots and journal segments.
+            One manager (one directory) serves a whole fleet.
+        snapshot_every: snapshot cadence in HOPS fed since the last
+            snapshot; ``None`` disables automatic snapshots (journal-only:
+            recovery replays the whole stream from birth, or from the last
+            explicit ``snapshot`` call). Lower = cheaper replay after a
+            crash, higher = less steady-state overhead — measured, not
+            guessed, by ``benchmarks/server_throughput.py --durability``.
+        keep: snapshot generations retained per session (>= 1). This is the
+            corruption fallback budget: recovery can step back ``keep - 1``
+            generations before the chain is declared unrecoverable.
+        fsync: fsync journal appends and snapshots (see ``SessionJournal``).
+    """
+
+    def __init__(
+        self,
+        root: os.PathLike,
+        *,
+        snapshot_every: Optional[int] = 64,
+        keep: int = 2,
+        fsync: bool = False,
+    ) -> None:
+        if snapshot_every is not None and snapshot_every < 1:
+            raise ValueError("snapshot_every must be >= 1 hops (or None)")
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.snapshot_every = snapshot_every
+        self.store = SnapshotStore(self.root, keep=keep)
+        self._fsync = fsync
+        self._open: Dict[str, _Entry] = {}
+        # overhead accounting for the benchmark's --durability axis
+        self.journal_records_written = 0
+        self.journal_bytes_written = 0
+        self.snapshots_written = 0
+        self.snapshot_bytes_written = 0
+
+    # -- file inventory ------------------------------------------------------
+
+    def _files(self, sid: str) -> List[Path]:
+        q = quote(str(sid), safe="")
+        out = []
+        for p in self.root.iterdir():
+            m = _FILE_RE.match(p.name)
+            if m and m.group("q") == q:
+                out.append(p)
+        return out
+
+    def _segments(self, sid: str) -> List[int]:
+        q = quote(str(sid), safe="")
+        segs = []
+        for p in self.root.iterdir():
+            m = _FILE_RE.match(p.name)
+            if m and m.group("q") == q and m.group("ext") == "journal":
+                segs.append(int(m.group("g")))
+        return sorted(segs)
+
+    def _segment_path(self, sid: str, seg: int) -> Path:
+        return self.root / _fname(sid, seg, "journal")
+
+    def has(self, sid) -> bool:
+        """True when any durable state for this session id is on disk."""
+        return bool(self._files(str(sid)))
+
+    def list_sessions(self) -> List[str]:
+        """Every session id with durable state on disk (sorted)."""
+        sids = set()
+        for p in self.root.iterdir():
+            m = _FILE_RE.match(p.name)
+            if m:
+                sids.add(unquote(m.group("q")))
+        return sorted(sids)
+
+    # -- the journaling hook surface ----------------------------------------
+
+    def _entry(self, sid: str) -> _Entry:
+        e = self._open.get(sid)
+        if e is None:
+            e = self._resume_from_disk(sid)
+            self._open[sid] = e
+        return e
+
+    def _resume_from_disk(self, sid: str) -> _Entry:
+        gens = self.store.generations(sid)
+        gen = gens[-1] if gens else 0
+        segs = self._segments(sid)
+        seg = max(segs[-1] if segs else gen, gen)
+        journal = SessionJournal(self._segment_path(sid, seg), fsync=self._fsync)
+        snap_in = 0
+        if gen:
+            try:
+                snap_in = int(self.store.load(sid, gen).stats.samples_in)
+            except (WireFormatError, OSError):
+                pass  # recovery (not bookkeeping) decides what that means
+        return _Entry(
+            sid=sid, gen=gen, journal=journal,
+            samples_since=journal.feed_samples, snap_samples_in=snap_in,
+        )
+
+    def begin(self, sid) -> None:
+        """Start a FRESH durable session: wipe any stale files for this id
+        and open journal segment 0. Call on attach of a brand-new stream;
+        use ``resume``/``recover_session`` to continue an existing one."""
+        sid = str(sid)
+        self.forget(sid)
+        journal = SessionJournal(self._segment_path(sid, 0), fsync=self._fsync)
+        self._open[sid] = _Entry(
+            sid=sid, gen=0, journal=journal, samples_since=0, snap_samples_in=0
+        )
+
+    def resume(self, sid) -> None:
+        """Re-open an existing session's journaling state from disk (after
+        a migration hand-off or a recovery) without wiping anything."""
+        self._entry(str(sid))
+
+    def record_feed(self, sid, samples: np.ndarray, hop: int) -> bool:
+        """Append one FEED record; True when a snapshot is now due."""
+        e = self._entry(str(sid))
+        nbytes = e.journal.append_feed(samples)
+        e.samples_since += int(np.asarray(samples).size)
+        self.journal_records_written += 1
+        self.journal_bytes_written += nbytes
+        return (
+            self.snapshot_every is not None
+            and e.samples_since // hop >= self.snapshot_every
+        )
+
+    def record_read(self, sid, acked_samples: int) -> None:
+        """Append a READ record (cumulative samples delivered)."""
+        e = self._entry(str(sid))
+        nbytes = e.journal.append_read(acked_samples)
+        self.journal_records_written += 1
+        self.journal_bytes_written += nbytes
+
+    def snapshot(self, sid, ticket) -> int:
+        """Write snapshot generation ``g+1`` and rotate the journal to a
+        fresh segment ``g+1`` (records before this instant are covered by
+        the snapshot; records after it land in the new segment).
+
+        Returns the new generation number.
+        """
+        sid = str(sid)
+        e = self._entry(sid)
+        segs = self._segments(sid)
+        gens = self.store.generations(sid)
+        new_gen = max([e.gen] + segs + gens) + 1
+        blob = encode_ticket(ticket)
+        self.store.write(sid, blob, new_gen)
+        e.journal.close()
+        e.journal = SessionJournal(
+            self._segment_path(sid, new_gen), fsync=self._fsync
+        )
+        e.gen = new_gen
+        e.samples_since = 0
+        e.snap_samples_in = int(ticket.stats.samples_in)
+        self.snapshots_written += 1
+        self.snapshot_bytes_written += len(blob)
+        # prune journal segments older than the oldest retained snapshot
+        cutoff = new_gen - self.store.keep + 1
+        for seg in self._segments(sid):
+            if seg < cutoff:
+                self._segment_path(sid, seg).unlink(missing_ok=True)
+        return new_gen
+
+    def release(self, sid) -> None:
+        """Close open handles for a session, KEEPING its files (the session
+        lives on elsewhere — migration, shutdown)."""
+        e = self._open.pop(str(sid), None)
+        if e is not None:
+            e.journal.close()
+
+    def forget(self, sid) -> None:
+        """Delete every durable trace of a session (clean detach)."""
+        sid = str(sid)
+        self.release(sid)
+        for p in self._files(sid):
+            p.unlink(missing_ok=True)
+
+    def close(self) -> None:
+        """Release every open session (files stay for recovery)."""
+        for sid in list(self._open):
+            self.release(sid)
+
+    # -- introspection -------------------------------------------------------
+
+    def entry_stats(self, sid) -> Optional[Dict[str, int]]:
+        """Open-session journaling counters (None when not open) — the soak
+        harness's journal-conservation probe."""
+        e = self._open.get(str(sid))
+        if e is None:
+            return None
+        return {
+            "gen": e.gen,
+            "samples_since": e.samples_since,
+            "journal_feed_samples": e.journal.feed_samples,
+            "snap_samples_in": e.snap_samples_in,
+        }
+
+    def totals(self) -> Dict[str, int]:
+        """Fleet-wide overhead counters (the benchmark's overhead fields)."""
+        return {
+            "journal_records": self.journal_records_written,
+            "journal_bytes": self.journal_bytes_written,
+            "snapshots": self.snapshots_written,
+            "snapshot_bytes": self.snapshot_bytes_written,
+        }
+
+    # -- recovery ------------------------------------------------------------
+
+    def load_for_recovery(self, sid) -> RecoveryPlan:
+        """Find the newest usable (snapshot, journal chain) for a session.
+
+        Tries snapshot generations newest-first; a generation whose
+        snapshot fails to decode, or whose journal chain has a gap, is
+        skipped (falling back one generation). The final candidate is a
+        fresh replay from segment 0, usable only while no segment has been
+        pruned. Journal records of the selected chain are validated here
+        (crc per record, torn tail tolerated only on the final segment).
+
+        Raises:
+            DurabilityError: nothing on disk for this id, every candidate
+                chain is unusable, or the selected chain is corrupt.
+        """
+        sid = str(sid)
+        if not self.has(sid):
+            raise DurabilityError(f"no durable state for session {sid!r}")
+        # a half-open entry could hold buffered bytes; flush before reading
+        e = self._open.get(sid)
+        if e is not None:
+            e.journal._f.flush()
+        segs = self._segments(sid)
+        last_seg = segs[-1] if segs else 0
+        skipped: List[int] = []
+        errors: List[str] = []
+        for base in sorted(self.store.generations(sid), reverse=True) + [0]:
+            ticket = None
+            if base:
+                try:
+                    ticket = self.store.load(sid, base)
+                except (WireFormatError, OSError) as exc:
+                    skipped.append(base)
+                    errors.append(f"gen {base}: snapshot unreadable ({exc})")
+                    continue
+            needed = [s for s in segs if s >= base]
+            # the chain must be contiguous from the base: segment `base`
+            # (rotated into existence by that snapshot) through the newest.
+            # A missing TOP segment is legal only when nothing followed it
+            # (crash between snapshot write and journal rotation).
+            if needed and (
+                needed[0] != base
+                or needed != list(range(needed[0], needed[0] + len(needed)))
+            ):
+                if base:
+                    skipped.append(base)
+                errors.append(f"gen {base}: journal chain has gaps ({needed})")
+                continue
+            records: List[Tuple[int, bytes]] = []
+            for seg in needed:
+                recs, _, _ = SessionJournal.scan(
+                    self._segment_path(sid, seg), allow_torn=(seg == last_seg)
+                )
+                records.extend(recs)
+            return RecoveryPlan(
+                ticket=ticket, base_gen=base, records=records,
+                skipped_gens=skipped,
+            )
+        raise DurabilityError(
+            f"session {sid!r} is unrecoverable: no usable snapshot/journal "
+            f"chain ({'; '.join(errors)})"
+        )
+
+
+def recover_session(pool, manager: DurabilityManager, sid, *, finalize=True):
+    """Reconstruct a crashed session in ``pool``, bit-exactly.
+
+    Decodes the newest valid snapshot (``manager.load_for_recovery``),
+    imports it into ``pool`` (or attaches fresh when the session never
+    snapshotted), replays every journaled feed through the pool's own pure
+    hop step, and advances the output queue past everything the client had
+    already been handed (the journal's READ cursor) — so the recovered
+    session's next ``read()`` continues the stream at exactly the byte the
+    client stopped at.
+
+    Args:
+        pool: any pool with the session surface (``attach``/``feed``/
+            ``pump``/``import_session``/``discard_output``/
+            ``snapshot_session``) — a ``SessionPool`` or an
+            ``ElasticSessionPool``; the sharded router recovers through its
+            shard pools (``ShardedSessionPool.recover_sessions``).
+        manager: the fleet's ``DurabilityManager``.
+        sid: the durable session id to recover.
+        finalize: re-open journaling for the recovered session and write a
+            fresh snapshot immediately (collapsing the replay chain, so the
+            NEXT crash replays only what follows). Pass False to rebuild a
+            session read-only (e.g. forensics) without touching disk.
+
+    Returns:
+        The pool's live handle for the recovered session.
+
+    Raises:
+        DurabilityError: the on-disk state is unrecoverable or contradicts
+            itself (see ``load_for_recovery``).
+    """
+    plan = manager.load_for_recovery(sid)
+    # replay must not re-journal: the records being fed back are already on
+    # disk. Suspend the pool's own durability hooks for the duration.
+    saved = getattr(pool, "_durability", None)
+    if saved is not None:
+        pool._durability = None
+    try:
+        if plan.ticket is not None:
+            handle = pool.import_session(plan.ticket)
+            baseline = int(plan.ticket.stats.samples_out)
+        else:
+            handle = pool.attach()
+            baseline = 0
+        acked = baseline
+        for rtype, body in plan.records:
+            if rtype == REC_FEED:
+                pool.feed(handle, np.frombuffer(body, np.float32))
+            elif rtype == REC_READ:
+                acked = max(acked, _U64.unpack(body)[0])
+            else:
+                raise DurabilityError(
+                    f"session {sid!r}: unknown journal record type {rtype}"
+                )
+        pool.pump()
+        # skip what the client already received; under backpressure the
+        # discard frees headroom, so keep pumping until the cursor matches
+        remaining = acked - baseline
+        while remaining > 0:
+            dropped = pool.discard_output(handle, remaining)
+            remaining -= dropped
+            if remaining > 0 and pool.pump() == 0 and dropped == 0:
+                raise DurabilityError(
+                    f"session {sid!r}: journal acknowledges {acked} samples "
+                    f"read but replay can only produce {acked - remaining} "
+                    "— refusing to resume a stream that would repeat or "
+                    "skip audio"
+                )
+    finally:
+        if saved is not None:
+            pool._durability = saved
+    if finalize:
+        manager.resume(sid)
+        manager.snapshot(sid, pool.snapshot_session(handle))
+        # snapshots proved unreadable during planning are garbage, not
+        # history: deleting them now keeps the ``keep`` fallback budget
+        # pointing at generations that can actually be decoded next crash
+        for gen in plan.skipped_gens:
+            manager.store.path(str(sid), gen).unlink(missing_ok=True)
+        if saved is manager and hasattr(pool, "bind_durable"):
+            pool.bind_durable(handle, str(sid))
+    return handle

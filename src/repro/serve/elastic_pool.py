@@ -133,6 +133,11 @@ class ElasticSessionPool:
         ingest_ring: device-resident ingestion ring depth forwarded to every
             tier (see ``SessionPool``); ring backlogs migrate bit-exactly
             across tiers through the same ``SessionTicket`` seam.
+        durability: optional ``DurabilityManager`` (see ``SessionPool``) —
+            held at THIS layer, keyed by the resize-stable handle, and
+            deliberately NOT forwarded to the per-tier inner pools: a tier
+            migration must look like one continuous stream on disk, not a
+            detach + fresh attach.
 
     Raises:
         ValueError: empty/non-increasing ``tiers``, bad ``shrink_fraction``.
@@ -161,6 +166,7 @@ class ElasticSessionPool:
         step_fn=None,
         step_fns: Optional[Dict[Any, Any]] = None,
         ingest_ring: Optional[int] = None,
+        durability: Optional[Any] = None,
     ) -> None:
         tiers = tuple(int(t) for t in tiers)
         if not tiers:
@@ -209,6 +215,11 @@ class ElasticSessionPool:
         # each (lane count, tier shape) costs one compilation, ever.
         self._step_fns: Dict[Any, Any] = step_fns if step_fns is not None else {}
         self._step_fn_seed = step_fn
+        # durability lives at the elastic layer (keyed by the stable handle
+        # sid) so tier migrations never look like detach+attach on disk; the
+        # inner per-tier pools are built WITHOUT a manager
+        self._durability = durability
+        self._durable_ids: Dict[int, str] = {}
         self._pool = self._make_pool(tiers[0])
         self._handles: Dict[int, ElasticSession] = {}
         self._sid_counter = itertools.count()
@@ -403,8 +414,14 @@ class ElasticSessionPool:
 
     # -- session lifecycle ---------------------------------------------------
 
-    def attach(self) -> ElasticSession:
+    def attach(self, durable_id: Optional[str] = None) -> ElasticSession:
         """Claim a slot, growing to the next tier when the current one is full.
+
+        Args:
+            durable_id: on-disk identity for the stream's crash journal when
+                the pool has a ``durability`` manager (default
+                ``esess-<sid>``); stale state under this id is wiped.
+                Ignored without a manager.
 
         Returns:
             A resize-stable ``ElasticSession`` handle.
@@ -422,6 +439,10 @@ class ElasticSessionPool:
             )
         handle = ElasticSession(sid=next(self._sid_counter), inner=self._pool.attach())
         self._handles[handle.sid] = handle
+        if self._durability is not None:
+            did = durable_id if durable_id is not None else f"esess-{handle.sid}"
+            self._durable_ids[handle.sid] = did
+            self._durability.begin(did)
         return handle
 
     def _check(self, handle: ElasticSession) -> None:
@@ -441,6 +462,9 @@ class ElasticSessionPool:
         tail = self._pool.detach(handle.inner)
         handle.detached = True
         del self._handles[handle.sid]
+        did = self._durable_ids.pop(handle.sid, None)
+        if did is not None and self._durability is not None:
+            self._durability.forget(did)
         return tail
 
     # -- audio I/O -----------------------------------------------------------
@@ -448,12 +472,28 @@ class ElasticSessionPool:
     def feed(self, handle: ElasticSession, samples) -> None:
         """Queue raw audio (any chunk length) for a session."""
         self._check(handle)
+        did = self._durable_ids.get(handle.sid) if self._durability is not None else None
+        if did is not None:
+            # journal the exact bytes before the pool sees them (write-ahead)
+            samples = np.array(samples, np.float32, copy=True).reshape(-1)
+            due = self._durability.record_feed(did, samples, self.cfg.hop)
+            self._pool.feed(handle.inner, samples)
+            if due:
+                self._durability.snapshot(
+                    did, self._pool.snapshot_session(handle.inner)
+                )
+            return
         self._pool.feed(handle.inner, samples)
 
     def read(self, handle: ElasticSession) -> np.ndarray:
         """Pop all enhanced audio produced for this session so far."""
         self._check(handle)
-        return self._pool.read(handle.inner)
+        out = self._pool.read(handle.inner)
+        if out.size and self._durability is not None:
+            did = self._durable_ids.get(handle.sid)
+            if did is not None:
+                self._durability.record_read(did, handle.stats.samples_out)
+        return out
 
     # -- the batched hop loop ------------------------------------------------
 
@@ -551,10 +591,19 @@ class ElasticSessionPool:
         ticket = self._pool.export_session(handle.inner)
         handle.detached = True
         del self._handles[handle.sid]
+        did = self._durable_ids.pop(handle.sid, None)
+        if did is not None and self._durability is not None:
+            self._durability.release(did)  # keep the files: it lives on
         return ticket
 
-    def import_session(self, ticket: SessionTicket) -> ElasticSession:
-        """Resume an exported session here, growing a full pool if needed."""
+    def import_session(
+        self, ticket: SessionTicket, durable_id: Optional[str] = None
+    ) -> ElasticSession:
+        """Resume an exported session here, growing a full pool if needed.
+
+        ``durable_id`` resumes journaling under an EXISTING durable identity
+        (migration continuity); ``None`` imports without durability.
+        """
         if self._pool.num_active >= self._pool.capacity and not self._grow():
             raise PoolFullError(
                 f"elastic pool is full at the top tier (capacity="
@@ -565,7 +614,27 @@ class ElasticSessionPool:
             sid=next(self._sid_counter), inner=self._pool.import_session(ticket)
         )
         self._handles[handle.sid] = handle
+        if durable_id is not None and self._durability is not None:
+            self.bind_durable(handle, durable_id)
         return handle
+
+    def snapshot_session(self, handle: ElasticSession) -> SessionTicket:
+        """Non-destructive snapshot (see ``SessionPool.snapshot_session``)."""
+        self._check(handle)
+        return self._pool.snapshot_session(handle.inner)
+
+    def discard_output(self, handle: ElasticSession, n: int) -> int:
+        """Drop up to ``n`` unread samples from the front (recovery seam)."""
+        self._check(handle)
+        return self._pool.discard_output(handle.inner, n)
+
+    def bind_durable(self, handle: ElasticSession, durable_id: str) -> None:
+        """Adopt existing durable state for a live session (recovery seam)."""
+        if self._durability is None:
+            raise SessionError("elastic pool has no durability manager")
+        self._check(handle)
+        self._durable_ids[handle.sid] = durable_id
+        self._durability.resume(durable_id)
 
     # -- reporting -----------------------------------------------------------
 

@@ -56,15 +56,17 @@ from __future__ import annotations
 
 import asyncio
 import json
+import random
 import socket
 import struct
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.session_server import SessionError
+from repro.serve.session_server import PoolFullError, SessionError
+from repro.serve.sharded_pool import ShardDownError
 
 # client -> gateway
 MSG_ATTACH = 1
@@ -77,15 +79,31 @@ MSG_ATTACHED = 0x81
 MSG_AUDIO = 0x82
 MSG_DETACHED = 0x83
 MSG_STATS_REPLY = 0x84
+MSG_BUSY = 0x85  # admission control: u32 retry-after ms + UTF-8 reason
 MSG_ERROR = 0xFF
 
 _HEADER = struct.Struct("<IB")
+_BUSY_HEAD = struct.Struct("<I")
 # one frame must hold minutes of fp32 audio but never an accidental gigabyte
 MAX_FRAME_BYTES = 64 * 1024 * 1024
 
 
 class ProtocolError(RuntimeError):
     """Malformed gateway frame (bad type, oversized payload, truncation)."""
+
+
+class GatewayBusyError(SessionError):
+    """ATTACH load-shed by the gateway: no live shard has a slot right now.
+
+    The typed form of admission control — a full (or fully dead) fleet
+    answers ATTACH with a ``MSG_BUSY`` frame instead of a generic error, so
+    clients can back off and retry instead of parsing strings.
+    ``retry_after_ms`` is the gateway's retry hint.
+    """
+
+    def __init__(self, message: str, retry_after_ms: float) -> None:
+        super().__init__(message)
+        self.retry_after_ms = float(retry_after_ms)
 
 
 def _frame(msg_type: int, payload: bytes = b"") -> bytes:
@@ -118,6 +136,8 @@ class StreamingGateway:
             FEED, so interactive latency is not bound to the interval.
         orphan_ttl: pump ticks an orphaned session (connection dropped
             without DETACH) survives awaiting re-attach; ``None`` = forever.
+        busy_retry_ms: the retry-after hint carried by ``MSG_BUSY`` when an
+            ATTACH is load-shed (fleet full or every shard dead).
     """
 
     def __init__(
@@ -128,16 +148,20 @@ class StreamingGateway:
         port: int = 0,
         pump_interval: float = 0.002,
         orphan_ttl: Optional[int] = None,
+        busy_retry_ms: float = 50.0,
     ) -> None:
         if pump_interval <= 0:
             raise ValueError("pump_interval must be > 0")
         if orphan_ttl is not None and orphan_ttl < 1:
             raise ValueError("orphan_ttl must be >= 1 (or None)")
+        if busy_retry_ms < 0:
+            raise ValueError("busy_retry_ms must be >= 0")
         self.pool = pool
         self._host = host
         self._port = port
         self.pump_interval = pump_interval
         self.orphan_ttl = orphan_ttl
+        self.busy_retry_ms = busy_retry_ms
         self._server: Optional[asyncio.AbstractServer] = None
         self._pump_task: Optional[asyncio.Task] = None
         # session id -> live pool handle, for every gateway-attached session
@@ -147,6 +171,8 @@ class StreamingGateway:
         self.pump_ticks = 0
         self.connections_served = 0
         self.orphans_reaped = 0
+        self.load_shed = 0  # ATTACHes answered with MSG_BUSY
+        self.sessions_recovered_at_start = 0  # durable orphans from disk
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -162,7 +188,24 @@ class StreamingGateway:
         self._server = await asyncio.start_server(
             self._handle_connection, host=self._host, port=self._port
         )
+        self._recover_durable_orphans()
         self._pump_task = asyncio.ensure_future(self._pump_loop())
+
+    def _recover_durable_orphans(self) -> None:
+        """Cold-restart recovery: a fresh gateway process pointed at a pool
+        with a durability directory rebuilds every on-disk session before
+        serving. Recovered sessions enter as ORPHANS (subject to the normal
+        TTL), so their clients re-adopt by re-ATTACHing the same id — the
+        stream continues at the exact byte their last acked read stopped at.
+        """
+        recover = getattr(self.pool, "recover_sessions", None)
+        if recover is None:
+            return
+        for handle in recover():
+            sid = str(handle.session_id)
+            self._handles[sid] = handle
+            self._orphans[sid] = 0
+            self.sessions_recovered_at_start += 1
 
     async def stop(self) -> None:
         """Stop serving: close the listener, cancel the pump loop."""
@@ -264,7 +307,16 @@ class StreamingGateway:
                     f"this connection already serves session {sid!r}; "
                     "DETACH first"
                 )
-            sid, _ = self._attach(payload.decode("utf-8"))
+            try:
+                sid, _ = self._attach(payload.decode("utf-8"))
+            except (PoolFullError, ShardDownError) as e:
+                # admission control: a typed BUSY frame (retry-after hint +
+                # reason) instead of a stringified capacity error
+                self.load_shed += 1
+                body = _BUSY_HEAD.pack(int(self.busy_retry_ms)) + str(e).encode(
+                    "utf-8"
+                )
+                return MSG_BUSY, body, None
             return MSG_ATTACHED, sid.encode("utf-8"), sid
         if msg_type == MSG_STATS:
             stats = {
@@ -280,6 +332,15 @@ class StreamingGateway:
                 "pump_ticks": self.pump_ticks,
                 "active": self.pool.num_active,
                 "orphans": len(self._orphans),
+                "load_shed": self.load_shed,
+                "sessions_recovered": getattr(
+                    self.pool, "sessions_recovered", 0
+                ),
+                "sessions_recovered_at_start": self.sessions_recovered_at_start,
+                "recovery_errors": [
+                    [str(s), msg]
+                    for s, msg in getattr(self.pool, "recovery_errors", [])
+                ],
             }
             sched_stats = getattr(self.pool, "scheduler_stats", None)
             if sched_stats is not None:
@@ -315,11 +376,18 @@ class StreamingGateway:
         raise ProtocolError(f"unknown message type {msg_type}")
 
     def _guarded(self, sid: str, op, handle, *args):
-        """Run a pool op; if the session was lost to a shard failure, drop
-        the gateway's stale handle so the client's error is final."""
+        """Run a pool op; a stale handle re-binds through ``pool.lookup``
+        (a loss+recovery cycle swaps the live handle underneath the
+        gateway), and a session truly lost drops its gateway handle so the
+        client's error is final."""
         try:
             return op(handle, *args)
         except SessionError:
+            lookup = getattr(self.pool, "lookup", None)
+            fresh = lookup(sid) if lookup is not None else None
+            if fresh is not None and fresh is not handle:
+                self._handles[sid] = fresh
+                return op(fresh, *args)
             if sid in getattr(self.pool, "lost_session_ids", ()):
                 self._handles.pop(sid, None)
                 self._orphans.pop(sid, None)
@@ -346,8 +414,10 @@ class GatewayThread:
     racing the pump loop.
     """
 
-    def __init__(self, pool, **gateway_kwargs) -> None:
-        self.gateway = StreamingGateway(pool, **gateway_kwargs)
+    def __init__(self, pool, *, gateway_cls=None, **gateway_kwargs) -> None:
+        # gateway_cls: a StreamingGateway subclass (fault-injecting test
+        # gateways override _dispatch_msg to kill connections mid-request)
+        self.gateway = (gateway_cls or StreamingGateway)(pool, **gateway_kwargs)
         self._loop = asyncio.new_event_loop()
         self._started = threading.Event()
         self._startup_error: Optional[BaseException] = None
@@ -400,40 +470,165 @@ class GatewayThread:
 
 
 class GatewayClient:
-    """Blocking reference client for the gateway protocol.
+    """Blocking, self-healing reference client for the gateway protocol.
 
     One TCP connection, one session: ``attach`` → ``feed`` (any chunk
     sizes) → ``read``/``read_until`` → ``detach``. ``drop()`` severs the
     connection WITHOUT detaching (the chaos harness's client-failure op);
     re-creating a client and attaching the same id resumes the stream with
     nothing lost.
+
+    Resilience (each request, not just each connect):
+
+    - **Per-request deadline** — every request gets ``timeout`` seconds of
+      wall clock; each socket op runs with the REMAINING budget, so a
+      request can never hang past its deadline no matter how many
+      reconnects it burns. A blown deadline raises ``TimeoutError`` and is
+      never blindly retried.
+    - **Reconnect with capped exponential backoff + jitter** — a dropped /
+      refused connection tears the socket down, sleeps
+      ``min(backoff_cap, backoff_base * 2^attempt)`` scaled by a random
+      jitter in [0.5, 1.5), reconnects, and retries the request, up to
+      ``max_retries`` times within the deadline.
+    - **Idempotent re-attach** — when a session is held, every reconnect
+      first re-ATTACHes the same id: the gateway hands back the orphaned
+      (or durably recovered) session, so the retried request lands on the
+      same stream. At-most-once caveat: a FEED whose connection died after
+      the gateway processed it but before the reply arrived is re-sent on
+      retry — the gateway kills connections BEFORE processing in the
+      failure modes tested here; exactly-once FEED needs an app-level
+      sequence number.
+
+    ``GatewayBusyError`` (typed ATTACH load-shed) is NOT retried — the
+    caller owns admission backoff policy; ``retry_after_ms`` is the hint.
     """
 
-    def __init__(self, host: str, port: int, timeout: float = 30.0) -> None:
-        self._sock = socket.create_connection((host, port), timeout=timeout)
-        self._sock.settimeout(timeout)
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        timeout: float = 30.0,
+        *,
+        max_retries: int = 4,
+        backoff_base: float = 0.05,
+        backoff_cap: float = 2.0,
+        reconnect: bool = True,
+    ) -> None:
+        if timeout <= 0:
+            raise ValueError("timeout must be > 0")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self._host = host
+        self._port = int(port)
+        self._timeout = float(timeout)
+        self._max_retries = int(max_retries)
+        self._backoff_base = float(backoff_base)
+        self._backoff_cap = float(backoff_cap)
+        self._auto_reconnect = bool(reconnect)
+        self._rng = random.Random()
+        self._closed = False
+        self._sock: Optional[socket.socket] = None
         self.session_id: Optional[str] = None
+        self.reconnects = 0  # successful re-connections (observability)
+        self._connect(time.monotonic() + self._timeout)
 
-    # -- framing ------------------------------------------------------------
+    # -- framing / transport -------------------------------------------------
 
-    def _recv_exact(self, n: int) -> bytes:
+    def _remaining(self, deadline: float) -> float:
+        rem = deadline - time.monotonic()
+        if rem <= 0:
+            raise TimeoutError("gateway request deadline exceeded")
+        return rem
+
+    def _connect(self, deadline: float) -> None:
+        self._sock = socket.create_connection(
+            (self._host, self._port), timeout=self._remaining(deadline)
+        )
+
+    def _teardown(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _recv_exact(self, n: int, deadline: float) -> bytes:
         buf = bytearray()
         while len(buf) < n:
+            self._sock.settimeout(self._remaining(deadline))
             chunk = self._sock.recv(n - len(buf))
             if not chunk:
                 raise ConnectionError("gateway closed the connection")
             buf += chunk
         return bytes(buf)
 
-    def _request(self, msg_type: int, payload: bytes = b"") -> Tuple[int, bytes]:
+    def _raw_request(
+        self, msg_type: int, payload: bytes, deadline: float
+    ) -> Tuple[int, bytes]:
+        """One attempt on the current socket (no reconnect, no retry)."""
+        self._sock.settimeout(self._remaining(deadline))
         self._sock.sendall(_frame(msg_type, payload))
-        length, reply_type = _HEADER.unpack(self._recv_exact(_HEADER.size))
+        length, reply_type = _HEADER.unpack(self._recv_exact(_HEADER.size, deadline))
         if length > MAX_FRAME_BYTES:
             raise ProtocolError(f"oversized reply frame ({length} bytes)")
-        reply = self._recv_exact(length)
+        reply = self._recv_exact(length, deadline)
         if reply_type == MSG_ERROR:
             raise SessionError(reply.decode("utf-8"))
+        if reply_type == MSG_BUSY:
+            (retry_ms,) = _BUSY_HEAD.unpack_from(reply)
+            raise GatewayBusyError(
+                reply[_BUSY_HEAD.size :].decode("utf-8"), retry_ms
+            )
         return reply_type, reply
+
+    def _reconnect(self, deadline: float, reattach: bool) -> None:
+        self._connect(deadline)
+        self.reconnects += 1
+        if reattach and self.session_id is not None:
+            # re-adopt the orphaned session before resuming the stream —
+            # idempotent: the gateway hands the same live session back
+            rtype, reply = self._raw_request(
+                MSG_ATTACH, self.session_id.encode("utf-8"), deadline
+            )
+            granted = reply.decode("utf-8")
+            if rtype != MSG_ATTACHED or granted != self.session_id:
+                raise SessionError(
+                    f"re-attach after reconnect granted {granted!r} instead "
+                    f"of {self.session_id!r}"
+                )
+
+    def _request(
+        self, msg_type: int, payload: bytes = b"", timeout: Optional[float] = None
+    ) -> Tuple[int, bytes]:
+        deadline = time.monotonic() + (
+            self._timeout if timeout is None else timeout
+        )
+        attempt = 0
+        while True:
+            try:
+                if self._sock is None:
+                    if self._closed:
+                        raise ConnectionError("client is closed")
+                    self._reconnect(deadline, reattach=msg_type != MSG_ATTACH)
+                return self._raw_request(msg_type, payload, deadline)
+            except TimeoutError:
+                raise  # the per-request deadline is final: no blind retry
+            except (ConnectionError, OSError):
+                self._teardown()
+                if (
+                    self._closed
+                    or not self._auto_reconnect
+                    or attempt >= self._max_retries
+                ):
+                    raise
+                delay = min(
+                    self._backoff_cap, self._backoff_base * (2**attempt)
+                ) * (0.5 + self._rng.random())
+                if time.monotonic() + delay >= deadline:
+                    raise
+                time.sleep(delay)
+                attempt += 1
 
     # -- the chunked streaming surface --------------------------------------
 
@@ -496,16 +691,21 @@ class GatewayClient:
     def close(self) -> None:
         """Close politely (detach first if a session is still attached)."""
         try:
-            if self.session_id is not None:
+            if self.session_id is not None and self._sock is not None:
                 self.detach()
-        except (SessionError, OSError, ConnectionError):
+        except (SessionError, TimeoutError, OSError, ConnectionError):
             pass
-        self._sock.close()
+        self._closed = True
+        self._teardown()
 
     def drop(self) -> None:
         """Sever the connection WITHOUT detaching — the session is orphaned
-        on the gateway and resumable by ``attach(same_id)`` elsewhere."""
-        self._sock.close()
+        on the gateway and resumable by ``attach(same_id)`` elsewhere.
+
+        Also disables auto-reconnect on this client object: a dropped
+        client stays dropped (the chaos harness relies on this)."""
+        self._closed = True
+        self._teardown()
 
     def __enter__(self) -> "GatewayClient":
         return self

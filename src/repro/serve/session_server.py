@@ -202,6 +202,13 @@ class _RingBuffer:
         self._size -= n
         return out
 
+    def peek(self) -> np.ndarray:
+        """Copy the full buffered contents WITHOUT consuming them — the
+        non-destructive twin of ``pop(len(self))`` for snapshotting."""
+        if not self._size:
+            return np.zeros((0,), np.float32)
+        return np.concatenate([np.asarray(c, np.float32) for c in self._chunks])
+
 
 class SessionPool:
     """Fixed-capacity multi-session streaming enhancement server.
@@ -303,6 +310,18 @@ class SessionPool:
             dispatch time, which is what makes per-pump K re-tuning cheap.
             Must be >= ``hops_per_step``; outputs are bit-identical to the
             staged path.
+        durability: optional ``repro.serve.durability.DurabilityManager``.
+            When set, every ``attach`` registers a durable id (override via
+            ``attach(durable_id=...)``), every ``feed`` appends the fed
+            bytes to that session's crash journal (and snapshots the
+            session on the manager's cadence via ``snapshot_session``),
+            every non-empty ``read`` records the client's cumulative read
+            cursor, and ``detach`` deletes the durable state. After a
+            process crash ``repro.serve.durability.recover_session``
+            rebuilds the stream bit-exactly in a fresh pool. Exactly ONE
+            layer should journal a given stream: hand the manager to the
+            outermost pool a client feeds (the sharded router journals at
+            the router, not per shard).
 
     Raises:
         ValueError: ``capacity < 1``, ``inflight < 1``, ``hops_per_step <
@@ -330,6 +349,7 @@ class SessionPool:
         step_fn=None,
         step_fns: Optional[Dict[Any, Any]] = None,
         ingest_ring: Optional[int] = None,
+        durability: Optional[Any] = None,
     ) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -406,6 +426,8 @@ class SessionPool:
             self._ring_start = np.zeros((capacity,), np.int64)
             self._ring_count = np.zeros((capacity,), np.int64)
         self._buf_i = 0
+        self._durability = durability
+        self._durable_ids: Dict[int, str] = {}  # sid -> durable id
         # in-flight batched steps launched by dispatch(), drained in FIFO
         # order by collect(); at most ``inflight`` deep
         self._pending: List[_Pending] = []
@@ -440,7 +462,7 @@ class SessionPool:
     def num_active(self) -> int:
         return len(self._sessions)
 
-    def attach(self) -> Session:
+    def attach(self, durable_id: Optional[str] = None) -> Session:
         """Claim a free slot for a new stream.
 
         O(1): only flips the slot's mask and zeroes its state slice via
@@ -448,12 +470,29 @@ class SessionPool:
         NEVER triggers recompilation of the batched hop step (the pool's one
         compilation happens on the first ``step()``/``dispatch()``).
 
+        Args:
+            durable_id: the on-disk identity for this stream's crash
+                journal when the pool has a ``durability`` manager (default
+                ``sess-<sid>``). Any stale durable state under this id is
+                wiped — this attach IS the start of the stream. Ignored
+                without a manager.
+
         Returns:
             A fresh ``Session`` handle (zeroed stream state, empty buffers).
 
         Raises:
             PoolFullError: every slot is occupied.
         """
+        sess = self._attach_slot()
+        if self._durability is not None:
+            did = durable_id if durable_id is not None else f"sess-{sess.sid}"
+            self._durable_ids[sess.sid] = did
+            self._durability.begin(did)
+        return sess
+
+    def _attach_slot(self) -> Session:
+        """``attach`` minus durable registration (``import_session``'s path:
+        an imported stream is a continuation, never a fresh journal)."""
         try:
             slot = self._slot_session.index(None)
         except ValueError:
@@ -495,6 +534,9 @@ class SessionPool:
         sess.detached = True
         self._slot_session[sess.slot] = None
         del self._sessions[sess.sid]
+        did = self._durable_ids.pop(sess.sid, None)
+        if did is not None and self._durability is not None:
+            self._durability.forget(did)  # a clean goodbye needs no replay
         return tail
 
     def _check(self, sess: Session) -> None:
@@ -518,12 +560,21 @@ class SessionPool:
         self._check(sess)
         # copy: callers often reuse one capture buffer between feed() calls
         arr = np.array(samples, np.float32, copy=True).reshape(-1)
+        # journal BEFORE the pool sees the audio (write-ahead): a crash
+        # between the two leaves an extra journaled chunk the client was
+        # never acked for — replayed on recovery, exactly once
+        did = self._durable_ids.get(sess.sid) if self._durability is not None else None
+        snapshot_due = False
+        if did is not None:
+            snapshot_due = self._durability.record_feed(did, arr, self.cfg.hop)
         self._rings[sess.slot].push(arr)
         sess.stats.samples_in += arr.size
         # device-resident ingestion: ship every completed hop immediately so
         # dispatch() finds the backlog already on-device (sub-hop remainders
         # stay host-side until the next feed completes them)
         self._fill_ring(sess.slot)
+        if snapshot_due:
+            self._durability.snapshot(did, self.snapshot_session(sess))
 
     def read(self, sess: Session) -> np.ndarray:
         """Pop all enhanced audio produced for this session so far.
@@ -555,6 +606,12 @@ class SessionPool:
             return np.zeros((0,), np.float32)
         out = np.concatenate(chunks)
         sess.stats.samples_out += out.size
+        if self._durability is not None:
+            did = self._durable_ids.get(sess.sid)
+            if did is not None:
+                # the read cursor is durable BEFORE the caller forwards the
+                # audio: recovery never re-delivers samples recorded here
+                self._durability.record_read(did, sess.stats.samples_out)
         return out
 
     # -- the batched hop loop ----------------------------------------------
@@ -950,17 +1007,121 @@ class SessionPool:
         self._slot_session[slot] = None
         self._out[slot] = []
         del self._sessions[sess.sid]
+        did = self._durable_ids.pop(sess.sid, None)
+        if did is not None and self._durability is not None:
+            # the stream lives on elsewhere: close handles, KEEP the files
+            self._durability.release(did)
         return SessionTicket(
             state=state, pending_in=pending, unread_out=unread, stats=sess.stats,
             parked=bool(self._parked[slot]),
         )
 
-    def import_session(self, ticket: SessionTicket) -> Session:
+    def snapshot_session(self, sess: Session) -> SessionTicket:
+        """Snapshot a live session WITHOUT disturbing it (durability source).
+
+        The non-destructive twin of ``export_session``: same
+        ``SessionTicket``, but the session keeps serving — slot, rings,
+        unread output, and cursors are all left exactly as they were. Any
+        in-flight dispatch is collected first so the ticket is a consistent
+        cut of the stream.
+
+        Raises:
+            SessionError: the handle is not live on this pool.
+        """
+        self._check(sess)
+        self.collect()
+        slot = sess.slot
+        state = jax.tree_util.tree_map(
+            lambda leaf: np.asarray(leaf[slot]), self._state
+        )
+        parts: List[np.ndarray] = []
+        if self._ring_depth is not None and int(self._ring_count[slot]):
+            R = self._ring_depth
+            ring_host = np.asarray(self._ring_arr[slot])
+            order = [
+                (int(self._ring_start[slot]) + i) % R
+                for i in range(int(self._ring_count[slot]))
+            ]
+            parts.append(ring_host[order].reshape(-1))
+        host = self._rings[slot].peek()
+        if host.size:
+            parts.append(host)
+        pending = np.concatenate(parts) if parts else np.zeros((0,), np.float32)
+        chunks = self._out[slot]
+        unread = (
+            np.concatenate(chunks).copy() if chunks else np.zeros((0,), np.float32)
+        )
+        return SessionTicket(
+            state=state,
+            pending_in=pending,
+            unread_out=unread,
+            stats=dataclasses.replace(sess.stats),
+            parked=bool(self._parked[slot]),
+        )
+
+    def discard_output(self, sess: Session, n: int) -> int:
+        """Drop up to ``n`` enhanced samples from the FRONT of the session's
+        unread output, as if a client had read them (recovery's fast-forward
+        past audio the journal says was already delivered).
+
+        Counts the dropped samples into ``stats.samples_out`` — the
+        cumulative read cursor stays truthful — and un-parks the session
+        when the drop takes it back below ``max_unread_hops``.
+
+        Returns:
+            Samples actually dropped (<= ``n``; limited by what is queued).
+        """
+        self._check(sess)
+        if n <= 0:
+            return 0
+        self.collect()
+        slot = sess.slot
+        chunks = self._out[slot]
+        dropped = 0
+        while chunks and dropped < n:
+            head = chunks[0]
+            take = min(n - dropped, head.size)
+            if take == head.size:
+                chunks.pop(0)
+            else:
+                chunks[0] = head[take:]
+            dropped += take
+        sess.stats.samples_out += dropped
+        if (
+            self._parked[slot]
+            and self._max_unread_hops is not None
+            and self._unread_hops(slot) < self._max_unread_hops
+        ):
+            self._parked[slot] = False
+            if self._on_unparked is not None:
+                self._on_unparked(sess)
+        return dropped
+
+    def bind_durable(self, sess: Session, durable_id: str) -> None:
+        """Adopt existing on-disk durable state for a live session (the
+        recovery path's re-registration — unlike ``attach``, nothing is
+        wiped; journaling RESUMES at the current segment)."""
+        if self._durability is None:
+            raise SessionError("pool has no durability manager")
+        self._check(sess)
+        self._durable_ids[sess.sid] = durable_id
+        self._durability.resume(durable_id)
+
+    def import_session(
+        self, ticket: SessionTicket, durable_id: Optional[str] = None
+    ) -> Session:
         """Resume an exported session in this pool (migration target).
 
         Claims a slot via ``attach`` and overwrites its zeroed state slice
         with the ticket's snapshot (host numpy → this pool's device), then
         restores the queued input, unread output, and accounting.
+
+        Args:
+            ticket: the exported session.
+            durable_id: when the pool has a ``durability`` manager, resume
+                journaling under this EXISTING durable identity (the files
+                are kept, not wiped — migration continues the same crash
+                journal). ``None`` imports the session without durability.
 
         Returns:
             A fresh ``Session`` handle for the resumed stream (new sid/slot;
@@ -969,7 +1130,7 @@ class SessionPool:
         Raises:
             PoolFullError: this pool has no free slot.
         """
-        sess = self.attach()
+        sess = self._attach_slot()
         slot = sess.slot
         self._state = jax.tree_util.tree_map(
             lambda leaf, val: leaf.at[slot].set(val), self._state, ticket.state
@@ -981,6 +1142,8 @@ class SessionPool:
             self._out[slot] = [ticket.unread_out]
         sess.stats = ticket.stats
         self._parked[slot] = ticket.parked
+        if durable_id is not None and self._durability is not None:
+            self.bind_durable(sess, durable_id)
         return sess
 
     # -- reporting ----------------------------------------------------------

@@ -61,13 +61,15 @@ import dataclasses
 import hashlib
 import itertools
 import time
-from typing import Container, Dict, Hashable, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Container, Deque, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
+from repro.serve.durability import DurabilityError, recover_session
 from repro.serve.elastic_pool import ElasticSessionPool
 from repro.serve.scheduler import (
     AdaptiveScheduler,
@@ -82,6 +84,10 @@ from repro.serve.session_server import (
 )
 
 Pytree = dict
+
+# lost_session_ids is diagnostics for clients, not an unbounded ledger: the
+# deque keeps the MOST RECENT losses and evicts the oldest beyond this bound
+MAX_LOST_IDS_TRACKED = 1024
 
 
 def _max_capacity(pool) -> int:
@@ -274,6 +280,16 @@ class ShardedSessionPool:
             (``scheduler_stats()`` / ``shard_stats()``).
         ingest_ring: device-resident ingestion ring depth forwarded to every
             shard (see ``SessionPool``).
+        durability: optional ``repro.serve.durability.DurabilityManager``.
+            Held at the ROUTER (keyed by the client's session id, which is
+            stable across migration and failover) and deliberately NOT
+            forwarded to the per-shard pools — exactly one layer journals a
+            stream. With a manager: every ``feed``/``read`` is journaled,
+            snapshots land on the manager's cadence, ``attach`` of an id
+            with durable state on disk RECOVERS it instead of starting
+            fresh, ``restart_shard`` drains ``lost_session_ids`` through
+            recovery, and ``recover_sessions()`` rebuilds every orphan after
+            a full process restart (the gateway calls it on start).
 
     Raises:
         ValueError: ``shards < 1`` or empty ``devices``.
@@ -304,6 +320,7 @@ class ShardedSessionPool:
         step_cache: Optional[dict] = None,
         adaptive=None,
         ingest_ring: Optional[int] = None,
+        durability=None,
     ) -> None:
         if devices is None:
             devices = jax.local_devices()
@@ -358,8 +375,14 @@ class ShardedSessionPool:
         self.shard_generations = [0] * shards  # bumped by every restart
         self.sessions_failed_over = 0  # re-homed bit-exactly via the wire
         self.sessions_lost = 0  # state died with the shard
-        self.lost_session_ids: List[Hashable] = []  # for client notification
+        # recent losses, for client notification: bounded (oldest evicted),
+        # and drained by successful recovery or re-attach of the same id
+        self.lost_session_ids: Deque[Hashable] = deque(maxlen=MAX_LOST_IDS_TRACKED)
         self.failover_log: List[Dict[str, object]] = []
+        # -- durable recovery (snapshot + journal + replay) ------------------
+        self._durability = durability  # router-level: NOT in _mk / per shard
+        self.sessions_recovered = 0  # rebuilt bit-exactly from disk
+        self.recovery_errors: List[Tuple[Hashable, str]] = []
 
     def _make_sched(self) -> Optional[AdaptiveScheduler]:
         """A fresh per-shard controller (None when not adaptive)."""
@@ -450,18 +473,34 @@ class ShardedSessionPool:
             A ``ShardedSession`` handle (also resolvable later by raw id).
 
         Raises:
-            SessionError: ``session_id`` is already attached.
+            SessionError: ``session_id`` is already attached, or it has
+                durable state on disk that could not be recovered (loud
+                failure over a silently restarted stream).
             ShardFullError: home shard full, other shards have room (and
                 ``rebalance_on_full`` is off or rebalancing freed nothing).
             PoolFullError: every shard is full.
         """
         if session_id is None:
             session_id = f"auto-{next(self._auto_sid)}"
-            while session_id in self._sessions:  # caller may have used the name
+            # skip ids already attached AND ids with durable state on disk:
+            # a generated id must never silently wipe an orphan's journal
+            while session_id in self._sessions or (
+                self._durability is not None and self._durability.has(session_id)
+            ):
                 session_id = f"auto-{next(self._auto_sid)}"
         if session_id in self._sessions:
             raise SessionError(f"session id {session_id!r} is already attached")
         self._failover_pending()  # re-home any dead shard's sessions first
+        if self._durability is not None and self._durability.has(session_id):
+            # durable state exists: this attach is a reconnect after a crash
+            # or loss — recover the stream instead of starting a fresh one
+            try:
+                return self._recover_one(session_id)
+            except DurabilityError as exc:
+                raise SessionError(
+                    f"session {session_id!r} has durable state that could "
+                    f"not be recovered: {exc}"
+                ) from exc
         shard = self._ring.route(session_id, dead=self._dead)
         pool = self._pools[shard]
         # elastic shards grow themselves inside attach(); only a shard whose
@@ -485,6 +524,12 @@ class ShardedSessionPool:
                 )
         handle = ShardedSession(session_id=session_id, shard=shard, inner=pool.attach())
         self._sessions[session_id] = handle
+        if self._durability is not None:
+            self._durability.begin(str(session_id))
+        try:  # a re-attached id is no longer "lost"
+            self.lost_session_ids.remove(session_id)
+        except ValueError:
+            pass
         return handle
 
     def _wake(self, on_unparked, inner) -> None:
@@ -535,19 +580,46 @@ class ShardedSessionPool:
         handle = self._resolve(sess)
         tail = self._pools[handle.shard].detach(handle.inner)
         del self._sessions[handle.session_id]
+        if self._durability is not None:
+            self._durability.forget(str(handle.session_id))
         return tail
+
+    def lookup(self, session_id: Hashable) -> Optional[ShardedSession]:
+        """The CURRENT live handle for a session id, or ``None``.
+
+        Handles are replaced by loss+recovery cycles; a front-end holding a
+        stale handle re-binds through this (the gateway's retry path)."""
+        return self._sessions.get(session_id)
 
     # -- audio I/O ----------------------------------------------------------
 
     def feed(self, sess, samples) -> None:
         """Queue raw audio on the session's shard (any chunk length)."""
         handle = self._resolve(sess)
+        mgr = self._durability
+        if mgr is not None:
+            # journal the exact bytes write-ahead of the shard seeing them
+            samples = np.array(samples, np.float32, copy=True).reshape(-1)
+            due = mgr.record_feed(str(handle.session_id), samples, self.cfg.hop)
+            self._pools[handle.shard].feed(handle.inner, samples)
+            if due:
+                mgr.snapshot(
+                    str(handle.session_id),
+                    self._pools[handle.shard].snapshot_session(handle.inner),
+                )
+            return
         self._pools[handle.shard].feed(handle.inner, samples)
 
     def read(self, sess) -> np.ndarray:
         """Pop all enhanced audio produced for this session so far."""
         handle = self._resolve(sess)
-        return self._pools[handle.shard].read(handle.inner)
+        out = self._pools[handle.shard].read(handle.inner)
+        if out.size and self._durability is not None:
+            # durable read cursor: recovery will not re-deliver these bytes
+            self._durability.record_read(
+                str(handle.session_id), handle.inner.stats.samples_out
+            )
+        return out
 
     # -- the overlapped hop loop --------------------------------------------
 
@@ -690,6 +762,14 @@ class ShardedSessionPool:
         self._pending_failover.discard(shard)
         self._corpses.pop(shard, None)
         self.shard_generations[shard] += 1
+        if self._durability is not None:
+            # the fresh shard brings capacity back: drain every lost session
+            # with durable state through snapshot+journal recovery — the
+            # streams resume bit-exactly where their last feed left off
+            self.recover_sessions(
+                [sid for sid in list(self.lost_session_ids)
+                 if self._durability.has(sid)]
+            )
 
     def check_shards(self) -> List[int]:
         """Health-check heartbeat: probe every live shard, fail over the dead.
@@ -764,6 +844,10 @@ class ShardedSessionPool:
                 handle.inner.detached = True
                 del self._sessions[handle.session_id]
                 self.lost_session_ids.append(handle.session_id)
+                if self._durability is not None:
+                    # close journal handles but KEEP the files: the durable
+                    # state is exactly what recovery will rebuild from
+                    self._durability.release(str(handle.session_id))
                 continue
             handle.inner = self._pools[dst].import_session(decode_ticket(blob))
             handle.shard = dst
@@ -785,6 +869,72 @@ class ShardedSessionPool:
         frees = [(_max_capacity(p) - p.num_active, i) for i, p in live]
         free, dst = max(frees)
         return dst if free > 0 else None
+
+    # -- durable recovery (snapshot + journal + replay) ----------------------
+
+    def _recover_one(self, session_id: Hashable) -> ShardedSession:
+        """Rebuild one durable session on a live shard, bit-exactly.
+
+        Destination is the ring home (walking around dead shards), falling
+        back to the most-headroom live shard — the same placement rule as
+        failover. The heavy lifting (snapshot decode, journal replay,
+        read-cursor fast-forward, fresh finalizing snapshot) is
+        ``repro.serve.durability.recover_session``.
+
+        Raises:
+            DurabilityError: the on-disk state is unrecoverable.
+            PoolFullError: no live shard has a slot for the session.
+        """
+        dst = self._failover_destination(session_id)
+        if dst is None:
+            raise PoolFullError(
+                f"cannot recover session {session_id!r}: no live shard has "
+                f"a free slot (active={self.num_active}, "
+                f"capacity={self.max_capacity})"
+            )
+        inner = recover_session(self._pools[dst], self._durability, str(session_id))
+        handle = ShardedSession(session_id=session_id, shard=dst, inner=inner)
+        self._sessions[session_id] = handle
+        try:
+            self.lost_session_ids.remove(session_id)
+        except ValueError:
+            pass
+        self.sessions_recovered += 1
+        return handle
+
+    def recover_sessions(
+        self, session_ids: Optional[Sequence[Hashable]] = None
+    ) -> List[ShardedSession]:
+        """Recover every durable session that is not currently attached.
+
+        The cold-restart entry point: after a full process kill, a fresh
+        router pointed at the same durability directory rebuilds every
+        orphaned stream from its newest snapshot + journal chain (the
+        gateway calls this in ``start()``). Per-session failures (corrupt
+        chain, full fleet) are recorded in ``recovery_errors`` and do NOT
+        abort the sweep — one bad session must not block the rest.
+
+        Args:
+            session_ids: explicit ids to recover; default = every id with
+                durable state on disk (``DurabilityManager.list_sessions``).
+
+        Returns:
+            Live handles for the sessions recovered by THIS call.
+        """
+        if self._durability is None:
+            return []
+        self._failover_pending()
+        if session_ids is None:
+            session_ids = self._durability.list_sessions()
+        recovered: List[ShardedSession] = []
+        for sid in session_ids:
+            if sid in self._sessions or not self._durability.has(sid):
+                continue
+            try:
+                recovered.append(self._recover_one(sid))
+            except (DurabilityError, PoolFullError) as exc:
+                self.recovery_errors.append((sid, str(exc)))
+        return recovered
 
     # -- balance ------------------------------------------------------------
 
@@ -817,6 +967,8 @@ class ShardedSessionPool:
             s["shard_failovers"] = self._failover_counts[i]
             s["sessions_failed_over"] = self.sessions_failed_over
             s["sessions_lost"] = self.sessions_lost
+            s["sessions_recovered"] = self.sessions_recovered
+            s["lost_ids_tracked"] = len(self.lost_session_ids)
             if self._scheds[i] is not None:
                 s["scheduler"] = self._scheds[i].stats()
             out.append(s)

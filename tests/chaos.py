@@ -13,7 +13,7 @@ silent corruption, never collateral damage to bystander sessions.
 Everything is driven by one ``random.Random(seed)`` — same seed, same kill
 schedule, same chunk sizes, same drops — so a chaos failure reproduces.
 
-Two entry points:
+Three entry points:
 
 - ``run_chaos(pool, audios, reference, ...)`` — in-process: handles talk
   straight to the ``ShardedSessionPool``.
@@ -22,11 +22,20 @@ Two entry points:
   injected ON the gateway thread (no racing the pump loop) and the
   ``drop_every`` knob severs a random client mid-stream, re-connects, and
   re-adopts the same session id with nothing lost.
+- ``run_chaos_gateway_restart(mk_pool, mk_manager, root, audios, ...)`` —
+  the durability leg: the ENTIRE gateway process (gateway + pool + manager)
+  is killed and rebuilt from the durability directory mid-stream, several
+  times, optionally with torn-write injection (a half-appended journal
+  frame, a mid-byte-corrupted newest snapshot) between incarnations.
+  Clients reconnect to the new incarnation with the same session ids and
+  every stream must still finish bit-exactly.
 """
 
 from __future__ import annotations
 
+import os
 import random
+import struct
 from typing import Callable, Dict
 
 import numpy as np
@@ -319,6 +328,173 @@ def run_chaos_gateway(
         kills=kills,
         restarts=restarts,
         drops=drops,
+    )
+    _verify(result, audios, reference, hop, pool)
+    return result
+
+
+def _inject_torn_writes(root, rnd) -> int:
+    """Simulate crash damage on the durability directory; returns the
+    number of injections. Both are RECOVERABLE by contract:
+
+    - a half-appended journal frame on a random segment (the crash-mid-
+      append model — recovery truncates the torn tail; the harness's
+      clients never saw that feed complete, so no audio is owed for it);
+    - a mid-byte flip in a session's NEWEST snapshot, when an older
+      generation exists to fall back to (the manager keeps ``keep``
+      generations of snapshot + journal chain for exactly this).
+    """
+    injected = 0
+    by_sid_j: Dict[str, list] = {}
+    for p in os.listdir(root):
+        if p.endswith(".journal"):
+            stem, gen = p.rsplit(".", 2)[0], p.rsplit(".", 2)[1]
+            by_sid_j.setdefault(stem, []).append((gen, p))
+    if by_sid_j:
+        # only the NEWEST segment of a chain may legally be torn — a torn
+        # interior segment is in-place corruption and recovery refuses it
+        _, name = max(by_sid_j[rnd.choice(sorted(by_sid_j))])
+        victim = os.path.join(root, name)
+        with open(victim, "ab") as f:  # torn frame: length prefix, no body
+            f.write(struct.pack("<I", 1 + 4 * rnd.randrange(1, 64)) + b"\x01")
+        injected += 1
+    by_sid: Dict[str, list] = {}
+    for p in os.listdir(root):
+        if p.endswith(".snap"):
+            stem, gen = p.rsplit(".", 2)[0], p.rsplit(".", 2)[1]
+            by_sid.setdefault(stem, []).append((gen, p))
+    fallback_able = {s: v for s, v in by_sid.items() if len(v) >= 2}
+    if fallback_able:
+        _, name = max(fallback_able[rnd.choice(sorted(fallback_able))])
+        path = os.path.join(root, name)
+        raw = bytearray(open(path, "rb").read())
+        raw[rnd.randrange(len(raw))] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        injected += 1
+    return injected
+
+
+def run_chaos_gateway_restart(
+    mk_pool,
+    mk_manager,
+    root,
+    audios: Dict[str, np.ndarray],
+    reference: Callable[[np.ndarray], np.ndarray],
+    *,
+    seed: int = 0,
+    rounds: int = 24,
+    restart_every: int = 8,
+    torn_writes: bool = False,
+) -> ChaosResult:
+    """Kill the WHOLE gateway process mid-stream; restart from disk.
+
+    Each restart discards gateway, pool, AND manager without any orderly
+    shutdown (the crash model), rebuilds all three from the durability
+    directory — ``StreamingGateway.start()`` recovers every durable orphan
+    before accepting connections — and reconnects every client under its
+    old session id. With ``torn_writes``, crash damage is injected on the
+    directory between incarnations (see ``_inject_torn_writes``); recovery
+    must absorb it via tail truncation / generation fallback. The closing
+    assertion is the durability headline: every session's total delivered
+    stream is bit-identical to a run that never crashed.
+
+    Args:
+        mk_pool: ``mk_pool(manager) -> ShardedSessionPool`` building a
+            FRESH pool wired to the given manager.
+        mk_manager: ``mk_manager() -> DurabilityManager`` over ``root``.
+        root: the durability directory (for torn-write injection).
+        audios / reference / seed: as ``run_chaos``.
+        rounds: feeding rounds across ALL incarnations.
+        restart_every: kill + rebuild the process every this-many rounds.
+        torn_writes: inject crash damage between incarnations.
+
+    Returns:
+        ``ChaosResult`` (``kills`` counts process kills; ``drops`` counts
+        torn-write injections); bit-exactness already asserted.
+    """
+    from repro.serve.gateway import GatewayClient, GatewayThread
+
+    rnd = random.Random(seed)
+    # continuity windows (latency record only appends) are per-process by
+    # construction — a rebuilt pool legitimately starts from zero
+    checker = SoakChecker()
+    manager = mk_manager()
+    pool = mk_pool(manager)
+    hop = pool.cfg.hop
+    gw = GatewayThread(pool, pump_interval=0.002)
+    clients: Dict[str, GatewayClient] = {}
+
+    def _connect_all(expect_recovered: bool) -> None:
+        if expect_recovered:
+            assert gw.gateway.sessions_recovered_at_start == len(audios), (
+                "gateway start() must recover every durable orphan: got "
+                f"{gw.gateway.sessions_recovered_at_start}/{len(audios)}, "
+                f"errors={getattr(gw.pool, 'recovery_errors', [])}"
+            )
+        for sid in audios:
+            c = GatewayClient(*gw.address)
+            assert c.attach(sid) == sid, "recovered id must be adoptable"
+            clients[sid] = c
+
+    _connect_all(expect_recovered=False)
+    pos = {sid: 0 for sid in audios}
+    outputs = {sid: [] for sid in audios}
+    kills = injections = 0
+
+    for r in range(rounds):
+        if restart_every and r and r % restart_every == 0:
+            # the crash: no detach, no close, no manager shutdown
+            for c in clients.values():
+                c.drop()
+            gw.stop()
+            del pool, manager
+            kills += 1
+            if torn_writes:
+                injections += _inject_torn_writes(root, rnd)
+            manager = mk_manager()
+            pool = mk_pool(manager)
+            gw = GatewayThread(pool, pump_interval=0.002)
+            checker = SoakChecker()
+            _connect_all(expect_recovered=True)
+        for sid, audio in audios.items():
+            if pos[sid] >= audio.size:
+                continue
+            n = rnd.randrange(0, _MAX_CHUNK_HOPS * hop + 1)
+            chunk = audio[pos[sid] : pos[sid] + n]
+            clients[sid].feed(chunk)
+            pos[sid] += chunk.size
+        for sid in audios:
+            chunk = clients[sid].read()
+            if chunk.size:
+                outputs[sid].append(chunk)
+        gw.call(checker.check)
+
+    for sid, audio in audios.items():
+        if pos[sid] < audio.size:
+            clients[sid].feed(audio[pos[sid] :])
+            pos[sid] = audio.size
+        got = sum(c.size for c in outputs[sid])
+        rest = clients[sid].read_until(
+            _expected_out(audio, hop) - got, timeout=60
+        )
+        if rest.size:
+            outputs[sid].append(rest)
+        tail = clients[sid].detach()
+        if tail.size:
+            outputs[sid].append(tail)
+        clients[sid].close()
+    gw.call(checker.check)
+    gw.stop()
+    assert kills >= 1, "the restart leg never fired — raise rounds"
+    if torn_writes:
+        assert injections >= 1, "torn_writes requested but nothing injected"
+
+    result = ChaosResult(
+        outputs={sid: np.concatenate(chunks) for sid, chunks in outputs.items()},
+        lost=set(),
+        kills=kills,
+        restarts=kills,
+        drops=injections,
     )
     _verify(result, audios, reference, hop, pool)
     return result

@@ -20,6 +20,12 @@ instant — including mid-pipeline, between a ``dispatch()`` and its
 4. **Latency-accounting continuity** — the pool-wide ``step_seconds`` record
    only appends (it must survive an elastic resize: migration carries the
    list over), and never records a negative latency.
+5. **Journal conservation** (pools with a ``DurabilityManager``) — per
+   durable stream, the hops journaled since the last snapshot are exactly
+   the hops fed since the last snapshot: ``journal_feed_samples ==
+   samples_since`` and ``snap_samples_in + samples_since == samples_in``.
+   A violation means a fed hop escaped the write-ahead journal (silent
+   data loss on the next crash) or was journaled twice (wrong replay).
 
 ``run_soak`` drives N ops of randomized attach/detach/feed/read/pump churn
 (plus explicit resizes for elastic pools, and — with ``faults=True`` on a
@@ -213,6 +219,50 @@ class SoakChecker:
             self._seen_steps[key] = n
 
 
+def _durable_entries(pool) -> list:
+    """(manager, durable id, live samples_in) per durable stream journaled
+    at THIS pool layer (durability is layer-exclusive: the manager lives on
+    whichever wrapper the caller handed it to)."""
+    man = getattr(pool, "_durability", None)
+    if man is None:
+        return []
+    out = []
+    if hasattr(pool, "_pools"):  # sharded router: keyed by client id
+        dead = getattr(pool, "_dead", set())
+        for session_id, h in pool._sessions.items():
+            if h.shard in dead:
+                continue  # awaiting failover; re-checked once re-homed
+            out.append((man, str(session_id), h.inner.stats.samples_in))
+    elif hasattr(pool, "tiers"):  # elastic: keyed by stable handle sid
+        for sid, did in pool._durable_ids.items():
+            h = pool._handles.get(sid)
+            if h is not None:
+                out.append((man, did, h.stats.samples_in))
+    else:  # plain SessionPool
+        for sid, did in pool._durable_ids.items():
+            sess = pool._sessions.get(sid)
+            if sess is not None:
+                out.append((man, did, sess.stats.samples_in))
+    return out
+
+
+def _check_durability(pool) -> None:
+    """Invariant 5 — journal conservation (see module docstring)."""
+    for man, did, samples_in in _durable_entries(pool):
+        st = man.entry_stats(did)
+        if st is None:
+            continue  # released/mid-recovery: nothing open to conserve
+        assert st["journal_feed_samples"] == st["samples_since"], (
+            f"{did}: journal holds {st['journal_feed_samples']} samples "
+            f"but {st['samples_since']} were fed since the snapshot"
+        )
+        assert st["snap_samples_in"] + st["samples_since"] == samples_in, (
+            f"{did}: snapshot {st['snap_samples_in']} + journaled "
+            f"{st['samples_since']} != fed {samples_in} — a hop escaped "
+            "the write-ahead journal"
+        )
+
+
 def check_pool_invariants(pool) -> None:
     """Assert every pool invariant holds right now (see module docstring).
 
@@ -221,6 +271,7 @@ def check_pool_invariants(pool) -> None:
     """
     for p in _inner_pools(pool):
         _check_session_pool(p)
+    _check_durability(pool)
     if hasattr(pool, "tiers"):
         _check_elastic(pool)
     if hasattr(pool, "_pools"):

@@ -1,0 +1,645 @@
+"""Durability tests (serve/durability): crash-proof sessions, bit-exactly.
+
+The contract under test, end to end:
+
+- **Journal framing** — append-only, crc32-framed records; reopening a
+  journal with a torn tail (a crash mid-write) silently truncates the
+  incomplete frame; a COMPLETE frame with a bad crc (in-place corruption)
+  is a loud ``DurabilityError`` — the layer never guesses at audio.
+- **Snapshot generations** — ticket snapshots land atomically (tmp +
+  rename) and are generation-numbered; recovery prefers the newest
+  readable snapshot and falls back a generation when the newest is
+  corrupt, replaying the (longer) journal chain instead.
+- **Bit-exact recovery** — the headline property: a pool driven by a
+  random feed/read/pump/snapshot/crash schedule, crashed at arbitrary
+  points and recovered from disk each time, delivers an output stream
+  bit-identical to a pool that never crashed — across backends (xla and
+  the deploy-compiled pallas graph), inflight 1/2, and fused K>1.
+- **Self-healing client** — ``GatewayClient`` reconnects with backoff
+  through killed connections, re-adopts its session, and the stream stays
+  bit-exact; a full fleet surfaces as typed ``GatewayBusyError`` with a
+  retry hint instead of a stringified shard error.
+"""
+
+import dataclasses
+import os
+import struct
+import zlib
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import tftnn as tft
+from repro.serve import (
+    DurabilityError,
+    DurabilityManager,
+    ElasticSessionPool,
+    GatewayBusyError,
+    SessionError,
+    SessionPool,
+    ShardedSessionPool,
+    recover_session,
+)
+from repro.serve.durability import (
+    JOURNAL_MAGIC,
+    REC_FEED,
+    REC_READ,
+    SessionJournal,
+    SnapshotStore,
+)
+from repro.serve.gateway import GatewayClient, GatewayThread, StreamingGateway
+from repro.serve.streaming_se import make_stream_hop
+from chaos import run_chaos_gateway_restart
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=32,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)),
+        np.float32,
+    )
+
+
+def _reference(audio: np.ndarray) -> np.ndarray:
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    return pool.detach(s)
+
+
+# ---------------------------------------------------------------------------
+# journal framing
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_and_reopen(tmp_path):
+    """Records written survive close/reopen; counters rebuild from disk."""
+    p = tmp_path / "a.journal"
+    j = SessionJournal(p)
+    a = np.arange(5, dtype=np.float32)
+    b = np.arange(7, dtype=np.float32) * 2
+    j.append_feed(a)
+    j.append_read(5)
+    j.append_feed(b)
+    j.close()
+
+    j2 = SessionJournal(p)
+    assert j2.records == 3
+    assert j2.feed_samples == 12
+    recs, _, torn = SessionJournal.scan(p, allow_torn=False)
+    assert not torn
+    types = [t for t, _ in recs]
+    assert types == [REC_FEED, REC_READ, REC_FEED]
+    assert np.array_equal(np.frombuffer(recs[0][1], np.float32), a)
+    assert struct.unpack("<Q", recs[1][1])[0] == 5
+    j2.close()
+
+
+def test_journal_torn_tail_truncated(tmp_path):
+    """A crash mid-append leaves a half frame; reopen drops ONLY the tail."""
+    p = tmp_path / "a.journal"
+    j = SessionJournal(p)
+    j.append_feed(np.ones(4, np.float32))
+    j.append_feed(np.ones(6, np.float32))
+    j.close()
+    size = os.path.getsize(p)
+    with open(p, "ab") as f:  # a torn third frame: length prefix, no body
+        f.write(struct.pack("<I", 999))
+    j2 = SessionJournal(p)  # truncates the torn tail
+    assert j2.records == 2
+    assert j2.feed_samples == 10
+    assert os.path.getsize(p) == size
+    j2.close()
+    # scan with allow_torn=False on a torn file is loud
+    with open(p, "ab") as f:
+        f.write(b"\x03")
+    with pytest.raises(DurabilityError):
+        SessionJournal.scan(p, allow_torn=False)
+
+
+def test_journal_midfile_corruption_is_loud(tmp_path):
+    """A COMPLETE frame with a bad crc is corruption, not a torn write —
+    silently truncating it would drop interior hops, so it must raise."""
+    p = tmp_path / "a.journal"
+    j = SessionJournal(p)
+    j.append_feed(np.ones(4, np.float32))
+    j.append_feed(np.ones(4, np.float32))
+    j.close()
+    raw = bytearray(p.read_bytes())
+    raw[14] ^= 0xFF  # flip a payload byte inside the first record
+    p.write_bytes(bytes(raw))
+    with pytest.raises(DurabilityError):
+        SessionJournal.scan(p, allow_torn=True)
+    with pytest.raises(DurabilityError):
+        SessionJournal(p)
+
+
+def test_journal_rejects_bad_header(tmp_path):
+    p = tmp_path / "a.journal"
+    p.write_bytes(b"NOPE" + bytes(4))
+    with pytest.raises(DurabilityError):
+        SessionJournal(p)
+    p.write_bytes(JOURNAL_MAGIC + struct.pack("<HH", 99, 0))
+    with pytest.raises(DurabilityError):
+        SessionJournal(p)
+
+
+# ---------------------------------------------------------------------------
+# snapshots + manager recovery planning
+# ---------------------------------------------------------------------------
+
+
+def _drive(pool, handle, audio, chunks):
+    """Feed ``audio`` in ``chunks`` pieces, pumping and reading after each;
+    returns the concatenated delivered output."""
+    outs = []
+    i = 0
+    for n in chunks:
+        pool.feed(handle, audio[i : i + n])
+        i += n
+        pool.pump()
+        outs.append(pool.read(handle))
+    return np.concatenate([o for o in outs if o.size] or [np.zeros(0, np.float32)])
+
+
+def test_snapshot_fallback_when_newest_corrupt(tmp_path):
+    """Corrupting the newest snapshot mid-byte falls back one generation
+    and replays the longer journal chain — same bits, never wrong audio."""
+    audio = _audio(7, 20)
+    man = DurabilityManager(tmp_path, snapshot_every=4, keep=3)
+    pool = SessionPool(PARAMS, CFG, capacity=2, durability=man)
+    h = pool.attach(durable_id="t")
+    pre = _drive(pool, h, audio, [HOP * 5 + 3, HOP * 5, HOP * 5, HOP * 4 + 13])
+    st_ = man.entry_stats("t")
+    assert st_["gen"] >= 2, "test needs >= 2 snapshot generations"
+    del pool  # crash
+
+    snaps = sorted(p for p in os.listdir(tmp_path) if p.endswith(".snap"))
+    newest = os.path.join(tmp_path, snaps[-1])
+    raw = bytearray(open(newest, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(newest, "wb").write(bytes(raw))
+
+    man2 = DurabilityManager(tmp_path, snapshot_every=4, keep=3)
+    pool2 = SessionPool(PARAMS, CFG, capacity=2, durability=man2)
+    h2 = recover_session(pool2, man2, "t")
+    pool2.pump()
+    tail = pool2.read(h2)
+    got = np.concatenate([pre, tail])
+    exp = _reference(audio)
+    assert np.array_equal(got, exp[: got.size])
+    assert got.size == exp.size
+
+
+def test_recovery_with_torn_journal_tail(tmp_path):
+    """A crash mid-journal-append must not block recovery: the torn frame
+    is dropped and every COMPLETE journaled hop is replayed."""
+    audio = _audio(8, 12)
+    man = DurabilityManager(tmp_path, snapshot_every=64)
+    pool = SessionPool(PARAMS, CFG, capacity=2, durability=man)
+    h = pool.attach(durable_id="t")
+    pre = _drive(pool, h, audio, [HOP * 6 + 5, HOP * 5])
+    del pool  # crash...
+
+    seg = [p for p in os.listdir(tmp_path) if p.endswith(".journal")]
+    assert len(seg) == 1
+    path = os.path.join(tmp_path, seg[0])
+    with open(path, "ab") as f:  # ...mid-append: torn frame on the tail
+        f.write(struct.pack("<I", 4096) + b"\x01partial")
+
+    man2 = DurabilityManager(tmp_path, snapshot_every=64)
+    pool2 = SessionPool(PARAMS, CFG, capacity=2, durability=man2)
+    h2 = recover_session(pool2, man2, "t")
+    pool2.pump()
+    got = np.concatenate([pre, pool2.read(h2)])
+    fed = (HOP * 6 + 5) + HOP * 5
+    assert np.array_equal(got, _reference(audio)[: got.size])
+    assert got.size == (fed // HOP) * HOP
+
+
+def test_recovery_loud_when_nothing_usable(tmp_path):
+    """Every snapshot unreadable + journal chain broken => DurabilityError,
+    NEVER a silently-wrong stream."""
+    audio = _audio(9, 8)
+    man = DurabilityManager(tmp_path, snapshot_every=3, keep=1)
+    pool = SessionPool(PARAMS, CFG, capacity=2, durability=man)
+    h = pool.attach(durable_id="t")
+    _drive(pool, h, audio, [HOP * 8])
+    del pool
+
+    for name in os.listdir(tmp_path):  # scorch every artifact
+        full = os.path.join(tmp_path, name)
+        raw = bytearray(open(full, "rb").read())
+        for k in range(0, len(raw), 7):
+            raw[k] ^= 0xA5
+        open(full, "wb").write(bytes(raw))
+
+    man2 = DurabilityManager(tmp_path, snapshot_every=3, keep=1)
+    pool2 = SessionPool(PARAMS, CFG, capacity=2)
+    with pytest.raises(DurabilityError):
+        recover_session(pool2, man2, "t")
+
+
+def test_snapshot_store_prunes_and_loads(tmp_path):
+    man = DurabilityManager(tmp_path, snapshot_every=2, keep=2)
+    pool = SessionPool(PARAMS, CFG, capacity=2, durability=man)
+    h = pool.attach(durable_id="t")
+    _drive(pool, h, _audio(3, 12), [HOP * 3] * 4)
+    gens = man.store.generations("t")
+    assert 1 <= len(gens) <= 2 and gens == sorted(gens)
+    ticket = man.store.load("t", gens[-1])
+    assert ticket.stats.samples_in > 0
+    assert isinstance(man.store, SnapshotStore)
+
+
+def test_manager_forget_removes_files(tmp_path):
+    man = DurabilityManager(tmp_path, snapshot_every=2)
+    pool = SessionPool(PARAMS, CFG, capacity=2, durability=man)
+    h = pool.attach(durable_id="t")
+    _drive(pool, h, _audio(4, 6), [HOP * 6])
+    assert man.has("t")
+    pool.detach(h)  # detach = stream complete = forget
+    assert not man.has("t")
+    assert [p for p in os.listdir(tmp_path)] == []
+
+
+# ---------------------------------------------------------------------------
+# the headline property: random schedules, crashes anywhere, bit-exact
+# ---------------------------------------------------------------------------
+
+CAP = 3
+
+
+def shared_step(backend: str, k: int):
+    return make_stream_hop(PARAMS, CFG, backend=backend, max_hops_per_step=k)
+
+
+def _drain(pool, handle, outs, expect):
+    """Pump+read until ``expect`` total samples are delivered into outs."""
+    got = int(sum(o.size for o in outs))
+    spins = 0
+    while got < expect:
+        pool.pump()
+        chunk = pool.read(handle)
+        if chunk.size:
+            outs.append(chunk)
+            got += chunk.size
+            spins = 0
+        else:
+            spins += 1
+            assert spins < 50, f"stalled at {got}/{expect}"
+    return np.concatenate([o for o in outs if o.size])
+
+
+def _durable_schedule(seed: int, mk_pool, snapshot_every: int) -> None:
+    """Drive a durable pool and a never-crashing reference pool (SAME
+    backend — ``mk_pool(None)``) through the same feed schedule, crashing +
+    recovering the durable one at random points; the delivered streams
+    must match bit-for-bit."""
+    rnd = np.random.default_rng(seed)
+    n_hops = int(rnd.integers(8, 24))
+    audio = _audio(seed, n_hops)
+
+    ref = mk_pool(None)
+    rs = ref.attach()
+    ref.feed(rs, audio)
+    exp = _drain(ref, rs, [], (audio.size // HOP) * HOP)
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as root:
+        man = DurabilityManager(root, snapshot_every=snapshot_every)
+        pool = mk_pool(man)
+        h = pool.attach(durable_id="prop")
+        outs = []
+        pos = 0
+        while pos < audio.size:
+            op = rnd.integers(0, 10)
+            if op < 5:  # feed a ragged chunk
+                n = int(rnd.integers(1, 3 * HOP + 2))
+                pool.feed(h, audio[pos : pos + n])
+                pos += n
+            elif op < 7:
+                pool.pump()
+            elif op < 9:
+                outs.append(pool.read(h))
+            else:  # crash: abandon pool AND manager, recover from disk
+                del pool
+                man = DurabilityManager(root, snapshot_every=snapshot_every)
+                pool = mk_pool(man)
+                h = recover_session(pool, man, "prop")
+        # drain fully
+        expect = (min(pos, audio.size) // HOP) * HOP
+        final = _drain(pool, h, outs, expect)
+        assert final.size == expect
+        assert np.array_equal(final, exp[:expect])
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_recovery_bit_exact_xla(inflight, seed):
+    _durable_schedule(
+        seed,
+        lambda m: SessionPool(
+            PARAMS, CFG, capacity=CAP, inflight=inflight, durability=m
+        ),
+        snapshot_every=4,
+    )
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_recovery_bit_exact_fused(seed):
+    """Fused K>1 dispatch: journaled hops replayed through scan-batched
+    lanes recover to the same bits."""
+    k = 3
+    step = shared_step("xla", k)
+    _durable_schedule(
+        seed,
+        lambda m: SessionPool(
+            PARAMS, CFG, capacity=CAP, hops_per_step=k, step_fn=step,
+            durability=m,
+        ),
+        snapshot_every=5,
+    )
+
+
+@pytest.mark.parametrize("inflight", [1, 2])
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_recovery_bit_exact_pallas(inflight, seed):
+    """Same property through the deploy-compiled pallas graph."""
+    step = shared_step("pallas", 1)
+    _durable_schedule(
+        seed,
+        lambda m: SessionPool(
+            PARAMS, CFG, capacity=CAP, backend="pallas", inflight=inflight,
+            step_fn=step, durability=m,
+        ),
+        snapshot_every=4,
+    )
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_recovery_bit_exact_elastic(seed):
+    _durable_schedule(
+        seed,
+        lambda m: ElasticSessionPool(PARAMS, CFG, (2, 4), durability=m),
+        snapshot_every=4,
+    )
+
+
+def test_journal_conservation_probe():
+    """`entry_stats` exposes the soak invariant inputs: journaled samples
+    since the last snapshot == samples_in - snapshot's samples_in."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as root:
+        man = DurabilityManager(root, snapshot_every=6)
+        pool = SessionPool(PARAMS, CFG, capacity=2, durability=man)
+        h = pool.attach(durable_id="c")
+        _drive(pool, h, _audio(5, 14), [HOP * 7 + 2, HOP * 4, HOP * 2 + 9])
+        st_ = man.entry_stats("c")
+        assert st_["journal_feed_samples"] == st_["samples_since"]
+        assert (
+            st_["snap_samples_in"] + st_["samples_since"]
+            == pool._sessions[h.sid].stats.samples_in
+        )
+
+
+# ---------------------------------------------------------------------------
+# sharded pool: restart_shard drains lost ids through recovery
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_restart_recovers_lost_sessions(tmp_path):
+    """Destructive shard kill + restart_shard: durable residents come BACK
+    (removed from lost_session_ids) and continue bit-exactly."""
+    audio = _audio(11, 16)
+    man = DurabilityManager(tmp_path, snapshot_every=4)
+    pool = ShardedSessionPool(PARAMS, CFG, 3, shards=2, durability=man)
+    handles = {f"client-{i}": pool.attach(f"client-{i}") for i in range(3)}
+    pres = {}
+    for i, (sid, h) in enumerate(handles.items()):
+        pool.feed(h, audio[: HOP * (6 + i) + 3])
+        pool.pump_all()
+        pres[sid] = pool.read(h)
+
+    victim = handles["client-0"].shard
+    pool.kill_shard(victim, lose_state=True)
+    pool.pump_all()  # failover tick records the lost residents
+    lost = list(pool.lost_session_ids)
+    assert lost, "expected residents on the killed shard"
+
+    pool.restart_shard(victim)  # drains lost ids through recovery
+    assert pool.sessions_recovered == len(lost)
+    assert not any(sid in pool.lost_session_ids for sid in lost)
+    assert not pool.recovery_errors
+
+    for sid in lost:
+        h2 = pool.lookup(sid)
+        assert h2 is not None
+        fed = HOP * (6 + int(sid.split("-")[1])) + 3
+        rest = audio[fed : fed + HOP * 4]
+        pool.feed(h2, rest)
+        pool.pump_all()
+        got = np.concatenate([pres[sid], pool.read(h2)])
+        exp = _reference(audio[: fed + rest.size])
+        assert np.array_equal(got, exp[: got.size])
+        assert got.size == exp.size
+
+    stats = pool.shard_stats()
+    assert all("lost_ids_tracked" in s and "sessions_recovered" in s
+               for s in stats)
+
+
+def test_lost_ids_bounded():
+    """lost_session_ids is a bounded deque — unbounded growth was a leak."""
+    from repro.serve.sharded_pool import MAX_LOST_IDS_TRACKED
+
+    pool = ShardedSessionPool(PARAMS, CFG, 2, shards=2)
+    assert pool.lost_session_ids.maxlen == MAX_LOST_IDS_TRACKED
+    for i in range(MAX_LOST_IDS_TRACKED + 50):
+        pool.lost_session_ids.append(f"ghost-{i}")
+    assert len(pool.lost_session_ids) == MAX_LOST_IDS_TRACKED
+
+
+# ---------------------------------------------------------------------------
+# gateway: BUSY admission control + the self-healing client
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_busy_frame_on_full_fleet():
+    """A full fleet answers ATTACH with a typed BUSY frame (retry hint),
+    not a stringified shard error; the gateway counts the shed."""
+    sp = ShardedSessionPool(PARAMS, CFG, 2, shards=1)
+    gw = GatewayThread(sp, pump_interval=0.002)
+    try:
+        clients = [GatewayClient(*gw.address) for _ in range(2)]
+        for i, c in enumerate(clients):
+            c.attach(f"s{i}")
+        extra = GatewayClient(*gw.address)
+        with pytest.raises(GatewayBusyError) as exc:
+            extra.attach("overflow")
+        assert exc.value.retry_after_ms >= 0
+        extra.close()
+        stats = clients[0].stats()
+        assert stats["load_shed"] == 1
+        for c in clients:
+            c.close()
+    finally:
+        gw.stop()
+
+
+class KillingGateway(StreamingGateway):
+    """Kills the connection (BEFORE processing) for the first N non-attach
+    requests — the client must reconnect, re-adopt, and retry."""
+
+    kills_left = 0
+
+    def _dispatch_msg(self, msg_type, payload, sid):
+        from repro.serve.gateway import MSG_ATTACH, MSG_STATS
+
+        if msg_type not in (MSG_ATTACH, MSG_STATS) and type(self).kills_left > 0:
+            type(self).kills_left -= 1
+            raise ConnectionResetError("chaos: killed before processing")
+        return super()._dispatch_msg(msg_type, payload, sid)
+
+
+def test_client_reconnects_through_killed_connections():
+    """Feed/read through a gateway that drops the connection mid-stream:
+    the client backs off, reconnects, re-attaches the same session, and
+    the delivered stream is still bit-exact."""
+    audio = _audio(13, 10)
+    expect = (audio.size // HOP) * HOP
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2)
+    KillingGateway.kills_left = 3
+    gw = GatewayThread(sp, gateway_cls=KillingGateway, pump_interval=0.002)
+    try:
+        c = GatewayClient(*gw.address, timeout=30.0, backoff_base=0.01)
+        c.attach("resilient")
+        pos = 0
+        rnd = np.random.default_rng(2)
+        while pos < audio.size:
+            n = int(rnd.integers(1, 3 * HOP))
+            c.feed(audio[pos : pos + n])
+            pos += n
+        out = c.read_until(expect)
+        assert c.reconnects >= 1, "the chaos gateway should have forced reconnects"
+        assert np.array_equal(out, _reference(audio)[:expect])
+        c.close()
+    finally:
+        KillingGateway.kills_left = 0
+        gw.stop()
+
+
+def test_client_deadline_is_per_request():
+    """A request gets its own deadline; a dead endpoint + no reconnect
+    budget surfaces as a timeout/connection error, never a hang."""
+    sp = ShardedSessionPool(PARAMS, CFG, 2, shards=1)
+    gw = GatewayThread(sp, pump_interval=0.002)
+    addr = gw.address
+    c = GatewayClient(*addr, timeout=2.0, max_retries=1, backoff_base=0.01)
+    c.attach("d")
+    gw.stop()  # endpoint gone
+    with pytest.raises((TimeoutError, ConnectionError, OSError)):
+        c.feed(np.zeros(HOP, np.float32))
+    c.drop()
+
+
+def test_chaos_gateway_restart_from_disk(tmp_path):
+    """The durability chaos leg: the whole gateway process is killed and
+    rebuilt from disk repeatedly mid-stream; reconnecting clients read the
+    exact bytes a crash-free run would have delivered."""
+    audios = {f"c{i}": _audio(20 + i, 8 + 2 * i) for i in range(3)}
+    res = run_chaos_gateway_restart(
+        lambda m: ShardedSessionPool(PARAMS, CFG, 4, shards=2, durability=m),
+        lambda: DurabilityManager(tmp_path, snapshot_every=4),
+        tmp_path,
+        audios,
+        _reference,
+        seed=3,
+        rounds=18,
+        restart_every=6,
+    )
+    assert res["kills"] >= 2
+
+
+def test_chaos_gateway_restart_torn_writes(tmp_path):
+    """Same leg with crash damage injected between incarnations: torn
+    journal tails and a corrupted newest snapshot (generation fallback).
+    Recovery absorbs both; streams still finish bit-exactly."""
+    audios = {f"c{i}": _audio(30 + i, 9 + i) for i in range(2)}
+    res = run_chaos_gateway_restart(
+        lambda m: ShardedSessionPool(PARAMS, CFG, 4, shards=2, durability=m),
+        lambda: DurabilityManager(tmp_path, snapshot_every=3, keep=2),
+        tmp_path,
+        audios,
+        _reference,
+        seed=5,
+        rounds=16,
+        restart_every=5,
+        torn_writes=True,
+    )
+    assert res["kills"] >= 2 and res["drops"] >= 1
+
+
+def test_gateway_restart_recovers_orphans(tmp_path):
+    """Full gateway + pool process restart against the same durability dir:
+    `start()` recovers every durable session; a reconnecting client adopts
+    its old id and reads the SAME bytes it would have without the crash."""
+    audio = _audio(17, 12)
+    expect = (audio.size // HOP) * HOP
+
+    man = DurabilityManager(tmp_path, snapshot_every=4)
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2, durability=man)
+    gw = GatewayThread(sp, pump_interval=0.002)
+    c = GatewayClient(*gw.address)
+    c.attach("phoenix")
+    cut = HOP * 7 + 5
+    c.feed(audio[:cut])
+    pre = c.read_until((cut // HOP) * HOP)
+    c.drop()
+    gw.stop()  # "process dies": pool + gateway discarded, disk survives
+    del sp, man
+
+    man2 = DurabilityManager(tmp_path, snapshot_every=4)
+    sp2 = ShardedSessionPool(PARAMS, CFG, 4, shards=2, durability=man2)
+    gw2 = GatewayThread(sp2, pump_interval=0.002)
+    try:
+        stats = GatewayClient(*gw2.address)
+        s = stats.stats()
+        assert s["sessions_recovered_at_start"] == 1
+        stats.close()
+        c2 = GatewayClient(*gw2.address)
+        assert c2.attach("phoenix") == "phoenix"
+        c2.feed(audio[cut:])
+        rest = c2.read_until(expect - pre.size)
+        got = np.concatenate([pre, rest])
+        assert np.array_equal(got, _reference(audio)[:expect])
+        c2.close()
+    finally:
+        gw2.stop()
