@@ -3,8 +3,10 @@
 The ROADMAP's "Quantized serving parity" item: the deploy compilation
 (``repro.serve.deploy``: every BN folded, Pallas kernels in the hot spots,
 weights pre-rounded onto the FP10 grid) must not silently degrade audio
-quality. This benchmark measures, on synthetic speech+noise fixtures
-(``repro.audio.synthetic`` — the paper's VoiceBank/UrbanSound stand-ins):
+quality. This benchmark first TRAINS the model for real on synthetic
+speech+noise fixtures (``train.finetune_prune.train_dense``, ``--train-steps``
+of the paper's Eq.-2 loss — quality numbers from a trained checkpoint, not a
+BN-warmed random init) and then measures:
 
 - **SI-SNR of each serving path against the fp32 ``enhance_offline``
   reference** — the parity number. fp32 paths sit at float-error level
@@ -59,16 +61,7 @@ from repro.serve.streaming_se import (  # noqa: E402
     enhance_streaming,
     init_stream,
 )
-
-
-def trained_params(cfg, seed: int = 0, train_steps: int = 3):
-    """Init + a few train-mode forwards so the BN running stats are
-    non-trivial — folding identity stats would not exercise the fold."""
-    params = tft.init_tft(jax.random.PRNGKey(seed), cfg)
-    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, cfg.freq_bins + 1, 6, 2))
-    for _ in range(train_steps):
-        _, params = tft.apply_tft(params, x, cfg, train=True)
-    return params
+from repro.train.finetune_prune import train_dense  # noqa: E402
 
 
 def enhance_deploy(plan, params, wave: jax.Array) -> jax.Array:
@@ -121,19 +114,29 @@ def main() -> None:
                     "vs the fp32 offline reference; below this the gate "
                     "fails (measured headroom on the reduced config: "
                     "~25 dB)")
+    ap.add_argument("--train-steps", type=int, default=24,
+                    help="real training steps on synthetic fixtures before "
+                    "measuring (train.finetune_prune.train_dense), so the "
+                    "quality numbers come from a trained checkpoint, not a "
+                    "BN-warmed random init")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized fixtures (<=0.5s, batch<=2) so the "
-                    "interpret-mode kernels finish in seconds")
+                    help="CI-sized fixtures (<=0.5s, batch<=2, 2 train "
+                    "steps) so the interpret-mode kernels finish in seconds")
     ap.add_argument("--json", default="BENCH_deploy_parity.json",
                     help="where to write the machine-readable results")
     args = ap.parse_args()
     if args.smoke:
         args.seconds = min(args.seconds, 0.5)
         args.batch = min(args.batch, 2)
+        args.train_steps = min(args.train_steps, 2)
 
     sample_rate = 8000
     cfg = reduced_cfg(tft.tftnn_config())
-    params = trained_params(cfg)
+    params, train_losses = train_dense(
+        cfg, steps=max(1, args.train_steps), batch=2, num_samples=2048, seed=0
+    )
+    print(f"# trained {len(train_losses)} steps: loss "
+          f"{train_losses[0]:.4f} -> {train_losses[-1]:.4f}")
     samples = max(cfg.hop, int(args.seconds * sample_rate) // cfg.hop * cfg.hop)
     noisy, clean = batch_for_step(1, 0, batch=args.batch, num_samples=samples)
     noisy = jnp.asarray(noisy)
@@ -156,6 +159,9 @@ def main() -> None:
             "batch": args.batch,
             "samples": samples,
             "min_si_snr_db": args.min_si_snr,
+            "train_steps": args.train_steps,
+            "train_loss_first": train_losses[0],
+            "train_loss_last": train_losses[-1],
             "smoke": args.smoke,
             "jax_backend": jax.default_backend(),
         },

@@ -1,0 +1,180 @@
+"""Batch SI-SNR over wav pairs — real enhancement-quality numbers for CI.
+
+The pruning Pareto needs a quality axis that is measured on audio, not
+proxied by parameter counts. This tool scores estimated/reference waveform
+pairs with the repo's SI-SNR (and plain SNR) metrics, in the style of
+aps's ``bin/compute_sisnr.py``: point it at a manifest (or two directories
+paired by filename), get per-utterance scores plus the mean, machine-
+readable.
+
+Pair sources (exactly one):
+- ``--manifest m.json`` — JSON list of ``{"est": path, "ref": path}``
+  entries (a ``{"pairs": [...]}`` wrapper is also accepted);
+- ``--est-dir D1 --ref-dir D2`` — files paired by basename;
+- ``--fixture DIR`` — no audio on disk at all: synthesizes the repo's
+  speech+noise fixtures (``repro.audio.synthetic``), writes noisy/clean
+  wav pairs + a manifest into DIR, and scores noisy-vs-clean. That is the
+  unenhanced baseline SI-SNR (~ the mixing SNR), and doubles as a wav
+  round-trip check.
+
+Outputs CSV rows (benchmarks.common.emit) and a JSON report (``--json``).
+``eval_pairs``/``write_fixture`` are importable — benchmarks/prune_pareto.py
+reuses them for its quality axis.
+
+Run:  PYTHONPATH=src python benchmarks/eval_sisnr.py --fixture /tmp/fx
+      PYTHONPATH=src python benchmarks/eval_sisnr.py --manifest pairs.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from common import emit  # noqa: E402
+
+from repro.audio.metrics import si_snr_db, snr_db  # noqa: E402
+from repro.audio.synthetic import batch_for_step  # noqa: E402
+from repro.audio.wav import read_wav, write_wav  # noqa: E402
+
+SAMPLE_RATE = 8000
+
+
+def pair_si_snr(est: np.ndarray, ref: np.ndarray) -> Tuple[float, float]:
+    """(si_snr_db, snr_db) of one utterance pair, truncated to equal length."""
+    n = min(est.shape[-1], ref.shape[-1])
+    e = jnp.asarray(est[..., :n], jnp.float32)
+    r = jnp.asarray(ref[..., :n], jnp.float32)
+    return float(jnp.mean(si_snr_db(e, r))), float(jnp.mean(snr_db(e, r)))
+
+
+def eval_pairs(pairs: List[Dict[str, str]]) -> List[Dict]:
+    """Score [{'est': path, 'ref': path}, ...] -> per-utterance results."""
+    out = []
+    for p in pairs:
+        est, sr_e = read_wav(p["est"])
+        ref, sr_r = read_wav(p["ref"])
+        if sr_e != sr_r:
+            raise ValueError(
+                f"sample-rate mismatch: {p['est']} is {sr_e} Hz, "
+                f"{p['ref']} is {sr_r} Hz"
+            )
+        si, sn = pair_si_snr(est, ref)
+        out.append({"est": str(p["est"]), "ref": str(p["ref"]),
+                    "si_snr_db": si, "snr_db": sn})
+    return out
+
+
+def write_fixture(
+    directory: str,
+    *,
+    utts: int = 4,
+    seconds: float = 1.0,
+    seed: int = 7,
+    snr_db_mix: float = 2.5,
+) -> Path:
+    """Write noisy/clean wav pairs + manifest.json into ``directory``.
+
+    Returns the manifest path. The noisy files play the role of an
+    (un)enhanced estimate; benchmarks swap in their own est files.
+    """
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    samples = max(256, int(seconds * SAMPLE_RATE))
+    noisy, clean = batch_for_step(
+        seed, 0, batch=utts, num_samples=samples, snr_db=snr_db_mix
+    )
+    pairs = []
+    for i in range(utts):
+        est_p = d / f"noisy_{i:03d}.wav"
+        ref_p = d / f"clean_{i:03d}.wav"
+        write_wav(est_p, np.asarray(noisy[i]), SAMPLE_RATE)
+        write_wav(ref_p, np.asarray(clean[i]), SAMPLE_RATE)
+        pairs.append({"est": str(est_p), "ref": str(ref_p)})
+    manifest = d / "manifest.json"
+    manifest.write_text(json.dumps({"pairs": pairs}, indent=2) + "\n", "utf-8")
+    return manifest
+
+
+def _load_manifest(path: str) -> List[Dict[str, str]]:
+    data = json.loads(Path(path).read_text("utf-8"))
+    pairs = data["pairs"] if isinstance(data, dict) else data
+    for p in pairs:
+        if "est" not in p or "ref" not in p:
+            raise ValueError(f"manifest entry missing est/ref keys: {p}")
+    return pairs
+
+
+def _pair_dirs(est_dir: str, ref_dir: str) -> List[Dict[str, str]]:
+    est = {p.name: p for p in sorted(Path(est_dir).glob("*.wav"))}
+    ref = {p.name: p for p in sorted(Path(ref_dir).glob("*.wav"))}
+    names = sorted(est.keys() & ref.keys())
+    if not names:
+        raise SystemExit(f"no wav basenames shared by {est_dir} and {ref_dir}")
+    return [{"est": str(est[n]), "ref": str(ref[n])} for n in names]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Batch SI-SNR over est/ref wav pairs (manifest, paired "
+        "directories, or a self-written synthetic fixture)."
+    )
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--manifest", help="JSON list of {est, ref} wav pairs")
+    src.add_argument("--est-dir", help="directory of estimate wavs "
+                     "(paired with --ref-dir by basename)")
+    src.add_argument("--fixture", metavar="DIR",
+                     help="write a synthetic noisy/clean fixture into DIR "
+                     "and score it (the unenhanced baseline)")
+    ap.add_argument("--ref-dir", help="directory of reference wavs")
+    ap.add_argument("--utts", type=int, default=4, help="fixture utterances")
+    ap.add_argument("--seconds", type=float, default=1.0,
+                    help="fixture utterance length")
+    ap.add_argument("--seed", type=int, default=7, help="fixture seed")
+    ap.add_argument("--json", default="BENCH_eval_sisnr.json",
+                    help="where to write the JSON report")
+    args = ap.parse_args()
+
+    if args.manifest:
+        pairs, source = _load_manifest(args.manifest), args.manifest
+    elif args.est_dir:
+        if not args.ref_dir:
+            ap.error("--est-dir requires --ref-dir")
+        pairs = _pair_dirs(args.est_dir, args.ref_dir)
+        source = f"{args.est_dir} vs {args.ref_dir}"
+    else:
+        manifest = write_fixture(
+            args.fixture, utts=args.utts, seconds=args.seconds, seed=args.seed
+        )
+        pairs, source = _load_manifest(str(manifest)), str(manifest)
+
+    utt_results = eval_pairs(pairs)
+    print("name,us_per_call,derived")
+    for r in utt_results:
+        emit(
+            f"utt={Path(r['est']).name}", 0.0,
+            f"si_snr={r['si_snr_db']:.2f}dB snr={r['snr_db']:.2f}dB",
+        )
+    mean_si = float(np.mean([r["si_snr_db"] for r in utt_results]))
+    mean_sn = float(np.mean([r["snr_db"] for r in utt_results]))
+    report = {
+        "benchmark": "eval_sisnr",
+        "source": source,
+        "num_utts": len(utt_results),
+        "mean_si_snr_db": mean_si,
+        "mean_snr_db": mean_sn,
+        "utts": utt_results,
+    }
+    Path(args.json).write_text(json.dumps(report, indent=2) + "\n", "utf-8")
+    emit("mean", 0.0, f"si_snr={mean_si:.2f}dB snr={mean_sn:.2f}dB")
+    print(f"# wrote {args.json} ({len(utt_results)} utterances)")
+
+
+if __name__ == "__main__":
+    main()

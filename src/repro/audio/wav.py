@@ -1,0 +1,46 @@
+"""16-bit PCM WAV I/O on the stdlib ``wave`` module only.
+
+The offline container ships no soundfile/scipy audio stack, so fixture and
+evaluation tooling (``benchmarks/eval_sisnr.py``) round-trips audio through
+this minimal reader/writer: mono (multi-channel inputs are averaged down),
+16-bit little-endian PCM, float32 samples in [-1, 1] on the numpy side.
+"""
+
+from __future__ import annotations
+
+import wave
+from typing import Tuple, Union
+
+import numpy as np
+
+PathLike = Union[str, "os.PathLike[str]"]  # noqa: F821
+
+
+def write_wav(path: PathLike, samples, sample_rate: int = 8000) -> None:
+    """Write a 1-D float array in [-1, 1] as mono 16-bit PCM."""
+    x = np.asarray(samples, np.float32).reshape(-1)
+    pcm = (np.clip(x, -1.0, 1.0) * 32767.0).round().astype("<i2")
+    with wave.open(str(path), "wb") as f:
+        f.setnchannels(1)
+        f.setsampwidth(2)
+        f.setframerate(int(sample_rate))
+        f.writeframes(pcm.tobytes())
+
+
+def read_wav(path: PathLike) -> Tuple[np.ndarray, int]:
+    """Read a 16-bit PCM WAV -> (float32 samples in [-1, 1], sample_rate).
+
+    Multi-channel files are averaged to mono so est/ref pairs compare on a
+    single waveform regardless of channel layout.
+    """
+    with wave.open(str(path), "rb") as f:
+        sw = f.getsampwidth()
+        if sw != 2:
+            raise ValueError(f"{path}: only 16-bit PCM supported, got {8 * sw}-bit")
+        ch = f.getnchannels()
+        sr = f.getframerate()
+        raw = f.readframes(f.getnframes())
+    x = np.frombuffer(raw, "<i2").astype(np.float32) / 32768.0
+    if ch > 1:
+        x = x.reshape(-1, ch).mean(axis=1)
+    return x, sr

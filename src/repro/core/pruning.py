@@ -28,7 +28,7 @@ LM architectures as width/expert pruning.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,6 +143,23 @@ def prune_consumer(w: jax.Array, kept_idx: jax.Array, in_axis: int) -> jax.Array
     return prune_axis(w, kept_idx, axis=in_axis)
 
 
+def _check_keep(keep_fraction: float) -> None:
+    if not 0.0 < keep_fraction <= 1.0:
+        raise ValueError(f"keep_fraction must be in (0, 1], got {keep_fraction}")
+
+
+def _topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Exact-count boolean keep mask over a 1-D score vector.
+
+    Scatters ones at exactly-k top-k indices instead of comparing against a
+    threshold, so tied scores (guaranteed after FP10 quantization collapses
+    magnitudes onto a coarse grid) can never over-keep: ``lax.top_k`` breaks
+    ties by index, deterministically.
+    """
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros(scores.shape, bool).at[idx].set(True)
+
+
 def prune_mask(
     w: jax.Array, keep_fraction: float, *, axis: int | None = None
 ) -> jax.Array:
@@ -154,25 +171,124 @@ def prune_mask(
     (``repro.kernels.masked_mac``: fully-masked weight strips never reach
     the MXU, the TPU analogue of the ASIC gating pruned MACs off).
 
-    axis=None: unstructured magnitude pruning — keep the top
-    ``keep_fraction`` of entries by |w| (the paper's 93.9% weight-level
-    sparsity). axis=k: structured — keep whole slices along ``axis`` ranked
-    by the group-lasso ``channel_importance`` score.
+    axis=None: unstructured magnitude pruning — keep *exactly*
+    ``round(size * keep_fraction)`` entries by |w| (the paper's 93.9%
+    weight-level sparsity). axis=k: structured — keep whole slices along
+    ``axis`` ranked by the group-lasso ``channel_importance`` score.
+    The realized keep count is exact even when magnitudes tie.
     """
-    if not 0.0 < keep_fraction <= 1.0:
-        raise ValueError(f"keep_fraction must be in (0, 1], got {keep_fraction}")
+    _check_keep(keep_fraction)
     if keep_fraction == 1.0:
         return jnp.ones_like(w)
     if axis is None:
         flat = jnp.abs(w).ravel()
         k = max(1, int(round(flat.shape[0] * keep_fraction)))
-        thresh = jnp.sort(flat)[flat.shape[0] - k]
-        return (jnp.abs(w) >= thresh).astype(w.dtype)
-    idx = select_channels(channel_importance(w, axis), keep_fraction)
-    keep = jnp.zeros((w.shape[axis % w.ndim],), bool).at[idx].set(True)
+        return _topk_mask(flat, k).reshape(w.shape).astype(w.dtype)
+    n = w.shape[axis % w.ndim]
+    k = max(1, int(round(n * keep_fraction)))
+    keep = _topk_mask(channel_importance(w, axis), k)
     shape = [1] * w.ndim
     shape[axis % w.ndim] = -1
     return jnp.broadcast_to(keep.reshape(shape), w.shape).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Granular mask builders (weight / block / unit — arXiv 2111.02351)
+# ---------------------------------------------------------------------------
+
+GRANULARITIES = ("weight", "block", "unit")
+
+
+def weight_mask(w: jax.Array, keep_fraction: float) -> jax.Array:
+    """Weight-granular (unstructured) exact-count magnitude mask."""
+    return prune_mask(w, keep_fraction, axis=None)
+
+
+def block_mask(
+    w: jax.Array, keep_fraction: float, block: Tuple[int, int] = (8, 8)
+) -> jax.Array:
+    """Block-granular mask over ``(bk, bn)`` tiles of a 2-D weight.
+
+    Tiles are ranked by their L2 norm and exactly
+    ``max(1, round(n_tiles * keep_fraction))`` tiles are kept whole — the
+    granularity a tiled MAC array can actually gate off. Ragged edge tiles
+    (when the shape is not a multiple of ``block``) are scored over their
+    real extent only.
+    """
+    _check_keep(keep_fraction)
+    if w.ndim != 2:
+        raise ValueError(f"block_mask needs a 2-D weight, got shape {w.shape}")
+    if keep_fraction == 1.0:
+        return jnp.ones_like(w)
+    bk, bn = block
+    K, N = w.shape
+    gk, gn = -(-K // bk), -(-N // bn)
+    wp = jnp.pad(w, ((0, gk * bk - K), (0, gn * bn - N)))
+    tiles = wp.reshape(gk, bk, gn, bn)
+    score = jnp.sqrt(jnp.sum(tiles * tiles, axis=(1, 3))).ravel()  # (gk*gn,)
+    k = max(1, int(round(score.shape[0] * keep_fraction)))
+    keep = _topk_mask(score, k).reshape(gk, 1, gn, 1)
+    full = jnp.broadcast_to(keep, (gk, bk, gn, bn)).reshape(gk * bk, gn * bn)
+    return full[:K, :N].astype(w.dtype)
+
+
+def unit_mask(w: jax.Array, keep_fraction: float) -> jax.Array:
+    """Unit-granular mask: keep whole output columns (last axis) of ``w``.
+
+    The coarsest granularity of arXiv 2111.02351 — an entire output neuron
+    (column of an (in, out) weight) is kept or gated, which a serving kernel
+    turns into genuinely smaller matmuls (column skipping).
+    """
+    return prune_mask(w, keep_fraction, axis=w.ndim - 1)
+
+
+def granular_mask(
+    w: jax.Array,
+    keep_fraction: float,
+    granularity: str = "weight",
+    block: Tuple[int, int] = (8, 8),
+) -> jax.Array:
+    """Dispatch to the weight/block/unit mask builder by name."""
+    if granularity == "weight":
+        return weight_mask(w, keep_fraction)
+    if granularity == "block":
+        return block_mask(w, keep_fraction, block)
+    if granularity == "unit":
+        return unit_mask(w, keep_fraction)
+    raise ValueError(
+        f"unknown granularity {granularity!r}: expected one of {GRANULARITIES}"
+    )
+
+
+def sparsity_report(masks) -> Dict[str, Any]:
+    """Exact sparsity accounting over a (possibly nested) tree of 0/1 masks.
+
+    Returns ``{"per_weight": {path: {...}}, "total": {...}}`` where each
+    entry carries ``size``, ``kept`` (count of nonzero mask entries),
+    ``keep`` (realized keep fraction) and ``sparsity`` (fraction zeroed).
+    Counts are integers, so the realized fraction is exact — the number the
+    tie-breaking regression test pins down.
+    """
+    per: Dict[str, Dict[str, Any]] = {}
+    size_t = kept_t = 0
+    for path, m in _flatten(masks):
+        size = int(m.size)
+        kept = int(jnp.count_nonzero(m))
+        per[path] = {
+            "size": size,
+            "kept": kept,
+            "keep": kept / size if size else 0.0,
+            "sparsity": 1.0 - kept / size if size else 0.0,
+        }
+        size_t += size
+        kept_t += kept
+    total = {
+        "size": size_t,
+        "kept": kept_t,
+        "keep": kept_t / size_t if size_t else 0.0,
+        "sparsity": 1.0 - kept_t / size_t if size_t else 0.0,
+    }
+    return {"per_weight": per, "total": total}
 
 
 # ---------------------------------------------------------------------------
@@ -211,16 +327,27 @@ def sensitivity_scan(
 
 
 def _flatten(tree, prefix=""):
+    """Path-keyed leaves of a dict/list/tuple tree.
+
+    List/tuple entries get ``#<index>`` path segments so real TFTNN param
+    trees (``params["blocks"]`` is a ``List[Params]``) round-trip instead of
+    being treated as opaque leaves.
+    """
     out = []
     if isinstance(tree, dict):
         for k, v in tree.items():
             out.extend(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_flatten(v, f"{prefix}#{i}/"))
     else:
         out.append((prefix.rstrip("/"), tree))
     return out
 
 
-def _unflatten(flat: Dict[str, jax.Array]) -> Dict:
+def _unflatten(flat: Dict[str, jax.Array]):
+    """Inverse of ``_flatten``. Tuples come back as lists (shape-compatible
+    for every param-tree consumer here)."""
     root: Dict = {}
     for path, v in flat.items():
         parts = path.split("/")
@@ -228,7 +355,16 @@ def _unflatten(flat: Dict[str, jax.Array]) -> Dict:
         for p in parts[:-1]:
             d = d.setdefault(p, {})
         d[parts[-1]] = v
-    return root
+
+    def restore(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("#") for k in node):
+            return [restore(v) for _, v in sorted(
+                ((int(k[1:]), v) for k, v in node.items()))]
+        return {k: restore(v) for k, v in node.items()}
+
+    return restore(root)
 
 
 def count_params(tree) -> int:

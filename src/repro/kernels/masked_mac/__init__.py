@@ -1,3 +1,8 @@
-from repro.kernels.masked_mac.ops import masked_matmul
+from repro.kernels.masked_mac.ops import (
+    SKIP_GRANULARITIES,
+    masked_matmul,
+    skip_plan,
+    skip_stats,
+)
 
-__all__ = ["masked_matmul"]
+__all__ = ["SKIP_GRANULARITIES", "masked_matmul", "skip_plan", "skip_stats"]

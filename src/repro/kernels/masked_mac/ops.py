@@ -1,15 +1,165 @@
-"""Public wrapper for the masked-MAC (pruned matmul) kernel."""
+"""Public wrapper for the masked-MAC (pruned matmul) kernel.
+
+Skip granularities
+------------------
+The wrapper turns a *concrete* pruning mask into real compute savings by
+building a host-side **skip plan** at trace time: the mask is inspected once
+(it is a compile-time constant inside the serving step — ``DeployPlan``
+masks are closed over, not traced) and the matmul is decomposed into the
+smallest dense subproblems the mask allows. Three skip paths, matching the
+mask granularities of ``repro.core.pruning`` (arXiv 2111.02351):
+
+- ``"strip"``  — drop ``block_k``-row input strips whose masked weights are
+  all zero (the granularity for weight-granular masks; dense unstructured
+  masks rarely zero a whole strip, so this path mostly documents *why*
+  weight-granular pruning saves no serving time).
+- ``"tile"``   — per ``block_n``-column group, drop the all-zero
+  ``(block_k, block_n)`` tiles (block-granular masks).
+- ``"column"`` — drop whole output columns (unit-granular masks); pruned
+  columns never enter the matmul and get their bias directly.
+
+Dropped rows/columns are exactly zero in the masked weight, so every skip
+path computes the same fp32 sum as ``masked_matmul_ref`` up to summation
+order. ``skip_stats`` reports how many units each plan skips — the
+counters ``DeployPlan`` and ``shard_stats()`` surface.
+
+Pruned columns are reassembled by a single inverse-permutation *gather*
+(pruned outputs read a shared zero column, then the bias is added once) —
+measured ~3x cheaper than scattering parts into the output on CPU XLA. A
+tile plan that fragments into more than ``max_fragments`` subproblems is
+merged into its bounding box (union of live strips x union of live column
+groups): many tiny matmuls cost more than the skipped MACs save, so past
+that point only fully-dead strips/columns are worth skipping. The skip
+COUNTERS always describe the mask at the requested granularity — they are
+accounting, not a promise about which decomposition won.
+
+When the mask is a tracer (someone jits over the mask itself) the wrapper
+falls back to the runtime path: mask multiplied in, the Pallas kernel's
+``lax.cond`` strip skipping doing what it can at run time.
+"""
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.masked_mac.kernel import masked_matmul_pallas
 from repro.kernels.masked_mac.ref import masked_matmul_ref
 from repro.kernels.runtime import interpret_default
+
+SKIP_GRANULARITIES = ("strip", "tile", "column")
+
+# list of (rows, cols) index sets; None means "every row/column"
+SkipPlan = List[Tuple[Optional[np.ndarray], Optional[np.ndarray]]]
+
+
+def _live_rows(m: np.ndarray, block_k: int) -> List[int]:
+    """Indices of ``block_k``-row strips of mask ``m`` with any live entry."""
+    K = m.shape[0]
+    return [i for i in range(-(-K // block_k)) if m[i * block_k : (i + 1) * block_k].any()]
+
+
+def _strip_rows(live: List[int], block_k: int, K: int) -> np.ndarray:
+    return np.concatenate(
+        [np.arange(i * block_k, min((i + 1) * block_k, K)) for i in live]
+    )
+
+
+def skip_plan(
+    mask: Any, granularity: str = "strip", *, block_k: int = 8, block_n: int = 8
+) -> Tuple[SkipPlan, Dict[str, Any]]:
+    """Host-side skip plan + counters for a concrete ``(K, N)`` mask.
+
+    Returns ``(subproblems, stats)``: each subproblem is a ``(rows, cols)``
+    pair of kept-index arrays (``None`` = all) whose dense matmuls cover
+    every live output; ``stats`` counts skipped units of the granularity
+    (``total``, ``skipped``, ``skip_rate``).
+    """
+    m = np.asarray(mask) != 0
+    K, N = m.shape
+    subs: SkipPlan = []
+    if granularity == "strip":
+        gk = -(-K // block_k)
+        live = _live_rows(m, block_k)
+        if live:
+            rows = None if len(live) == gk else _strip_rows(live, block_k, K)
+            subs.append((rows, None))
+        stats = {"total": gk, "skipped": gk - len(live)}
+    elif granularity == "column":
+        cols = np.nonzero(m.any(axis=0))[0]
+        if cols.size:
+            subs.append((None, None if cols.size == N else cols))
+        stats = {"total": N, "skipped": N - int(cols.size)}
+    elif granularity == "tile":
+        gk, gn = -(-K // block_k), -(-N // block_n)
+        kept_tiles = 0
+        for j in range(gn):
+            cols = np.arange(j * block_n, min((j + 1) * block_n, N))
+            live = _live_rows(m[:, cols], block_k)
+            if not live:
+                continue
+            kept_tiles += len(live)
+            rows = None if len(live) == gk else _strip_rows(live, block_k, K)
+            subs.append((rows, None if gn == 1 else cols))
+        stats = {"total": gk * gn, "skipped": gk * gn - kept_tiles}
+    else:
+        raise ValueError(
+            f"unknown skip granularity {granularity!r}: expected {SKIP_GRANULARITIES}"
+        )
+    stats["granularity"] = granularity
+    stats["skip_rate"] = stats["skipped"] / stats["total"] if stats["total"] else 0.0
+    return subs, stats
+
+
+def skip_stats(
+    mask: Any, granularity: str = "strip", *, block_k: int = 8, block_n: int = 8
+) -> Dict[str, Any]:
+    """Just the skip counters of ``skip_plan`` (what ``shard_stats`` shows)."""
+    return skip_plan(mask, granularity, block_k=block_k, block_n=block_n)[1]
+
+
+def _merge_bounding_box(subs: SkipPlan, K: int, N: int) -> SkipPlan:
+    """Collapse a fragmented plan to one (live rows) x (live cols) block."""
+    rows_sets = [r for r, _ in subs]
+    cols_sets = [c for _, c in subs]
+    rows = (None if any(r is None for r in rows_sets)
+            else np.unique(np.concatenate(rows_sets)))
+    cols = (None if any(c is None for c in cols_sets)
+            else np.unique(np.concatenate(cols_sets)))
+    if rows is not None and rows.size == K:
+        rows = None
+    if cols is not None and cols.size == N:
+        cols = None
+    return [(rows, cols)]
+
+
+def _dense(
+    xf: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int,
+    block_k: int,
+    use_pallas: bool,
+) -> jax.Array:
+    """One dense (M, K') @ (K', N') + b subproblem, padded for the kernel."""
+    if not use_pallas:
+        y = xf.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+        return y.astype(xf.dtype)
+    M, K = xf.shape
+    bm = min(block_m, max(M, 1))
+    pad_m = (-M) % bm
+    pad_k = (-K) % block_k
+    if pad_m or pad_k:  # zero rows/strips are exact no-ops for a matmul
+        xf = jnp.pad(xf, ((0, pad_m), (0, pad_k)))
+        w = jnp.pad(w, ((0, pad_k), (0, 0)))
+    out = masked_matmul_pallas(
+        xf, w, b, block_m=bm, block_k=block_k, interpret=interpret_default()
+    )
+    return out[:M]
 
 
 def masked_matmul(
@@ -18,34 +168,70 @@ def masked_matmul(
     b: Optional[jax.Array] = None,
     *,
     mask: Optional[jax.Array] = None,
+    granularity: str = "strip",
     block_m: int = 128,
     block_k: int = 8,
+    block_n: int = 8,
     use_pallas: bool = True,
+    max_fragments: int = 8,
 ) -> jax.Array:
-    """y = x @ (w * mask) + b with block-granular weight zero skipping.
+    """y = x @ (w * mask) + b, skipping pruned work at ``granularity``.
 
     x: (..., K) — leading axes are flattened into rows; w: (K, N);
-    mask: optional dense 0/1 pruning mask, same shape as w (see
-    ``repro.core.pruning.prune_mask``). Input-channel strips of ``block_k``
-    rows whose masked weights are entirely zero are skipped on the MXU —
-    the TPU-granularity version of the ASIC's per-element zero gating.
+    mask: optional dense 0/1 pruning mask, same shape as w, any dtype
+    (bool/int/float all mean "nonzero keeps"). See the module docstring for
+    the strip/tile/column skip paths; ``block_k``/``block_n`` size the
+    strip/tile units and should match the mask builder's tile shape
+    (``core.pruning.block_mask``). ``use_pallas=False`` runs the same skip
+    plan through plain fp32 jnp matmuls (the xla/ref serving backend).
+    ``max_fragments`` caps tile-plan fragmentation (see module docstring).
     """
     if b is None:
         b = jnp.zeros((w.shape[1],), w.dtype)
+    lead, K, N = x.shape[:-1], x.shape[-1], w.shape[1]
+    if mask is not None and not isinstance(mask, jax.core.Tracer):
+        wm = (w * (np.asarray(mask) != 0)).astype(w.dtype)
+        subs, _ = skip_plan(mask, granularity, block_k=block_k, block_n=block_n)
+        if len(subs) > max_fragments:
+            subs = _merge_bounding_box(subs, K, N)
+        xf = x.reshape(-1, K)
+        M = xf.shape[0]
+        bf = b.astype(x.dtype)
+        y = None
+        parts: List[jax.Array] = []
+        col_sets: List[np.ndarray] = []
+        for rows, cols in subs:
+            xs = xf if rows is None else jnp.take(xf, rows, axis=1)
+            ws = wm if rows is None else jnp.take(wm, rows, axis=0)
+            if cols is not None:
+                ws = jnp.take(ws, cols, axis=1)
+            part = _dense(
+                xs, ws, jnp.zeros((ws.shape[1],), x.dtype),
+                block_m=block_m, block_k=block_k, use_pallas=use_pallas,
+            )
+            if cols is None:  # a no-cols subproblem is always the only one
+                y = part + bf
+                break
+            parts.append(part)
+            col_sets.append(cols)
+        if y is None and parts:
+            # one inverse-permutation gather reassembles every part; pruned
+            # columns read the shared zero column appended at index `kept`
+            cat = np.concatenate(col_sets)
+            inv = np.full(N, cat.size, np.int64)
+            inv[cat] = np.arange(cat.size)
+            stacked = jnp.concatenate(
+                parts + [jnp.zeros((M, 1), parts[0].dtype)], axis=1
+            )
+            y = jnp.take(stacked, inv, axis=1) + bf
+        if y is None:  # fully pruned: the output is just the bias
+            y = jnp.broadcast_to(bf, (M, N))
+        return y.reshape(*lead, N)
+    # traced (or absent) mask: runtime path — mask multiplied in, the Pallas
+    # kernel's lax.cond strip skip is the only skipping available
     if not use_pallas:
         return masked_matmul_ref(x, w, b, mask=mask)
     wm = (w * mask if mask is not None else w).astype(w.dtype)
-    lead = x.shape[:-1]
-    K = x.shape[-1]
     xf = x.reshape(-1, K)
-    M = xf.shape[0]
-    block_m = min(block_m, max(M, 1))
-    pad_m = (-M) % block_m
-    pad_k = (-K) % block_k
-    if pad_m or pad_k:  # zero rows/strips are exact no-ops for a matmul
-        xf = jnp.pad(xf, ((0, pad_m), (0, pad_k)))
-        wm = jnp.pad(wm, ((0, pad_k), (0, 0)))
-    out = masked_matmul_pallas(
-        xf, wm, b, block_m=block_m, block_k=block_k, interpret=interpret_default()
-    )
-    return out[:M].reshape(*lead, w.shape[1])
+    out = _dense(xf, wm, b, block_m=block_m, block_k=block_k, use_pallas=True)
+    return out.reshape(*lead, N)

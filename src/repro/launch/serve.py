@@ -84,6 +84,18 @@ def parse_tiers(raw: str) -> tuple:
         raise SystemExit(f"--tiers must be a comma list of ints, got {raw!r}")
 
 
+def prune_kw(args) -> dict:
+    """``--prune-*`` pool kwargs shared by the pool/sharded/gateway tasks."""
+    kw = dict(prune_keep=args.prune_keep,
+              prune_granularity=args.prune_granularity or None)
+    try:
+        bk, bn = (int(v) for v in args.prune_block.split(","))
+        kw["prune_block"] = (bk, bn)
+    except ValueError:
+        raise SystemExit(f"--prune-block must be 'bk,bn', got {args.prune_block!r}")
+    return kw
+
+
 def adaptive_setup(args):
     """``--adaptive`` wiring shared by the pool/sharded/gateway tasks.
 
@@ -138,13 +150,13 @@ def serve_pool(args) -> None:
         # starts at the smallest tier and grows as sessions attach
         pool = ElasticSessionPool(params, cfg, parse_tiers(args.tiers),
                                   quant=FP10 if args.quant else None,
-                                  backend=args.backend, prune_keep=args.prune_keep,
+                                  backend=args.backend, **prune_kw(args),
                                   inflight=2 if args.double_buffer else 1,
                                   hops_per_step=kmax, **extra)
     else:
         pool = SessionPool(params, cfg, capacity=max(args.batch, 1),
                            quant=FP10 if args.quant else None,
-                           backend=args.backend, prune_keep=args.prune_keep,
+                           backend=args.backend, **prune_kw(args),
                            inflight=2 if args.double_buffer else 1,
                            hops_per_step=kmax, **extra)
     noisy, _ = batch_for_step(1, 0, batch=args.batch, num_samples=args.samples)
@@ -178,7 +190,7 @@ def serve_sharded(args) -> None:
     extra.update(durability_setup(args))
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
-                              backend=args.backend, prune_keep=args.prune_keep,
+                              backend=args.backend, **prune_kw(args),
                               inflight=2 if args.double_buffer else 1,
                               hops_per_step=kmax,
                               tiers=tiers, adaptive=args.adaptive or None,
@@ -225,7 +237,7 @@ def serve_gateway(args) -> None:
     extra.update(durability_setup(args))
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
-                              backend=args.backend, prune_keep=args.prune_keep,
+                              backend=args.backend, **prune_kw(args),
                               inflight=2 if args.double_buffer else 1,
                               hops_per_step=kmax,
                               tiers=tiers, adaptive=args.adaptive or None,
@@ -297,9 +309,18 @@ def main() -> None:
                     "a device-resident ingestion ring; decisions are "
                     "recorded and replayable")
     ap.add_argument("--prune-keep", type=float, default=None,
-                    help="pool/sharded tasks with --backend pallas: keep-"
-                    "fraction for the deploy-time zero-skipping weight masks "
-                    "(lossy, the paper's pruned serving point)")
+                    help="pool/sharded/gateway tasks: keep-fraction for the "
+                    "deploy-time zero-skipping weight masks (lossy, the "
+                    "paper's pruned serving point); works on both backends")
+    ap.add_argument("--prune-granularity", default="",
+                    choices=["", "weight", "block", "unit"],
+                    help="mask granularity for --prune-keep (arXiv "
+                    "2111.02351): 'weight' (unstructured, strip skip), "
+                    "'block' (tile skip), 'unit' (whole output columns, "
+                    "column skip); empty = legacy unstructured masks")
+    ap.add_argument("--prune-block", default="8,8",
+                    help="'bk,bn' tile shape for --prune-granularity block "
+                    "and the strip/tile skip units (default 8,8)")
     ap.add_argument("--durability-dir", default="",
                     help="pool/sharded/gateway tasks: root directory for "
                     "durable session state (ticket snapshots + hop "

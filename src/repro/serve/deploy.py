@@ -48,11 +48,11 @@ import jax.numpy as jnp
 from repro import nn
 from repro.core.bn import fold_bn_into_conv2d, fold_bn_into_linear
 from repro.core.bn_transformer import fold_qk_bn
-from repro.core.pruning import prune_mask
+from repro.core.pruning import granular_mask, prune_mask, sparsity_report
 from repro.core.quant import QuantSpec, quantize, quantize_tree
 from repro.kernels.dilated_conv import dilated_split_conv
 from repro.kernels.linear_attention import linear_attention_step
-from repro.kernels.masked_mac import masked_matmul
+from repro.kernels.masked_mac import masked_matmul, skip_stats
 from repro.models import tftnn as tft_mod
 from repro.models.tftnn import _sub_cfg
 from repro.serve.streaming_se import StreamState, hop_analysis, hop_synthesis
@@ -82,6 +82,15 @@ class DeployPlan:
             two points as ``stream_hop``).
         use_pallas: route through the Pallas kernels (False = the pure-jnp
             reference path, used by parity tests and the dry-run lowering).
+        skip_granularity: the masked-MAC skip path the plan's masks were
+            built for (``"strip"``/``"tile"``/``"column"``; None = unpruned).
+        prune_block: the ``(block_k, block_n)`` tile shape for block masks
+            and the strip/tile skip units.
+        skip_stats: per-masked-weight skip counters
+            (``kernels.masked_mac.skip_stats``) plus a ``"total"`` aggregate
+            — the numbers ``SessionPool.shard_stats()`` surfaces.
+        sparsity: exact realized-sparsity accounting over ``masks``
+            (``core.pruning.sparsity_report``; None = unpruned).
     """
 
     cfg: tft_mod.TFTConfig
@@ -89,6 +98,10 @@ class DeployPlan:
     masks: Optional[Params]
     quant: Optional[QuantSpec]
     use_pallas: bool = True
+    skip_granularity: Optional[str] = None
+    prune_block: Tuple[int, int] = (8, 8)
+    skip_stats: Optional[Dict[str, Any]] = None
+    sparsity: Optional[Dict[str, Any]] = None
 
 
 def _squeeze_kt(w: jax.Array) -> jax.Array:
@@ -144,6 +157,24 @@ def validate_deployable(cfg: tft_mod.TFTConfig) -> None:
         )
 
 
+def skip_granularity_for(
+    prune_granularity: Optional[str], prune_axis: Optional[int]
+) -> str:
+    """Map a mask granularity (or legacy axis) to a masked-MAC skip path."""
+    if prune_granularity is not None:
+        kind = {"weight": "strip", "block": "tile", "unit": "column"}.get(
+            prune_granularity
+        )
+        if kind is None:
+            raise ValueError(
+                f"unknown prune_granularity {prune_granularity!r}: "
+                "expected 'weight', 'block' or 'unit'"
+            )
+        return kind
+    # legacy structured-axis masks: axis 1/-1 zeroes whole output columns
+    return "column" if prune_axis in (1, -1) else "strip"
+
+
 def build_deploy_plan(
     params: Params,
     cfg: tft_mod.TFTConfig,
@@ -151,6 +182,8 @@ def build_deploy_plan(
     quant: Optional[QuantSpec] = None,
     prune_keep: Optional[float] = None,
     prune_axis: Optional[int] = None,
+    prune_granularity: Optional[str] = None,
+    prune_block: Tuple[int, int] = (8, 8),
     use_pallas: bool = True,
 ) -> DeployPlan:
     """Compile trained params into the deployment graph (see module doc).
@@ -162,10 +195,16 @@ def build_deploy_plan(
             weights are pre-rounded here, activations per hop.
         prune_keep: optional keep-fraction in (0, 1] for the masked matmuls
             (``MASKED_WEIGHTS``); materialized as dense zero-skipping masks
-            via ``core.pruning.prune_mask``. None/1.0 = no pruning (the
+            with exact realized counts. None/1.0 = no pruning (the
             parity-test configuration).
-        prune_axis: None = unstructured magnitude masks; an int = structured
-            channel masks along that axis of (in, out) weights.
+        prune_axis: legacy structured masks — None = unstructured magnitude
+            masks; an int = channel masks along that axis of (in, out)
+            weights. Ignored when ``prune_granularity`` is given.
+        prune_granularity: ``"weight"`` / ``"block"`` / ``"unit"``
+            (``core.pruning.granular_mask``, arXiv 2111.02351); selects the
+            matching masked-MAC skip path (strip / tile / column).
+        prune_block: ``(block_k, block_n)`` tile shape for block masks and
+            the strip/tile skip units.
         use_pallas: False switches every kernel to its pure-jnp oracle.
 
     Returns:
@@ -213,14 +252,42 @@ def build_deploy_plan(
     dp["blocks"] = blocks
 
     masks: Optional[Params] = None
+    skip_kind: Optional[str] = None
+    stats: Optional[Dict[str, Any]] = None
+    sparsity: Optional[Dict[str, Any]] = None
     if prune_keep is not None and prune_keep < 1.0:
-        masks = {
-            name: prune_mask(dp[name]["w"], prune_keep, axis=prune_axis)
+        skip_kind = skip_granularity_for(prune_granularity, prune_axis)
+        bk, bn = prune_block
+        if prune_granularity is not None:
+            masks = {
+                name: granular_mask(dp[name]["w"], prune_keep, prune_granularity, prune_block)
+                for name in MASKED_WEIGHTS
+            }
+        else:
+            masks = {
+                name: prune_mask(dp[name]["w"], prune_keep, axis=prune_axis)
+                for name in MASKED_WEIGHTS
+            }
+        stats = {
+            name: skip_stats(masks[name], skip_kind, block_k=bk, block_n=bn)
             for name in MASKED_WEIGHTS
         }
+        total = sum(s["total"] for s in stats.values())
+        skipped = sum(s["skipped"] for s in stats.values())
+        stats["total"] = {
+            "granularity": skip_kind,
+            "total": total,
+            "skipped": skipped,
+            "skip_rate": skipped / total if total else 0.0,
+        }
+        sparsity = sparsity_report(masks)
     if quant is not None and quant.kind != "none":
         dp = quantize_tree(dp, quant)
-    return DeployPlan(cfg=cfg, params=dp, masks=masks, quant=quant, use_pallas=use_pallas)
+    return DeployPlan(
+        cfg=cfg, params=dp, masks=masks, quant=quant, use_pallas=use_pallas,
+        skip_granularity=skip_kind, prune_block=prune_block,
+        skip_stats=stats, sparsity=sparsity,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -240,10 +307,20 @@ def _conv_f(p: Params, x: jax.Array, *, stride: int = 1) -> jax.Array:
 
 
 def _mm(plan: DeployPlan, name: str, x: jax.Array) -> jax.Array:
-    """Masked-MAC matmul for one of the plan's pruned weights."""
+    """Masked-MAC matmul for one of the plan's pruned weights.
+
+    The mask is a trace-time constant here, so ``masked_matmul`` compiles
+    the skip plan in: pruned columns/tiles/strips never reach the compiled
+    graph at all — the serving-speed payoff of granular pruning.
+    """
     p = plan.params[name]
     mask = plan.masks.get(name) if plan.masks is not None else None
-    return masked_matmul(x, p["w"], p["b"], mask=mask, use_pallas=plan.use_pallas)
+    bk, bn = plan.prune_block
+    return masked_matmul(
+        x, p["w"], p["b"], mask=mask,
+        granularity=plan.skip_granularity or "strip",
+        block_k=bk, block_n=bn, use_pallas=plan.use_pallas,
+    )
 
 
 def _dilated_fused(plan: DeployPlan, layers: List[Params], x: jax.Array) -> jax.Array:

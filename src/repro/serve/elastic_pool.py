@@ -105,7 +105,8 @@ class ElasticSessionPool:
         tiers: strictly increasing capacity ladder, e.g. ``(4, 16, 64)``.
             The pool starts at ``tiers[0]`` and never exceeds ``tiers[-1]``.
         quant / sample_rate / donate / device / backend / prune_keep /
-            prune_axis / inflight / max_unread_hops / on_unparked /
+            prune_axis / prune_granularity / prune_block / inflight /
+            max_unread_hops / on_unparked /
             hops_per_step: forwarded to every tier's ``SessionPool`` (see
             there). The compiled step is built ONCE from these and shared by
             all tiers (``hops_per_step=K`` serves every tier through the
@@ -156,6 +157,8 @@ class ElasticSessionPool:
         backend: str = "xla",
         prune_keep: Optional[float] = None,
         prune_axis: Optional[int] = None,
+        prune_granularity: Optional[str] = None,
+        prune_block: Tuple[int, int] = (8, 8),
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
         on_unparked=None,
@@ -209,6 +212,8 @@ class ElasticSessionPool:
         self._params = params
         self._prune_keep = prune_keep
         self._prune_axis = prune_axis
+        self._prune_granularity = prune_granularity
+        self._prune_block = prune_block
         self._ingest_ring = ingest_ring
         # ONE step cache for every tier: jit specializes per (capacity,)
         # batch shape and pools fill one entry per lane count on demand, so
@@ -253,6 +258,8 @@ class ElasticSessionPool:
             hops_per_step=self.hops_per_step,
             prune_keep=self._prune_keep,
             prune_axis=self._prune_axis,
+            prune_granularity=self._prune_granularity,
+            prune_block=self._prune_block,
             step_fn=self._step_fn_seed,
             step_fns=self._step_fns,
             ingest_ring=self._ingest_ring,

@@ -51,7 +51,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -241,12 +241,17 @@ class SessionPool:
             ``"pallas"`` (the deploy-compiled graph: BN folded, Pallas
             kernels; see ``repro.serve.deploy``). Ignored when ``step_fn``
             is supplied.
-        prune_keep / prune_axis: deploy-time pruning for the pallas backend
-            (``deploy.build_deploy_plan``): keep-fraction for the dense
-            zero-skipping masks on the matmul weights, unstructured
-            (``prune_axis=None``) or channel-structured. Lossy by design —
-            the paper's 93.9 %-pruned serving point, not a parity mode.
-            ``None`` (default) serves unpruned.
+        prune_keep / prune_axis / prune_granularity / prune_block:
+            deploy-time pruning (``deploy.build_deploy_plan``): keep-fraction
+            for the dense zero-skipping masks on the matmul weights, either
+            legacy unstructured/axis-structured (``prune_axis``) or
+            weight/block/unit granular (``prune_granularity`` with
+            ``prune_block`` tiles — arXiv 2111.02351). Works on both
+            backends: a pruned ``"xla"`` pool serves the folded plan through
+            the reference kernels. Lossy by design — the paper's
+            93.9 %-pruned serving point, not a parity mode. ``None``
+            (default) serves unpruned. ``shard_stats()`` reports the exact
+            realized sparsity and kernel skip rate under ``"prune"``.
         inflight: depth of the dispatch pipeline (>= 1). 1 (default) is the
             classic loop: each ``dispatch()`` first waits out the previous
             step. 2 is **double-buffered ingestion** (the ROADMAP async
@@ -342,6 +347,8 @@ class SessionPool:
         backend: str = "xla",
         prune_keep: Optional[float] = None,
         prune_axis: Optional[int] = None,
+        prune_granularity: Optional[str] = None,
+        prune_block: Tuple[int, int] = (8, 8),
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
         on_unparked=None,
@@ -384,6 +391,9 @@ class SessionPool:
         self._donate = donate
         self._prune_keep = prune_keep
         self._prune_axis = prune_axis
+        self._prune_granularity = prune_granularity
+        self._prune_block = prune_block
+        self._prune_meta: Dict[str, Any] = {}
         self._ring_depth = ingest_ring
         self._steps: Dict[Any, Any] = step_fns if step_fns is not None else {}
         if step_fn is not None:
@@ -450,8 +460,10 @@ class SessionPool:
             step = make_stream_hop(
                 self._params, self.cfg, quant=self.quant, donate=self._donate,
                 backend=self.backend, prune_keep=self._prune_keep,
-                prune_axis=self._prune_axis, max_hops_per_step=k,
-                from_ring=self._ring_depth,
+                prune_axis=self._prune_axis,
+                prune_granularity=self._prune_granularity,
+                prune_block=self._prune_block, max_hops_per_step=k,
+                from_ring=self._ring_depth, prune_meta=self._prune_meta,
             )
             self._steps[key] = step
         return step
@@ -940,6 +952,43 @@ class SessionPool:
 
     # -- sharding seams: stats export + session migration -------------------
 
+    def _prune_summary(self) -> Optional[Dict[str, Any]]:
+        """Skip-rate + realized-sparsity counters for ``shard_stats``.
+
+        The meta dict is filled by ``make_stream_hop`` when this pool
+        compiles its first step; if every step so far came out of a shared
+        ``step_fns`` cache (so this pool never compiled), the mask
+        accounting — folding + masks only, no XLA compile — is rebuilt here.
+        """
+        if self._prune_keep is None or self._prune_keep >= 1.0:
+            return None
+        if not self._prune_meta:
+            from repro.serve.deploy import build_deploy_plan
+
+            plan = build_deploy_plan(
+                self._params, self.cfg, prune_keep=self._prune_keep,
+                prune_axis=self._prune_axis,
+                prune_granularity=self._prune_granularity,
+                prune_block=self._prune_block, use_pallas=False,
+            )
+            self._prune_meta.update(
+                sparsity=plan.sparsity, skip_stats=plan.skip_stats,
+                skip_granularity=plan.skip_granularity,
+            )
+        meta = self._prune_meta
+        return {
+            "keep": self._prune_keep,
+            "granularity": self._prune_granularity,
+            "axis": self._prune_axis,
+            "skip_granularity": meta["skip_granularity"],
+            "realized_keep": meta["sparsity"]["total"]["keep"],
+            "realized_sparsity": meta["sparsity"]["total"]["sparsity"],
+            "skip_rate": meta["skip_stats"]["total"]["skip_rate"],
+            "skip_counters": {
+                k: dict(v) for k, v in meta["skip_stats"].items() if k != "total"
+            },
+        }
+
     def shard_stats(self) -> Dict[str, object]:
         """Shard-local load counters, exported for a router to balance on.
 
@@ -949,13 +998,16 @@ class SessionPool:
             ``backlog_hops`` (full hops queued but not yet processed —
             the pressure signal), ``p50_ms`` (median dispatch→ready step
             latency), and ``device`` (where this shard's state lives).
+            Pruned pools additionally report ``prune``: requested keep,
+            exact realized sparsity, and the masked-MAC skip-rate counters
+            per masked weight.
         """
         backlog = sum(
             self._backlog_hops(slot)
             for slot, s in enumerate(self._slot_session)
             if s is not None
         )
-        return {
+        stats: Dict[str, object] = {
             "capacity": self.capacity,
             "active": self.num_active,
             "free": self.capacity - self.num_active,
@@ -966,6 +1018,10 @@ class SessionPool:
             "backend": self.backend,
             "hops_per_step": self.hops_per_step,
         }
+        prune = self._prune_summary()
+        if prune is not None:
+            stats["prune"] = prune
+        return stats
 
     def export_session(self, sess: Session) -> SessionTicket:
         """Snapshot a live session and release its slot (migration source).

@@ -232,8 +232,9 @@ class ShardedSessionPool:
         backend: hop-step implementation forwarded to every shard — ``"xla"``
             or ``"pallas"`` (the deploy-compiled fused path, see
             ``repro.serve.deploy``). One compiled step per device either way.
-        prune_keep / prune_axis: deploy-time zero-skipping masks for the
-            pallas backend, forwarded to every shard's compiled step (see
+        prune_keep / prune_axis / prune_granularity / prune_block:
+            deploy-time zero-skipping masks (weight/block/unit granular),
+            forwarded to every shard's compiled step on either backend (see
             ``SessionPool``). Lossy by design; ``None`` serves unpruned.
         inflight / max_unread_hops / on_unparked: per-shard ingestion
             pipelining depth, output backpressure bound, and parked-session
@@ -309,6 +310,8 @@ class ShardedSessionPool:
         backend: str = "xla",
         prune_keep: Optional[float] = None,
         prune_axis: Optional[int] = None,
+        prune_granularity: Optional[str] = None,
+        prune_block: Tuple[int, int] = (8, 8),
         inflight: int = 1,
         max_unread_hops: Optional[int] = None,
         on_unparked=None,
@@ -348,6 +351,7 @@ class ShardedSessionPool:
         self._mk = dict(
             quant=quant, donate=donate, backend=backend,
             prune_keep=prune_keep, prune_axis=prune_axis,
+            prune_granularity=prune_granularity, prune_block=prune_block,
             hops_per_step=hops_per_step, capacity=capacity, tiers=tiers,
             shrink_fraction=shrink_fraction, shrink_patience=shrink_patience,
             sample_rate=sample_rate, inflight=inflight,
@@ -408,6 +412,8 @@ class ShardedSessionPool:
             max_unread_hops=m["max_unread_hops"],
             on_unparked=m["on_unparked"], hops_per_step=m["hops_per_step"],
             prune_keep=m["prune_keep"], prune_axis=m["prune_axis"],
+            prune_granularity=m["prune_granularity"],
+            prune_block=m["prune_block"],
             step_fns=step_fns, ingest_ring=m["ingest_ring"],
         )
         if self.elastic:

@@ -190,8 +190,11 @@ def make_stream_hop(
     backend: str = "xla",
     prune_keep: Optional[float] = None,
     prune_axis: Optional[int] = None,
+    prune_granularity: Optional[str] = None,
+    prune_block: Tuple[int, int] = (8, 8),
     max_hops_per_step: int = 1,
     from_ring: Optional[int] = None,
+    prune_meta: Optional[dict] = None,
 ) -> Callable[..., Tuple[StreamState, jax.Array]]:
     """Build the jit-compiled batched hop step shared by server and benchmarks.
 
@@ -254,13 +257,23 @@ def make_stream_hop(
     - ``"pallas"`` — the deploy-compiled graph (``repro.serve.deploy``):
       BN folded out, Pallas kernels in the hot spots, weights pre-quantized
       after folding. Same signature, parity-tested against ``"xla"``.
-      ``prune_keep``/``prune_axis`` (pallas only) materialize dense
-      zero-skipping masks for the plan's matmul weights
-      (``deploy.build_deploy_plan``) — lossy by design, like the paper's
-      deployment pruning; None serves unpruned.
+
+    ``prune_keep`` (with optional ``prune_axis`` — legacy structured — or
+    ``prune_granularity``/``prune_block`` — weight/block/unit masks, see
+    ``deploy.build_deploy_plan``) materializes dense zero-skipping masks
+    for the plan's matmul weights — lossy by design, like the paper's
+    deployment pruning; None serves unpruned. Pruning works on **both**
+    backends: masks need the deploy-compiled graph, so a pruned
+    ``backend="xla"`` step serves the same folded plan through the pure-jnp
+    reference kernels (``use_pallas=False``) — what the interpret-mode CI
+    leg and the Pareto sweep's xla axis run. The two pruned backends are
+    bit-identical under FP10 activation quantization (tests/test_deploy.py).
+
+    ``prune_meta``: optional dict the factory fills with the plan's exact
+    ``sparsity`` report and per-weight ``skip_stats`` when pruning is
+    active — how ``SessionPool.shard_stats()`` gets its skip-rate counters
+    without recompiling anything.
     """
-    if prune_keep is not None and backend != "pallas":
-        raise ValueError("prune_keep requires backend='pallas' (the deploy path)")
     if max_hops_per_step < 1:
         raise ValueError("max_hops_per_step must be >= 1")
     if from_ring is not None and from_ring < max_hops_per_step:
@@ -268,25 +281,35 @@ def make_stream_hop(
             f"from_ring depth {from_ring} < max_hops_per_step "
             f"{max_hops_per_step}: the ring gather reads K lanes"
         )
-    if backend == "pallas":
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}: expected 'xla' or 'pallas'")
+    # an EXPLICIT prune_keep (even 1.0) routes xla through the deploy plan:
+    # keep=1.0 is the "dense, same folded graph" baseline the pruning Pareto
+    # divides by, so it must share the sparse points' compilation path
+    if backend == "pallas" or prune_keep is not None:
         from repro.serve.deploy import build_deploy_plan, stream_hop_fused
 
         plan = build_deploy_plan(
-            params, cfg, quant=quant, prune_keep=prune_keep, prune_axis=prune_axis
+            params, cfg, quant=quant, prune_keep=prune_keep,
+            prune_axis=prune_axis, prune_granularity=prune_granularity,
+            prune_block=prune_block, use_pallas=(backend == "pallas"),
         )
+        if prune_meta is not None and plan.masks is not None:
+            prune_meta.update(
+                sparsity=plan.sparsity,
+                skip_stats=plan.skip_stats,
+                skip_granularity=plan.skip_granularity,
+            )
 
         def hop(state: StreamState, hops: jax.Array):
             return stream_hop_fused(plan, state, hops)
 
-    elif backend == "xla":
+    else:
         if quant is not None and quant.kind != "none":
             params = quantize_tree(params, quant)
 
         def hop(state: StreamState, hops: jax.Array):
             return stream_hop(params, cfg, state, hops, quant=quant)
-
-    else:
-        raise ValueError(f"unknown backend {backend!r}: expected 'xla' or 'pallas'")
 
     def masked(state: StreamState, hops: jax.Array, active: jax.Array):
         stepped, out = hop(state, hops)

@@ -1,0 +1,188 @@
+"""Prune-and-fine-tune: recover SE quality with the sparsity masks frozen.
+
+The paper's 93.9%-pruned deployment is not a post-hoc mask slapped on a
+dense model — the network is fine-tuned WITH the masks frozen so the
+surviving weights absorb the pruned capacity (Section III-F). This module
+reproduces that loop on the repo's own training step:
+
+- ``build_prune_masks(params, keep, ...)`` materializes 0/1 masks for the
+  four served masked-MAC weights (``serve.deploy.MASKED_WEIGHTS``) in the
+  RAW parameter layout, using the exact-count granular builders
+  (``core.pruning.granular_mask``). Those four weights are exactly the ones
+  the deploy compilation does NOT fold any BN into, so masks built here on
+  raw weights re-derive bit-identically from ``build_deploy_plan`` at
+  serving time: pruned entries are exactly zero after projection, and the
+  exact-top-k builders rank zeros last.
+- ``finetune_pruned(params, cfg, ...)`` runs ``make_se_train_step`` (the
+  paper's Eq.-2 cross-domain loss + Adam) on synthetic speech fixtures,
+  projecting the masked weights back to zero after every update. Projected
+  descent keeps the realized sparsity exact at every step — the masks never
+  drift — while gradients through the surviving weights are untouched.
+- ``train_dense(cfg, ...)`` is the matching dense baseline trainer, so the
+  pruning Pareto (benchmarks/prune_pareto.py) compares genuinely trained
+  checkpoints, not random inits.
+
+Checkpoints go through ``train.checkpoint.Checkpointer`` (atomic, manifest
+-driven), so the benchmark can cache fine-tuned weights across runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.audio.synthetic import batch_for_step
+from repro.core.pruning import granular_mask, prune_mask
+from repro.models import tftnn as tft_mod
+from repro.serve.deploy import MASKED_WEIGHTS
+from repro.train.checkpoint import Checkpointer
+from repro.train.optimizer import AdamConfig
+from repro.train.train_loop import TrainSettings, make_se_train_step, make_train_state
+
+Params = Dict[str, Any]
+
+# fine-tuning default: gentler than the paper's initial LR — we are
+# recovering a trained model, not training from scratch
+FINETUNE_SETTINGS = TrainSettings(remat=False, adam=AdamConfig(lr=3e-4))
+
+
+def _raw_weight(params: Params, name: str) -> jax.Array:
+    """The served 2-D view of a raw masked weight (mask convs are 1x1)."""
+    w = params[name]["w"]
+    return w[0, 0] if w.ndim == 4 else w
+
+
+def build_prune_masks(
+    params: Params,
+    keep: float,
+    *,
+    granularity: Optional[str] = "weight",
+    axis: Optional[int] = None,
+    block: Tuple[int, int] = (8, 8),
+) -> Params:
+    """Exact-count 0/1 masks for MASKED_WEIGHTS, in the raw param layout.
+
+    ``granularity`` selects ``core.pruning.granular_mask``
+    (weight/block/unit); ``granularity=None`` falls back to the legacy
+    ``prune_mask(axis=...)`` builders. Masks are keyed by weight name and
+    shaped like ``params[name]["w"]`` (1x1 conv masks keep the 4-D layout).
+    """
+    masks: Params = {}
+    for name in MASKED_WEIGHTS:
+        w = params[name]["w"]
+        w2 = _raw_weight(params, name)
+        if granularity is not None:
+            m = granular_mask(w2, keep, granularity, block)
+        else:
+            m = prune_mask(w2, keep, axis=axis)
+        masks[name] = m.reshape(w.shape)
+    return masks
+
+
+def apply_masks(params: Params, masks: Params) -> Params:
+    """Project the masked weights to exactly zero outside their masks."""
+    out = dict(params)
+    for name, m in masks.items():
+        p = dict(out[name])
+        p["w"] = p["w"] * m.astype(p["w"].dtype)
+        out[name] = p
+    return out
+
+
+def realized_keep(params: Params) -> Dict[str, float]:
+    """Fraction of exactly-nonzero entries per masked weight (+ 'total')."""
+    out: Dict[str, float] = {}
+    total = kept = 0
+    for name in MASKED_WEIGHTS:
+        w = jnp.asarray(params[name]["w"])
+        n = int(w.size)
+        k = int(jnp.sum(w != 0))
+        out[name] = k / n
+        total += n
+        kept += k
+    out["total"] = kept / total if total else 1.0
+    return out
+
+
+def train_dense(
+    cfg: tft_mod.TFTConfig,
+    *,
+    steps: int = 60,
+    batch: int = 2,
+    num_samples: int = 4096,
+    seed: int = 0,
+    settings: TrainSettings = FINETUNE_SETTINGS,
+    params: Optional[Params] = None,
+) -> Tuple[Params, List[float]]:
+    """Train a dense TFTNN on synthetic fixtures; returns (params, losses).
+
+    ``params=None`` initializes fresh; otherwise continues from the given
+    tree. The data pipeline is the stateless batch_for_step(seed, step), so
+    the run is a pure function of (cfg, steps, batch, num_samples, seed).
+    """
+    if params is None:
+        params = tft_mod.init_tft(jax.random.PRNGKey(seed), cfg)
+    train_step = jax.jit(make_se_train_step(cfg, settings))
+    state = make_train_state(params, settings)
+    losses: List[float] = []
+    for step in range(steps):
+        noisy, clean = batch_for_step(seed, step, batch=batch, num_samples=num_samples)
+        state, metrics = train_step(state, noisy, clean)
+        losses.append(float(metrics["loss"]))
+    return state["params"], losses
+
+
+def finetune_pruned(
+    params: Params,
+    cfg: tft_mod.TFTConfig,
+    *,
+    keep: float,
+    granularity: Optional[str] = "weight",
+    axis: Optional[int] = None,
+    block: Tuple[int, int] = (8, 8),
+    steps: int = 40,
+    batch: int = 2,
+    num_samples: int = 4096,
+    seed: int = 100,
+    settings: TrainSettings = FINETUNE_SETTINGS,
+) -> Tuple[Params, Params, List[float]]:
+    """Mask-frozen fine-tuning: returns (pruned params, masks, losses).
+
+    Masks are built ONCE from the incoming (trained) weights, the weights
+    are projected onto them, and every Adam update is re-projected — the
+    forward pass therefore always sees exactly-pruned weights, and the
+    realized sparsity is exact at every step. The loss/gradient machinery
+    is the unmodified ``make_se_train_step``; freezing happens entirely in
+    the projection (updates to pruned entries are discarded each step, so
+    they never re-enter the forward).
+    """
+    masks = build_prune_masks(
+        params, keep, granularity=granularity, axis=axis, block=block
+    )
+    pruned = apply_masks(params, masks)
+    train_step = jax.jit(make_se_train_step(cfg, settings))
+    state = make_train_state(pruned, settings)
+    losses: List[float] = []
+    for step in range(steps):
+        noisy, clean = batch_for_step(seed, step, batch=batch, num_samples=num_samples)
+        state, metrics = train_step(state, noisy, clean)
+        state = {**state, "params": apply_masks(state["params"], masks)}
+        losses.append(float(metrics["loss"]))
+    return state["params"], masks, losses
+
+
+def save_checkpoint(directory: str, params: Params, *, step: int = 0,
+                    extra: Optional[Dict] = None) -> None:
+    """Persist a params tree (atomic write; see train.checkpoint)."""
+    ckpt = Checkpointer(directory, async_save=False)
+    ckpt.save(step, {"params": params}, extra=extra)
+
+
+def load_checkpoint(directory: str, params_like: Params) -> Params:
+    """Restore the latest params tree saved by ``save_checkpoint``."""
+    ckpt = Checkpointer(directory, async_save=False)
+    _, state = ckpt.restore({"params": params_like})
+    return state["params"]

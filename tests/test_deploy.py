@@ -233,20 +233,49 @@ def test_bad_backend_rejected(setup):
         SessionPool(params, cfg, capacity=1, backend="cuda")
 
 
-def test_session_pool_pruned_pallas_serves(setup):
-    """prune_keep reaches the compiled serving step (lossy but running)."""
+def test_session_pool_pruned_serves_both_backends(setup):
+    """prune_keep reaches the compiled serving step on BOTH backends.
+
+    The xla backend used to reject prune_keep outright; now it routes
+    through the same deploy plan, and the two backends' skip plans must
+    produce bit-identical audio (the skip decomposition is exact algebra,
+    and under FP10 both fused paths are bit-exact — the invariant
+    ``test_fused_fp10_bitmatch`` pins for the dense graph)."""
     cfg, params, wave = setup
     audio = np.asarray(wave[0], np.float32)
-    pool = SessionPool(params, cfg, capacity=1, backend="pallas", prune_keep=0.5)
+
+    def serve(backend, granularity):
+        # (4, 4) tiles: the default (8, 8) tile IS the whole 8x8 tiny
+        # weight, which would make block-granular keep=0.5 round up to 1.0
+        pool = SessionPool(
+            params, cfg, capacity=1, backend=backend, quant=FP10,
+            prune_keep=0.5, prune_granularity=granularity, prune_block=(4, 4),
+        )
+        s = pool.attach()
+        pool.feed(s, audio)
+        pool.pump()
+        out = pool.read(s)
+        stats = pool.shard_stats()
+        pool.detach(s)
+        return out, stats
+
+    for granularity in ("weight", "block", "unit"):
+        out_x, stats = serve("xla", granularity)
+        out_p, _ = serve("pallas", granularity)
+        assert out_x.size == audio.size and np.isfinite(out_x).all()
+        assert np.array_equal(out_x, out_p), granularity
+        prune = stats["prune"]
+        assert prune["granularity"] == granularity
+        assert 0.0 < prune["realized_keep"] < 1.0
+        assert prune["skip_rate"] >= 0.0
+    # an explicit keep=1.0 is the dense-graph baseline: serves, no stats
+    pool = SessionPool(params, cfg, capacity=1, backend="xla", prune_keep=1.0)
     s = pool.attach()
     pool.feed(s, audio)
     pool.pump()
-    out = pool.read(s)
+    assert pool.read(s).size == audio.size
+    assert pool.shard_stats().get("prune") is None
     pool.detach(s)
-    assert out.size == audio.size and np.isfinite(out).all()
-    # pruning on the xla backend is a config error, not a silent no-op
-    with pytest.raises(ValueError, match="prune_keep"):
-        SessionPool(params, cfg, capacity=1, backend="xla", prune_keep=0.5)
 
 
 # -- double buffering + backpressure ----------------------------------------

@@ -1,0 +1,252 @@
+"""Sparsity accounting regressions: exact-count masks, tree plumbing, skip
+paths, and the mask-frozen fine-tune loop.
+
+The bugs these pin down (ISSUE 9):
+
+1. Threshold-based top-k over-kept entries whenever magnitudes tied — and
+   FP10 quantization *guarantees* ties by collapsing magnitudes onto a
+   coarse grid. ``_topk_mask`` scatters at exactly-k indices instead.
+2. ``_flatten``/``_unflatten`` treated list nodes (``params["blocks"]``) as
+   opaque leaves, so ``sensitivity_scan`` silently skipped every weight
+   inside a transformer block on a real TFTNN tree.
+3. ``masked_matmul``'s skip decomposition must match ``masked_matmul_ref``
+   on every edge shape (ragged K, M=1, fully pruned, any mask dtype) on
+   both backends — including when fragmentation forces the bounding-box
+   merge.
+4. ``finetune_pruned`` must hold the realized sparsity exact through every
+   optimizer step, and the deploy path must re-derive the identical masks
+   from the fine-tuned checkpoint.
+"""
+
+import dataclasses
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pruning import (
+    _flatten,
+    _unflatten,
+    block_mask,
+    granular_mask,
+    prune_mask,
+    sensitivity_scan,
+    sparsity_report,
+    unit_mask,
+)
+from repro.core.quant import FP10, quantize
+from repro.kernels.masked_mac import masked_matmul
+from repro.kernels.masked_mac.ops import skip_stats
+from repro.kernels.masked_mac.ref import masked_matmul_ref
+from repro.models import tftnn as tft
+from repro.train.finetune_prune import (
+    MASKED_WEIGHTS,
+    build_prune_masks,
+    finetune_pruned,
+    realized_keep,
+)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+
+def tiny_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64, hop=16, freq_bins=16,
+        channels=8, att_dim=8, num_heads=2, gru_hidden=8,
+        dilation_rates=(1, 2), downsample=2,
+    )
+
+
+# -- 1: exact-count top-k under ties -----------------------------------------
+
+def test_prune_mask_exact_count_on_fp10_ties():
+    """FP10 collapses magnitudes onto a coarse grid; the mask count must
+    stay exact anyway (the old threshold compare kept every tied entry)."""
+    w = quantize(jax.random.normal(jax.random.PRNGKey(0), (32, 24)), FP10)
+    # the grid guarantees ties: far fewer distinct magnitudes than entries
+    assert np.unique(np.abs(np.asarray(w))).size < w.size // 2
+    for keep in (0.25, 0.5, 0.939):
+        m = prune_mask(w, keep)
+        assert int(jnp.count_nonzero(m)) == max(1, round(w.size * keep))
+
+
+def test_prune_mask_structured_exact_count_on_ties():
+    """Axis-structured masks keep exactly-k whole slices even when whole
+    columns tie in importance (here: literal duplicate columns)."""
+    col = jnp.arange(1.0, 9.0).reshape(8, 1)
+    w = jnp.tile(col, (1, 12))  # 12 identical columns, all scores tie
+    m = prune_mask(w, 0.5, axis=1)
+    kept_cols = int(jnp.count_nonzero(jnp.any(m != 0, axis=0)))
+    assert kept_cols == 6
+    # kept columns are whole
+    assert int(jnp.count_nonzero(m)) == 6 * 8
+
+
+def test_granular_masks_exact_counts_ragged():
+    """weight/block/unit builders realize exact counts on ragged shapes."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (13, 10))
+    for keep in (0.3, 0.5, 0.75):
+        mw = granular_mask(w, keep, "weight")
+        assert int(jnp.count_nonzero(mw)) == max(1, round(w.size * keep))
+
+        mb = block_mask(w, keep, (4, 4))
+        tiles = 4 * 3  # ceil(13/4) x ceil(10/4)
+        kept_tiles = 0
+        for i in range(4):
+            for j in range(3):
+                t = mb[i * 4 : (i + 1) * 4, j * 4 : (j + 1) * 4]
+                assert bool(jnp.all(t == t[0, 0]))  # tiles kept/dropped whole
+                kept_tiles += int(t[0, 0] != 0)
+        assert kept_tiles == max(1, round(tiles * keep))
+
+        mu = unit_mask(w, keep)
+        kept_cols = int(jnp.count_nonzero(jnp.any(mu != 0, axis=0)))
+        assert kept_cols == max(1, round(10 * keep))
+
+    rep = sparsity_report({"a": granular_mask(w, 0.5, "weight")})
+    assert rep["total"]["kept"] == max(1, round(w.size * 0.5))
+    assert rep["per_weight"]["a"]["size"] == w.size
+
+
+# -- 2: tree plumbing over real TFTNN params ---------------------------------
+
+def test_flatten_unflatten_list_nodes_round_trip():
+    tree = {"a": jnp.ones((2,)), "blocks": [{"w": jnp.zeros((3,))},
+                                            {"w": jnp.full((3,), 2.0)}]}
+    flat = dict(_flatten(tree))
+    assert set(flat) == {"a", "blocks/#0/w", "blocks/#1/w"}
+    back = _unflatten(flat)
+    assert isinstance(back["blocks"], list) and len(back["blocks"]) == 2
+    for (p1, v1), (p2, v2) in zip(sorted(_flatten(tree)), sorted(_flatten(back))):
+        assert p1 == p2 and np.array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_sensitivity_scan_reaches_block_weights():
+    """On a real init_tft tree the scan must see weights INSIDE the blocks
+    list (the old _flatten treated the list as one opaque leaf and the
+    scan crashed / skipped them)."""
+    cfg = tiny_cfg()
+    params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    flat = dict(_flatten(params))
+    block_paths = [p for p in flat if p.startswith("blocks/#0/") and p.endswith("/w")
+                   and flat[p].ndim == 2]
+    assert block_paths, "no 2-D weights found under blocks/#0 — tree layout changed?"
+
+    def loss_fn(p):
+        return sum(jnp.sum(x * x) for _, x in _flatten(p))
+
+    deltas = sensitivity_scan(
+        loss_fn, params,
+        {"att_in": [("att_in/w", 1)], "block0": [(block_paths[0], 1)]},
+        keep_fraction=0.5,
+    )
+    assert set(deltas) == {"att_in", "block0"}
+    # zeroing half the columns of a nonzero weight strictly lowers the L2 loss
+    assert deltas["att_in"] < 0 and deltas["block0"] < 0
+
+
+# -- 3: masked_matmul edge shapes, both backends -----------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_masked_matmul_edge_shapes_parity(use_pallas):
+    key = jax.random.PRNGKey(3)
+    cases = [
+        # (M, K, N, granularity, keep) — K=13 is not a multiple of block_k
+        (4, 13, 10, "strip", 0.5),
+        (1, 16, 12, "column", 0.25),   # M=1 row vector
+        (5, 16, 24, "tile", 0.4),
+        (3, 8, 8, "column", 0.5),
+    ]
+    for M, K, N, gran, keep in cases:
+        k1, k2, k3, key = jax.random.split(key, 4)
+        x = jax.random.normal(k1, (M, K))
+        w = jax.random.normal(k2, (K, N))
+        b = jax.random.normal(k3, (N,))
+        g2m = {"strip": "weight", "tile": "block", "column": "unit"}
+        m = granular_mask(w, keep, g2m[gran], (4, 4))
+        ref = masked_matmul_ref(x, w, b, mask=m)
+        for mcast in (m, m.astype(bool), np.asarray(m, np.int32)):
+            y = masked_matmul(x, w, b, mask=mcast, granularity=gran,
+                              block_k=4, block_n=4, use_pallas=use_pallas)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                       atol=1e-5, rtol=1e-5)
+        # fragmentation cap: bounding-box merge is still exact
+        y1 = masked_matmul(x, w, b, mask=m, granularity=gran,
+                           block_k=4, block_n=4, use_pallas=use_pallas,
+                           max_fragments=1)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_masked_matmul_fully_pruned_is_bias():
+    x = jnp.ones((3, 8))
+    w = jnp.ones((8, 6))
+    b = jnp.arange(6.0)
+    m = jnp.zeros_like(w)
+    for gran in ("strip", "tile", "column"):
+        y = masked_matmul(x, w, b, mask=m, granularity=gran, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(y), np.tile(b, (3, 1)))
+        st = skip_stats(m, gran)
+        assert st["skip_rate"] == 1.0 and st["skipped"] == st["total"]
+
+
+def test_skip_stats_counts_mask_granularity():
+    """Counters describe the mask, independent of which decomposition wins."""
+    w = jax.random.normal(jax.random.PRNGKey(5), (16, 16))
+    m = unit_mask(w, 0.25)
+    st = skip_stats(m, "column")
+    assert st["total"] == 16 and st["skipped"] == 12
+    assert st["skip_rate"] == pytest.approx(0.75)
+
+
+# -- 4: mask-frozen fine-tuning ---------------------------------------------
+
+def test_finetune_pruned_holds_exact_sparsity():
+    cfg = tiny_cfg()
+    params = tft.init_tft(jax.random.PRNGKey(0), cfg)
+    pruned, masks, losses = finetune_pruned(
+        params, cfg, keep=0.5, granularity="unit",
+        steps=2, batch=1, num_samples=512, seed=3,
+    )
+    assert len(losses) == 2 and all(np.isfinite(losses))
+    rk = realized_keep(pruned)
+    for name in MASKED_WEIGHTS:
+        w = pruned[name]["w"]
+        w2 = w[0, 0] if w.ndim == 4 else w
+        cols = w2.shape[-1]
+        expect = max(1, round(cols * 0.5)) / cols
+        assert rk[name] == pytest.approx(expect, abs=1e-9), name
+    # deploy re-derives the identical masks from the fine-tuned checkpoint:
+    # pruned entries are exactly zero, so they rank last under exact top-k
+    re_masks = build_prune_masks(pruned, 0.5, granularity="unit")
+    for name in MASKED_WEIGHTS:
+        assert np.array_equal(np.asarray(masks[name]), np.asarray(re_masks[name]))
+
+
+# -- wav + SI-SNR eval fixture ----------------------------------------------
+
+def test_wav_round_trip_and_fixture(tmp_path):
+    from repro.audio.wav import read_wav, write_wav
+
+    x = np.clip(np.random.default_rng(0).normal(0, 0.2, 800), -1, 1).astype(np.float32)
+    write_wav(tmp_path / "x.wav", x, 8000)
+    y, sr = read_wav(tmp_path / "x.wav")
+    assert sr == 8000 and y.shape == x.shape
+    # half an LSB of rounding plus the 32767-write/32768-read scale skew
+    assert np.max(np.abs(y - x)) <= 0.5 / 32768 + np.max(np.abs(x)) / 32767 + 1e-7
+
+    from eval_sisnr import eval_pairs, write_fixture  # benchmarks/ on sys.path
+
+    manifest = write_fixture(tmp_path / "fx", utts=2, seconds=0.25, snr_db_mix=2.5)
+    import json
+    pairs = json.loads(manifest.read_text())["pairs"]
+    scores = eval_pairs(pairs)
+    assert len(scores) == 2
+    for s in scores:
+        # noisy-vs-clean SNR lands at the mixing SNR (2.5 dB) up to 16-bit error
+        assert s["snr_db"] == pytest.approx(2.5, abs=0.3)
+        assert np.isfinite(s["si_snr_db"])
