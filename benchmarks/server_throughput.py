@@ -38,6 +38,13 @@ for:
   sessions. Durable points additionally record the raw I/O the manager
   performed (``journal_records`` / ``journal_bytes`` / ``snapshots`` /
   ``snapshot_bytes``). Sessions-sweep mode, inproc transport only.
+- ``--guards off,on`` — the fault-containment tax: ``on`` points serve
+  through a pool with the post-collect finite guard armed (every collected
+  hop's output and carried state checked for NaN/Inf before release; on
+  the socket transport the 1-shard router additionally runs its circuit
+  breaker + step watchdog), so ``guards_vs_off`` is the measured RTF
+  overhead of the containment plane — the acceptance bar is <= 5% on a CPU
+  smoke run. Sessions-sweep mode only.
 
 ``--ramp`` instead drives an **elastic** pool (``ElasticSessionPool``,
 ``--tiers`` capacity ladder) through a session ramp that climbs past at
@@ -81,7 +88,8 @@ Run:  PYTHONPATH=src python benchmarks/server_throughput.py [--capacity N]
           [--seconds S] [--quant] [--shards N] [--backend xla,pallas]
           [--buffering single,double] [--hops-per-step 1,4,8] [--ramp]
           [--adaptive] [--transport inproc,socket] [--durability off,on]
-          [--snapshot-every N] [--tiers 4,16,64] [--smoke] [--json PATH]
+          [--guards off,on] [--snapshot-every N] [--tiers 4,16,64]
+          [--smoke] [--json PATH]
 """
 
 from __future__ import annotations
@@ -409,7 +417,7 @@ def _csv_ints(raw: str, what: str) -> list:
 
 
 _SWEEP_AXES = ("backend", "buffering", "hops_per_step", "transport",
-               "scheduler", "durability")
+               "scheduler", "durability", "guards")
 
 
 def _ratio(points: list, key: str, a: str, b: str) -> dict:
@@ -492,6 +500,13 @@ def main() -> None:
                     "sessions-sweep mode, inproc transport only")
     ap.add_argument("--snapshot-every", type=int, default=16,
                     help="snapshot cadence in hops for --durability on points")
+    ap.add_argument("--guards", default="off",
+                    help="comma list of fault-containment modes to sweep: "
+                    "off,on — on serves through a pool with the post-collect "
+                    "finite guard armed (and, on the socket transport, shard "
+                    "circuit breakers + step watchdog), recording the RTF "
+                    "tax of the containment plane; the JSON gains a "
+                    "guards_vs_off ratio; sessions-sweep mode only")
     ap.add_argument("--adaptive", action="store_true",
                     help="bursty-trace sweep comparing the self-tuning "
                     "scheduler (AdaptiveScheduler + device ingestion ring) "
@@ -532,10 +547,13 @@ def main() -> None:
     hops_sweep = _csv_ints(args.hops_per_step, "--hops-per-step")
     transports = _csv_list(args.transport, ("inproc", "socket"))
     durabilities = _csv_list(args.durability, ("off", "on"))
+    guard_modes = _csv_list(args.guards, ("off", "on"))
     if "socket" in transports and (args.ramp or args.shards > 0):
         raise SystemExit("--transport socket only sweeps in sessions mode")
     if "on" in durabilities and (args.ramp or args.shards > 0 or args.adaptive):
         raise SystemExit("--durability on only sweeps in sessions mode")
+    if "on" in guard_modes and (args.ramp or args.shards > 0 or args.adaptive):
+        raise SystemExit("--guards on only sweeps in sessions mode")
     if "on" in durabilities and "socket" in transports:
         raise SystemExit("--durability on sweeps the inproc transport only")
     if args.snapshot_every < 1:
@@ -559,6 +577,10 @@ def main() -> None:
             args.repeats = max(args.repeats, 5)
         if args.adaptive:
             args.repeats = max(args.repeats, 3)
+        if len(guard_modes) > 1:
+            # the guards_vs_off ratio carries a <= 5% overhead contract:
+            # best-of-N keeps scheduler noise out of a few-percent comparison
+            args.repeats = max(args.repeats, 5)
         if args.ramp and args.tiers == "4,16,64":
             args.tiers = "2,4,8"  # CI-sized ladder, still two boundaries
     tiers = parse_tiers(args.tiers)
@@ -587,6 +609,7 @@ def main() -> None:
             "hops_per_step": hops_sweep,
             "transports": transports,
             "durability": durabilities,
+            "guards": guard_modes,
             "snapshot_every": args.snapshot_every if "on" in durabilities else None,
             "shards_max": args.shards,
             "ramp": args.ramp,
@@ -739,9 +762,11 @@ def main() -> None:
                 step = make_stream_hop(params, cfg, quant=quant,
                                        backend=backend, max_hops_per_step=hps)
                 for buffering in bufferings:
-                    for transport in transports:
-                        for durability in durabilities:
+                  for transport in transports:
+                    for durability in durabilities:
+                        for guard in guard_modes:
                             inflight = 2 if buffering == "double" else 1
+                            armed = guard == "on"
                             manager = None
                             if durability == "on":
                                 # temp-dir journal/snapshot store; detach at
@@ -760,7 +785,8 @@ def main() -> None:
                                                    inflight=inflight,
                                                    hops_per_step=hps,
                                                    step_fn=step,
-                                                   durability=manager)
+                                                   durability=manager,
+                                                   finite_guard=armed)
                                 # warm up the compilation outside the timed points
                                 w = pool.attach()
                                 pool.feed(w, audio[0][: 2 * hps * cfg.hop])
@@ -770,11 +796,17 @@ def main() -> None:
                             else:
                                 from repro.serve.gateway import GatewayThread
                                 # one shard: same batched step as the in-process
-                                # pool, so the delta IS the socket + gateway loop
+                                # pool, so the delta IS the socket + gateway loop.
+                                # guards=on arms the full containment plane here
+                                # (finite guard + breaker + a generous watchdog
+                                # that never fires on a healthy CPU run).
                                 spool = ShardedSessionPool(
                                     params, cfg, args.capacity, shards=1,
                                     quant=quant, backend=backend,
-                                    inflight=inflight, hops_per_step=hps)
+                                    inflight=inflight, hops_per_step=hps,
+                                    finite_guard=armed,
+                                    breaker_threshold=3 if armed else None,
+                                    watchdog_seconds=30.0 if armed else None)
                                 h = spool.attach("warmup")
                                 spool.feed(h, audio[0][: 2 * hps * cfg.hop])
                                 spool.pump_all()
@@ -782,15 +814,15 @@ def main() -> None:
                                 runner = GatewayThread(spool, pump_interval=0.001)
                                 gateways.append(runner)
                             combos.append((backend, hps, buffering, transport,
-                                           durability, manager, runner))
+                                           durability, guard, manager, runner))
         # --repeats are INTERLEAVED across configurations (round-robin, min
         # wall-clock per point wins, as in timeit): a noisy scheduler phase
         # spanning one whole pass penalizes every config equally instead of
         # silently skewing the cross-config comparison ratios.
         best: dict = {}
         for _ in range(args.repeats):
-            for (backend, hps, buffering, transport, durability, manager,
-                 runner) in combos:
+            for (backend, hps, buffering, transport, durability, guard,
+                 manager, runner) in combos:
                 for n in sweep:
                     pre = manager.totals() if manager is not None else None
                     if transport == "inproc":
@@ -804,23 +836,26 @@ def main() -> None:
                         for field in ("journal_records", "journal_bytes",
                                       "snapshots", "snapshot_bytes"):
                             r[field] = post[field] - pre[field]
-                    key = (backend, hps, buffering, transport, durability, n)
+                    key = (backend, hps, buffering, transport, durability,
+                           guard, n)
                     if key not in best or r["aggregate_rtf"] < best[key]["aggregate_rtf"]:
                         best[key] = r
         for gw in gateways:
             gw.stop()
-        for (backend, hps, buffering, transport, durability, _manager,
+        for (backend, hps, buffering, transport, durability, guard, _manager,
              _runner) in combos:
             for n in sweep:
-                r = best[(backend, hps, buffering, transport, durability, n)]
+                r = best[(backend, hps, buffering, transport, durability,
+                          guard, n)]
                 r.update(mode="sessions", backend=backend,
                          buffering=buffering, hops_per_step=hps,
-                         transport=transport, durability=durability)
+                         transport=transport, durability=durability,
+                         guards=guard)
                 points.append(r)
                 emit(
                     f"backend={backend} buffering={buffering} "
                     f"hops={hps} transport={transport} "
-                    f"durability={durability} sessions={n}",
+                    f"durability={durability} guards={guard} sessions={n}",
                     r["p50_ms"] * 1e3,
                     f"aggregate_rtf={r['aggregate_rtf']:.3f} "
                     f"rt_capacity={r['rt_capacity']:.1f} "
@@ -845,6 +880,11 @@ def main() -> None:
         # feed + periodic ticket snapshot) relative to the same pool with
         # durability disabled
         comparisons["durability_vs_off"] = _ratio(points, "durability", "off", "on")
+    if "off" in guard_modes and "on" in guard_modes:
+        # > 1.0 is the containment tax (post-collect finite scan per hop,
+        # plus breaker/watchdog bookkeeping on the socket transport); the
+        # acceptance bar for a CPU smoke run is <= 1.05
+        comparisons["guards_vs_off"] = _ratio(points, "guards", "off", "on")
     for k in hops_sweep:
         if k != 1 and 1 in hops_sweep and not args.adaptive:
             # < 1.0 means the fused path lowered aggregate RTF (a speedup of
@@ -927,6 +967,41 @@ def main() -> None:
                   f"{ratio['mean_rtf_ratio']:.3f} "
                   f"(journal_bytes/point max "
                   f"{max(p['journal_bytes'] for p in durable_points)})")
+    if args.smoke and "on" in guard_modes:
+        # CI contract for the guards sweep: guarded points must exist, and
+        # when both modes ran, the containment tax must stay within the
+        # <= 5% acceptance bar (best-of-N repeats keep this comparison out
+        # of scheduler-noise territory)
+        guarded_points = [p for p in points
+                          if p.get("mode") == "sessions"
+                          and p.get("guards") == "on"]
+        if not guarded_points:
+            raise SystemExit("smoke: --guards on produced no points")
+        if "off" in guard_modes:
+            ratio = comparisons["guards_vs_off"]
+            if not ratio["num_points"] or ratio["mean_rtf_ratio"] is None:
+                raise SystemExit(
+                    "smoke: guards_vs_off comparison is empty — the guarded "
+                    "sweep produced no points matching the unguarded sweep"
+                )
+            print(f"# guards_vs_off mean RTF ratio: "
+                  f"{ratio['mean_rtf_ratio']:.3f} "
+                  f"({ratio['num_points']} matched points)")
+            # the <= 5% bar is the POOL's guard tax: enforce it on the
+            # inproc subset, where the only delta is the finite scan (the
+            # socket points fold in gateway pump-loop jitter that has
+            # nothing to do with the guard itself)
+            if "inproc" in transports:
+                inproc = _ratio([p for p in points
+                                 if p.get("transport") == "inproc"],
+                                "guards", "off", "on")
+                if (inproc["mean_rtf_ratio"] is not None
+                        and inproc["mean_rtf_ratio"] > 1.05):
+                    raise SystemExit(
+                        f"smoke: guards overhead "
+                        f"{inproc['mean_rtf_ratio']:.3f}x on the inproc "
+                        "sweep exceeds the 1.05x acceptance bar"
+                    )
 
 
 if __name__ == "__main__":

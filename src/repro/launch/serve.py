@@ -114,6 +114,23 @@ def adaptive_setup(args):
     return kmax, sched, {"ingest_ring": ring_depth_for(sched.config)}
 
 
+def guard_kw(args) -> dict:
+    """``--finite-guard`` pool kwarg shared by the pool/sharded/gateway tasks."""
+    return {"finite_guard": True} if args.finite_guard else {}
+
+
+def breaker_kw(args) -> dict:
+    """``--breaker-threshold``/``--watchdog-seconds`` kwargs for the
+    sharded/gateway tasks (0 leaves the legacy fail-fast / no-watchdog
+    behavior)."""
+    kw = {}
+    if args.breaker_threshold > 0:
+        kw["breaker_threshold"] = args.breaker_threshold
+    if args.watchdog_seconds > 0:
+        kw["watchdog_seconds"] = args.watchdog_seconds
+    return kw
+
+
 def durability_setup(args) -> dict:
     """``--durability-dir`` wiring shared by the pool/sharded/gateway tasks.
 
@@ -146,6 +163,7 @@ def serve_pool(args) -> None:
     params = tft.init_tft(jax.random.PRNGKey(0), cfg)
     kmax, sched, extra = adaptive_setup(args)
     extra.update(durability_setup(args))
+    extra.update(guard_kw(args))
     if args.elastic:
         # starts at the smallest tier and grows as sessions attach
         pool = ElasticSessionPool(params, cfg, parse_tiers(args.tiers),
@@ -188,6 +206,8 @@ def serve_sharded(args) -> None:
     tiers = parse_tiers(args.tiers) if args.elastic else None
     kmax, _, extra = adaptive_setup(args)
     extra.update(durability_setup(args))
+    extra.update(guard_kw(args))
+    extra.update(breaker_kw(args))
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, **prune_kw(args),
@@ -235,6 +255,8 @@ def serve_gateway(args) -> None:
     tiers = parse_tiers(args.tiers) if args.elastic else None
     kmax, _, extra = adaptive_setup(args)
     extra.update(durability_setup(args))
+    extra.update(guard_kw(args))
+    extra.update(breaker_kw(args))
     pool = ShardedSessionPool(params, cfg, per_shard, shards=args.shards,
                               quant=FP10 if args.quant else None,
                               backend=args.backend, **prune_kw(args),
@@ -330,6 +352,22 @@ def main() -> None:
                     help="snapshot cadence in hops per session (0 = journal "
                     "only; smaller = shorter replay on recovery, more "
                     "snapshot I/O while serving)")
+    ap.add_argument("--finite-guard", action="store_true",
+                    help="pool/sharded/gateway tasks: post-collect finite "
+                    "guard — any session whose output or carried state goes "
+                    "NaN/Inf is quarantined (SessionPoisonedError / POISONED "
+                    "frame) instead of streaming garbage; other slots in the "
+                    "same batched step are untouched")
+    ap.add_argument("--breaker-threshold", type=int, default=0,
+                    help="sharded/gateway tasks: per-shard circuit breaker — "
+                    "open (fail the shard over) after N consecutive pump "
+                    "failures instead of on the first; half-open probe via "
+                    "shard health checks, closed again after restart_shard "
+                    "(0 = legacy fail-fast)")
+    ap.add_argument("--watchdog-seconds", type=float, default=0.0,
+                    help="sharded/gateway tasks: wall-clock bound on each "
+                    "shard's dispatch->collect; a shard stuck past it is "
+                    "failed over through the wire-ticket path (0 = off)")
     ap.add_argument("--shards", type=int, default=2,
                     help="sharded/gateway tasks: number of SessionPool shards")
     ap.add_argument("--host", default="127.0.0.1",

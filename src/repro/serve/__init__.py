@@ -17,7 +17,9 @@ contract); ``durability`` makes sessions crash-proof (generation-numbered
 ticket snapshots + a crc-framed hop journal; recovery replays journaled
 hops through the same pure step bit-exactly); ``gateway`` is the network
 front door (asyncio socket server + self-healing client speaking a chunked
-streaming protocol over the sharded pool).
+streaming protocol over the sharded pool); ``faults`` is the deterministic
+fault-injection plane that drives the containment machinery (finite-guard
+quarantine, circuit breakers, step watchdog, brownout) from tests.
 Architecture tour: ``docs/serving.md`` and ``docs/deploy.md``.
 """
 
@@ -37,6 +39,11 @@ from repro.serve.elastic_pool import (  # noqa: F401
     ElasticSession,
     ElasticSessionPool,
 )
+from repro.serve.faults import (  # noqa: F401
+    FaultPlan,
+    InjectedFaultError,
+    StepInjection,
+)
 from repro.serve.gateway import (  # noqa: F401
     GatewayBusyError,
     GatewayClient,
@@ -55,8 +62,10 @@ from repro.serve.scheduler import (  # noqa: F401
 )
 from repro.serve.session_server import (  # noqa: F401
     PoolFullError,
+    QuarantineRecord,
     Session,
     SessionError,
+    SessionPoisonedError,
     SessionPool,
     SessionStats,
     SessionTicket,

@@ -527,7 +527,9 @@ class DurabilityManager:
 
     # -- recovery ------------------------------------------------------------
 
-    def load_for_recovery(self, sid) -> RecoveryPlan:
+    def load_for_recovery(
+        self, sid, max_feed_samples: Optional[int] = None
+    ) -> RecoveryPlan:
         """Find the newest usable (snapshot, journal chain) for a session.
 
         Tries snapshot generations newest-first; a generation whose
@@ -536,6 +538,15 @@ class DurabilityManager:
         fresh replay from segment 0, usable only while no segment has been
         pruned. Journal records of the selected chain are validated here
         (crc per record, torn tail tolerated only on the final segment).
+
+        Args:
+            max_feed_samples: also skip any generation whose snapshot
+                already contains MORE than this many fed samples — the
+                poison-quarantine rollback: a snapshot taken after the
+                poisoned feed is useless for rebuilding the pre-poison
+                state, so recovery walks back to an older generation (or
+                the full from-birth replay, which always satisfies the
+                cap). ``None`` accepts every generation.
 
         Raises:
             DurabilityError: nothing on disk for this id, every candidate
@@ -560,6 +571,17 @@ class DurabilityManager:
                 except (WireFormatError, OSError) as exc:
                     skipped.append(base)
                     errors.append(f"gen {base}: snapshot unreadable ({exc})")
+                    continue
+                if (
+                    max_feed_samples is not None
+                    and int(ticket.stats.samples_in) > max_feed_samples
+                ):
+                    skipped.append(base)
+                    errors.append(
+                        f"gen {base}: snapshot contains "
+                        f"{int(ticket.stats.samples_in)} fed samples, past "
+                        f"the replay cap {max_feed_samples}"
+                    )
                     continue
             needed = [s for s in segs if s >= base]
             # the chain must be contiguous from the base: segment `base`
@@ -590,7 +612,10 @@ class DurabilityManager:
         )
 
 
-def recover_session(pool, manager: DurabilityManager, sid, *, finalize=True):
+def recover_session(
+    pool, manager: DurabilityManager, sid, *, finalize=True,
+    max_feed_samples=None,
+):
     """Reconstruct a crashed session in ``pool``, bit-exactly.
 
     Decodes the newest valid snapshot (``manager.load_for_recovery``),
@@ -613,15 +638,26 @@ def recover_session(pool, manager: DurabilityManager, sid, *, finalize=True):
             fresh snapshot immediately (collapsing the replay chain, so the
             NEXT crash replays only what follows). Pass False to rebuild a
             session read-only (e.g. forensics) without touching disk.
+        max_feed_samples: truncate the replay at this cumulative
+            ``samples_in`` count — the poison-quarantine recovery seam.
+            When the finite guard quarantines a session, its
+            ``QuarantineRecord.good_samples_in`` marks the last state
+            proven finite; capping the replay there rebuilds the stream at
+            exactly that pre-poison point, with the poisoning chunk's tail
+            (and everything after it) left out of the rebuilt state.
+            ``None`` (default) replays everything.
 
     Returns:
         The pool's live handle for the recovered session.
 
     Raises:
         DurabilityError: the on-disk state is unrecoverable or contradicts
-            itself (see ``load_for_recovery``).
+            itself (see ``load_for_recovery``). With ``max_feed_samples``,
+            snapshot generations past the cap are skipped (older
+            generations, then the from-birth journal replay, are tried
+            instead), so this only fires when no pre-poison chain survives.
     """
-    plan = manager.load_for_recovery(sid)
+    plan = manager.load_for_recovery(sid, max_feed_samples=max_feed_samples)
     # replay must not re-journal: the records being fed back are already on
     # disk. Suspend the pool's own durability hooks for the duration.
     saved = getattr(pool, "_durability", None)
@@ -635,9 +671,19 @@ def recover_session(pool, manager: DurabilityManager, sid, *, finalize=True):
             handle = pool.attach()
             baseline = 0
         acked = baseline
+        fed = (
+            int(plan.ticket.stats.samples_in) if plan.ticket is not None else 0
+        )
         for rtype, body in plan.records:
             if rtype == REC_FEED:
-                pool.feed(handle, np.frombuffer(body, np.float32))
+                arr = np.frombuffer(body, np.float32)
+                if max_feed_samples is not None:
+                    room = max_feed_samples - fed
+                    if room <= 0:
+                        continue  # past the poison point: drop the chunk
+                    arr = arr[:room]
+                fed += arr.size
+                pool.feed(handle, arr)
             elif rtype == REC_READ:
                 acked = max(acked, _U64.unpack(body)[0])
             else:

@@ -53,11 +53,14 @@ import numpy as np
 
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
+from repro.serve.faults import FaultPlan
 from repro.serve.scheduler import SchedulerDecision, SchedulerObservation
 from repro.serve.session_server import (
     PoolFullError,
+    QuarantineRecord,
     Session,
     SessionError,
+    SessionPoisonedError,
     SessionPool,
     SessionTicket,
 )
@@ -139,6 +142,13 @@ class ElasticSessionPool:
             deliberately NOT forwarded to the per-tier inner pools: a tier
             migration must look like one continuous stream on disk, not a
             detach + fresh attach.
+        finite_guard / faults / fault_tag: fault-containment knobs forwarded
+            to every tier's ``SessionPool``. Quarantine records are
+            harvested back to THIS layer after every collect and re-keyed
+            by the resize-stable handle sid (inner per-tier sids restart at
+            0 on every resize, so inner records must never outlive their
+            pool); ``take_quarantined``/``quarantined``/``clear_quarantined``
+            mirror the ``SessionPool`` surface with elastic handles.
 
     Raises:
         ValueError: empty/non-increasing ``tiers``, bad ``shrink_fraction``.
@@ -170,6 +180,9 @@ class ElasticSessionPool:
         step_fns: Optional[Dict[Any, Any]] = None,
         ingest_ring: Optional[int] = None,
         durability: Optional[Any] = None,
+        finite_guard: bool = False,
+        faults: Optional[FaultPlan] = None,
+        fault_tag: str = "elastic",
     ) -> None:
         tiers = tuple(int(t) for t in tiers)
         if not tiers:
@@ -225,6 +238,18 @@ class ElasticSessionPool:
         # inner per-tier pools are built WITHOUT a manager
         self._durability = durability
         self._durable_ids: Dict[int, str] = {}
+        self._finite_guard = finite_guard
+        self._faults = faults
+        self._fault_tag = fault_tag
+        # quarantine bookkeeping lives at THIS layer, keyed by the stable
+        # handle sid: inner per-tier pools are rebuilt on every resize and
+        # restart their sid counters at 0, so an inner QuarantineRecord kept
+        # across a resize would collide with an innocent new session
+        self._quarantined: Dict[int, QuarantineRecord] = {}
+        self._fresh_quarantined: List[QuarantineRecord] = []
+        self.quarantined_count = 0
+        self._brownout_hops_base = 0  # hops from pools retired by resizes
+        self._brownout_level = 0
         self._pool = self._make_pool(tiers[0])
         self._handles: Dict[int, ElasticSession] = {}
         self._sid_counter = itertools.count()
@@ -263,6 +288,9 @@ class ElasticSessionPool:
             step_fn=self._step_fn_seed,
             step_fns=self._step_fns,
             ingest_ring=self._ingest_ring,
+            finite_guard=self._finite_guard,
+            faults=self._faults,
+            fault_tag=self._fault_tag,
         )
 
     def _prewarm(self) -> None:
@@ -401,12 +429,18 @@ class ElasticSessionPool:
         t0 = time.perf_counter()
         old = self._pool
         old.collect()  # drain the pending pipeline before swapping tiers
+        # a session the drain just poisoned must be harvested NOW: it moves
+        # to this layer's quarantine instead of being exported to the new
+        # tier (its state is non-finite by construction)
+        self._harvest_quarantined()
         tickets = [
             (handle, old.export_session(handle.inner))
             for handle in list(self._handles.values())
         ]
         new = self._make_pool(new_capacity)
         new.step_seconds = old.step_seconds  # latency continuity (same list)
+        new.set_brownout(self._brownout_level)
+        self._brownout_hops_base += old.brownout_hops
         for handle, ticket in tickets:
             handle.inner = new.import_session(ticket)
         grew = new_capacity > old.capacity
@@ -453,6 +487,14 @@ class ElasticSessionPool:
         return handle
 
     def _check(self, handle: ElasticSession) -> None:
+        rec = self._quarantined.get(handle.sid)
+        if rec is not None and rec.session is handle:
+            raise SessionPoisonedError(
+                f"session {handle.sid} is quarantined: {rec.message}",
+                session_id=handle.sid,
+                good_hops=rec.good_hops,
+                good_samples_in=rec.good_samples_in,
+            )
         if handle.detached or self._handles.get(handle.sid) is not handle:
             raise SessionError(
                 f"session {handle.sid} is not attached to this elastic pool"
@@ -501,6 +543,78 @@ class ElasticSessionPool:
             if did is not None:
                 self._durability.record_read(did, handle.stats.samples_out)
         return out
+
+    def read_degraded(self, handle: ElasticSession) -> Tuple[np.ndarray, bool]:
+        """``read`` plus the brownout passthrough flag (see ``SessionPool``)."""
+        self._check(handle)
+        out, degraded = self._pool.read_degraded(handle.inner)
+        if out.size and self._durability is not None:
+            did = self._durable_ids.get(handle.sid)
+            if did is not None:
+                self._durability.record_read(did, handle.stats.samples_out)
+        return out, degraded
+
+    # -- fault containment ---------------------------------------------------
+
+    def _harvest_quarantined(self) -> None:
+        """Re-key inner-pool quarantine records by the resize-stable handle.
+
+        Inner per-tier sids restart at 0 in every new pool, so a record left
+        at the inner layer would outlive its pool and collide with an
+        innocent session after a resize; the elastic layer owns them. The
+        elastic-level durable id is RELEASED (files kept), which is what
+        makes the pre-poison state recoverable through
+        ``durability.recover_session(..., max_feed_samples=...)``.
+        """
+        for rec in self._pool.take_quarantined():
+            handle = None
+            for h in self._handles.values():
+                if h.inner is rec.session:
+                    handle = h
+                    break
+            if handle is None:
+                continue
+            del self._handles[handle.sid]
+            did = self._durable_ids.pop(handle.sid, None)
+            if did is not None and self._durability is not None:
+                self._durability.release(did)  # keep files: recovery seam
+            rec = dataclasses.replace(
+                rec, sid=handle.sid, session=handle, durable_id=did
+            )
+            self._quarantined[handle.sid] = rec
+            self._fresh_quarantined.append(rec)
+            self.quarantined_count += 1
+
+    @property
+    def quarantined(self) -> Dict[int, QuarantineRecord]:
+        """Quarantined sessions by handle sid (a copy)."""
+        return dict(self._quarantined)
+
+    def take_quarantined(self) -> List[QuarantineRecord]:
+        """Drain quarantine records not yet handed to a caller (router seam)."""
+        self._harvest_quarantined()
+        fresh, self._fresh_quarantined = self._fresh_quarantined, []
+        return fresh
+
+    def clear_quarantined(self, sid: Optional[int] = None) -> None:
+        """Forget quarantine record(s) — after recovery or deliberate drop."""
+        if sid is None:
+            self._quarantined.clear()
+            self._fresh_quarantined = []
+        else:
+            self._quarantined.pop(sid, None)
+            self._fresh_quarantined = [
+                r for r in self._fresh_quarantined if r.sid != sid
+            ]
+
+    def set_brownout(self, level: int) -> None:
+        """Set the degradation-ladder level; survives resizes (re-applied)."""
+        self._brownout_level = max(0, min(3, int(level)))
+        self._pool.set_brownout(self._brownout_level)
+
+    @property
+    def brownout(self) -> int:
+        return self._brownout_level
 
     # -- the batched hop loop ------------------------------------------------
 
@@ -558,10 +672,13 @@ class ElasticSessionPool:
         self._pool.wait_ready()
 
     def collect(self, proc_share: Optional[float] = None) -> int:
-        return self._pool.collect(proc_share)
+        n = self._pool.collect(proc_share)
+        self._harvest_quarantined()
+        return n
 
     def step(self) -> int:
         n = self._pool.step()
+        self._harvest_quarantined()
         self.try_shrink()
         return n
 
@@ -577,17 +694,20 @@ class ElasticSessionPool:
         """
         if scheduler is None:
             steps = self._pool.pump()
+            self._harvest_quarantined()
             self.try_shrink()
             return steps
         steps = 0
         while True:
             decision = scheduler.observe(self.observation())
             self.apply_decision(decision)
+            self.set_brownout(decision.brownout)
             k = min(decision.k, self.hops_per_step)
             if not self._pool.dispatch(max_hops=k):
                 break
             steps += 1
         self._pool.collect()
+        self._harvest_quarantined()
         return steps
 
     # -- migration seam (elastic shards) --------------------------------------
@@ -657,6 +777,10 @@ class ElasticSessionPool:
             max_capacity=self.max_capacity,
             grows=self.grow_count,
             shrinks=self.shrink_count,
+            # containment counters span resizes (inner pools are rebuilt)
+            quarantined=self.quarantined_count,
+            brownout=self._brownout_level,
+            brownout_hops=self._brownout_hops_base + self._pool.brownout_hops,
         )
         return stats
 

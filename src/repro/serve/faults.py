@@ -1,0 +1,255 @@
+"""Deterministic fault-injection plane for the serving stack.
+
+The serving stack's containment story (quarantine, circuit breakers,
+watchdog failover, brownout) is only trustworthy if every containment path
+can be driven on demand, repeatably, from a test. ``FaultPlan`` is that
+lever: one seeded plan threaded through the layers injects
+
+- **step errors** — ``SessionPool.dispatch`` raises ``InjectedFaultError``
+  *before* consuming any input (the injected crash is admission-time, so a
+  router retrying the dispatch elsewhere replays the exact same hops),
+- **poisoned outputs / carried state** — NaN written into a stepped slot's
+  enhanced output or recurrent state right after the hop step, the software
+  stand-in for a corrupt input frame blowing up the GRU carry / linear-
+  attention ``K^T V`` accumulator (what the post-collect finite guard and
+  the quarantine machinery exist to contain),
+- **shard stalls** — ``ShardedSessionPool.pump_all`` sleeps before waiting
+  on a shard, modelling a wedged device queue (what the step watchdog fails
+  over),
+- **frame corruption** — the gateway mangles a received frame before
+  parsing it (bad type / truncated / length-corrupt payload), modelling a
+  hostile or broken client (the protocol layer must answer with a typed
+  error and keep serving).
+
+Determinism: every decision is a pure function of ``(seed, site, n)`` where
+``n`` is a per-site call counter — blake2b-hashed to a uniform in [0, 1),
+exactly the stable-hash idiom the shard router uses. Two runs driving the
+same call sequence against the same plan see the *identical* fault
+schedule, which is what lets ``tests/chaos.py`` compare a faulted run
+bit-exactly against a fault-free reference for the non-faulted sessions.
+
+Every injection is recorded in ``plan.injected`` (counters) and
+``plan.log`` (ordered ``(kind, site, n)`` tuples), and each fault class can
+be bounded (``max_*``) so a chaos run eventually returns to health.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class InjectedFaultError(RuntimeError):
+    """A fault deliberately injected by a ``FaultPlan`` (never a real bug).
+
+    Raised from ``SessionPool.dispatch`` before any input is consumed, so
+    the failing call is side-effect-free: the pool can be retried, skipped,
+    or failed over without replaying or losing audio.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class StepInjection:
+    """What one dispatch should inject: poison for these stepped slots."""
+
+    poison_out: Tuple[int, ...] = ()  # slots whose OUTPUT turns NaN
+    poison_state: Tuple[int, ...] = ()  # slots whose CARRIED STATE turns NaN
+
+    def __bool__(self) -> bool:
+        return bool(self.poison_out or self.poison_state)
+
+
+class FaultPlan:
+    """Seeded, deterministic fault schedule shared by every serving layer.
+
+    Args:
+        seed: the schedule. Same seed + same call sequence = same faults.
+        step_error_rate: per-dispatch probability that a pool raises
+            ``InjectedFaultError`` before consuming input.
+        poison_rate: per (dispatch, stepped slot) probability of NaN
+            injected into that slot's enhanced output.
+        poison_state_rate: per (dispatch, stepped slot) probability of NaN
+            injected into that slot's carried recurrent state.
+        stall_rate: per (shard, pump round) probability of an artificial
+            stall of ``stall_seconds`` before the router waits on the shard.
+        stall_seconds: duration of an injected stall.
+        corrupt_rate: per received gateway frame, probability the frame is
+            mangled before parsing.
+        max_step_errors / max_poisons / max_stalls / max_corruptions:
+            hard bounds per fault class (``None`` = unbounded). Bounded
+            plans let a chaos run prove the system returns to full health
+            after the faults dry up.
+
+    Raises:
+        ValueError: any rate outside [0, 1] or negative bound/stall.
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        *,
+        step_error_rate: float = 0.0,
+        poison_rate: float = 0.0,
+        poison_state_rate: float = 0.0,
+        stall_rate: float = 0.0,
+        stall_seconds: float = 0.05,
+        corrupt_rate: float = 0.0,
+        max_step_errors: Optional[int] = None,
+        max_poisons: Optional[int] = None,
+        max_stalls: Optional[int] = None,
+        max_corruptions: Optional[int] = None,
+    ) -> None:
+        for name, rate in (
+            ("step_error_rate", step_error_rate),
+            ("poison_rate", poison_rate),
+            ("poison_state_rate", poison_state_rate),
+            ("stall_rate", stall_rate),
+            ("corrupt_rate", corrupt_rate),
+        ):
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {rate}")
+        if stall_seconds < 0:
+            raise ValueError("stall_seconds must be >= 0")
+        for name, bound in (
+            ("max_step_errors", max_step_errors),
+            ("max_poisons", max_poisons),
+            ("max_stalls", max_stalls),
+            ("max_corruptions", max_corruptions),
+        ):
+            if bound is not None and bound < 0:
+                raise ValueError(f"{name} must be >= 0 (or None)")
+        self.seed = int(seed)
+        self.step_error_rate = float(step_error_rate)
+        self.poison_rate = float(poison_rate)
+        self.poison_state_rate = float(poison_state_rate)
+        self.stall_rate = float(stall_rate)
+        self.stall_seconds = float(stall_seconds)
+        self.corrupt_rate = float(corrupt_rate)
+        self.max_step_errors = max_step_errors
+        self.max_poisons = max_poisons
+        self.max_stalls = max_stalls
+        self.max_corruptions = max_corruptions
+        self.injected: Dict[str, int] = {
+            "step_errors": 0,
+            "poisoned_out": 0,
+            "poisoned_state": 0,
+            "stalls": 0,
+            "corrupt_frames": 0,
+        }
+        self.log: List[Tuple[str, str, int]] = []
+        self._counters: Dict[Tuple, int] = {}
+
+    # -- the deterministic coin ---------------------------------------------
+
+    def _n(self, *site) -> int:
+        """Monotone per-site call counter (the 'time' axis of the schedule)."""
+        n = self._counters.get(site, 0)
+        self._counters[site] = n + 1
+        return n
+
+    def _u(self, *key) -> float:
+        """Uniform in [0, 1) as a pure function of (seed, key) — blake2b,
+        so the schedule is identical across processes and runs."""
+        data = repr((self.seed,) + key).encode("utf-8")
+        h = hashlib.blake2b(data, digest_size=8).digest()
+        return int.from_bytes(h, "big") / 2.0**64
+
+    def _record(self, kind: str, site: str, n: int) -> None:
+        self.injected[kind] += 1
+        self.log.append((kind, site, n))
+
+    # -- injection points ----------------------------------------------------
+
+    def step_error(self, tag: str) -> bool:
+        """Should THIS dispatch of pool ``tag`` raise before doing anything?"""
+        n = self._n("step", tag)
+        if (
+            self.step_error_rate > 0.0
+            and (
+                self.max_step_errors is None
+                or self.injected["step_errors"] < self.max_step_errors
+            )
+            and self._u("step_error", tag, n) < self.step_error_rate
+        ):
+            self._record("step_errors", tag, n)
+            return True
+        return False
+
+    def poison_slots(self, tag: str, slots: Sequence[int]) -> StepInjection:
+        """Which of this dispatch's stepped ``slots`` get NaN, and where."""
+        n = self._n("poison", tag)
+        poisons = self.injected["poisoned_out"] + self.injected["poisoned_state"]
+        budget = self.max_poisons - poisons if self.max_poisons is not None else None
+        out: List[int] = []
+        state: List[int] = []
+        for slot in slots:
+            if budget is not None and len(out) + len(state) >= budget:
+                break
+            if (
+                self.poison_rate > 0.0
+                and self._u("poison_out", tag, n, slot) < self.poison_rate
+            ):
+                out.append(int(slot))
+            elif (
+                self.poison_state_rate > 0.0
+                and self._u("poison_state", tag, n, slot) < self.poison_state_rate
+            ):
+                state.append(int(slot))
+        for _ in out:
+            self._record("poisoned_out", tag, n)
+        for _ in state:
+            self._record("poisoned_state", tag, n)
+        return StepInjection(poison_out=tuple(out), poison_state=tuple(state))
+
+    def stall(self, tag: str) -> float:
+        """Seconds to stall before waiting on shard ``tag`` (0.0 = none)."""
+        n = self._n("stall", tag)
+        if (
+            self.stall_rate > 0.0
+            and (
+                self.max_stalls is None
+                or self.injected["stalls"] < self.max_stalls
+            )
+            and self._u("stall", tag, n) < self.stall_rate
+        ):
+            self._record("stalls", tag, n)
+            return self.stall_seconds
+        return 0.0
+
+    def corrupt_frame(self, msg_type: int, payload: bytes) -> Tuple[int, bytes]:
+        """Possibly mangle one received gateway frame (type, payload)."""
+        n = self._n("frame")
+        if (
+            self.corrupt_rate <= 0.0
+            or (
+                self.max_corruptions is not None
+                and self.injected["corrupt_frames"] >= self.max_corruptions
+            )
+            or self._u("corrupt", n) >= self.corrupt_rate
+        ):
+            return msg_type, payload
+        self._record("corrupt_frames", "gateway", n)
+        mode = int(self._u("corrupt_mode", n) * 3.0)
+        if mode == 0:
+            return 0xEE, payload  # unknown message type
+        if mode == 1:  # truncated / garbage payload
+            return msg_type, payload[: len(payload) // 2] if payload else b"\x00"
+        return msg_type, payload + b"\xff"  # mis-sized (FEED: not float32)
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        """JSON-safe injection counters (a copy)."""
+        return dict(self.injected)
+
+    def __repr__(self) -> str:  # chaotic runs log the plan for repro
+        rates = (
+            f"step_error={self.step_error_rate}, poison={self.poison_rate}, "
+            f"poison_state={self.poison_state_rate}, stall={self.stall_rate}, "
+            f"corrupt={self.corrupt_rate}"
+        )
+        return f"FaultPlan(seed={self.seed}, {rates}, injected={self.injected})"
+
+
+__all__ = ["FaultPlan", "InjectedFaultError", "StepInjection"]

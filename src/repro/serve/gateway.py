@@ -38,6 +38,9 @@ Gateway → client:
 | 0x82 | AUDIO | raw float32 enhanced samples (READ reply) |
 | 0x83 | DETACHED | raw float32 unread tail (DETACH reply) |
 | 0x84 | STATS_REPLY | UTF-8 JSON |
+| 0x85 | BUSY | u32 retry-after ms + UTF-8 reason (ATTACH load-shed) |
+| 0x86 | POISONED | UTF-8 JSON ``{message, good_hops, good_samples_in}`` — the session was quarantined (non-finite output/state); the gateway unbinds it, and re-ATTACHing the same id rolls the stream back to its last finite state when durability is on |
+| 0x87 | AUDIO_DEGRADED | raw float32 samples, same as AUDIO, but some of them were produced by brownout level 3 (unenhanced passthrough) — the explicit "you are getting raw audio" tag |
 | 0xFF | ERROR | UTF-8 message; the connection stays usable |
 
 A connection owns at most one session at a time. Dropping the connection
@@ -55,6 +58,7 @@ single-process tests get a real localhost socket boundary.
 from __future__ import annotations
 
 import asyncio
+import concurrent.futures
 import json
 import random
 import socket
@@ -65,7 +69,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.session_server import PoolFullError, SessionError
+from repro.serve.faults import FaultPlan
+from repro.serve.session_server import (
+    PoolFullError,
+    SessionError,
+    SessionPoisonedError,
+)
 from repro.serve.sharded_pool import ShardDownError
 
 # client -> gateway
@@ -80,6 +89,8 @@ MSG_AUDIO = 0x82
 MSG_DETACHED = 0x83
 MSG_STATS_REPLY = 0x84
 MSG_BUSY = 0x85  # admission control: u32 retry-after ms + UTF-8 reason
+MSG_POISONED = 0x86  # session quarantined: JSON {message, good_*} payload
+MSG_AUDIO_DEGRADED = 0x87  # READ reply containing brownout passthrough audio
 MSG_ERROR = 0xFF
 
 _HEADER = struct.Struct("<IB")
@@ -138,6 +149,11 @@ class StreamingGateway:
             without DETACH) survives awaiting re-attach; ``None`` = forever.
         busy_retry_ms: the retry-after hint carried by ``MSG_BUSY`` when an
             ATTACH is load-shed (fleet full or every shard dead).
+        faults: optional ``FaultPlan`` — its ``corrupt_frame`` hook mangles
+            received frames BEFORE parsing (bad type / truncated / mis-sized
+            payload), the deterministic stand-in for a hostile or broken
+            client. The protocol layer must answer every mangled frame with
+            a typed ERROR and keep both the connection and the pool alive.
     """
 
     def __init__(
@@ -149,6 +165,7 @@ class StreamingGateway:
         pump_interval: float = 0.002,
         orphan_ttl: Optional[int] = None,
         busy_retry_ms: float = 50.0,
+        faults: Optional[FaultPlan] = None,
     ) -> None:
         if pump_interval <= 0:
             raise ValueError("pump_interval must be > 0")
@@ -162,6 +179,8 @@ class StreamingGateway:
         self.pump_interval = pump_interval
         self.orphan_ttl = orphan_ttl
         self.busy_retry_ms = busy_retry_ms
+        self._faults = faults
+        self.sessions_poisoned = 0  # MSG_POISONED frames sent
         self._server: Optional[asyncio.AbstractServer] = None
         self._pump_task: Optional[asyncio.Task] = None
         # session id -> live pool handle, for every gateway-attached session
@@ -172,6 +191,7 @@ class StreamingGateway:
         self.connections_served = 0
         self.orphans_reaped = 0
         self.load_shed = 0  # ATTACHes answered with MSG_BUSY
+        self.frames_rejected = 0  # unsyncable frames that dropped a connection
         self.sessions_recovered_at_start = 0  # durable orphans from disk
 
     # -- lifecycle ----------------------------------------------------------
@@ -278,10 +298,43 @@ class StreamingGateway:
                     msg_type, payload = await _read_frame(reader)
                 except (asyncio.IncompleteReadError, ConnectionResetError):
                     break  # client gone: orphan the session (finally below)
+                except ProtocolError as e:
+                    # an insane declared length: the byte stream can never
+                    # be re-synchronized, so answer once and drop only this
+                    # connection — the server and every other session live on
+                    self.frames_rejected += 1
+                    try:
+                        writer.write(_frame(MSG_ERROR, str(e).encode("utf-8")))
+                        await writer.drain()
+                    except (ConnectionResetError, BrokenPipeError):
+                        pass
+                    break
+                if self._faults is not None:
+                    # injected hostile client: mangle the frame pre-parse
+                    msg_type, payload = self._faults.corrupt_frame(
+                        msg_type, payload
+                    )
                 try:
                     reply = self._dispatch_msg(msg_type, payload, sid)
                     sid = reply[2]
                     writer.write(_frame(reply[0], reply[1]))
+                except SessionPoisonedError as e:
+                    # the session was quarantined: a typed frame with the
+                    # rollback point, and the connection is unbound so the
+                    # client can re-ATTACH (rolling back via durability)
+                    self.sessions_poisoned += 1
+                    if sid is not None:
+                        self._handles.pop(sid, None)
+                        self._orphans.pop(sid, None)
+                        sid = None
+                    body = json.dumps(
+                        {
+                            "message": str(e),
+                            "good_hops": e.good_hops,
+                            "good_samples_in": e.good_samples_in,
+                        }
+                    ).encode("utf-8")
+                    writer.write(_frame(MSG_POISONED, body))
                 except (SessionError, ProtocolError, ValueError) as e:
                     if sid is not None and sid not in self._handles:
                         sid = None  # session lost to a shard failure: unbind
@@ -333,10 +386,22 @@ class StreamingGateway:
                 "active": self.pool.num_active,
                 "orphans": len(self._orphans),
                 "load_shed": self.load_shed,
+                "frames_rejected": self.frames_rejected,
                 "sessions_recovered": getattr(
                     self.pool, "sessions_recovered", 0
                 ),
                 "sessions_recovered_at_start": self.sessions_recovered_at_start,
+                "sessions_quarantined": getattr(
+                    self.pool, "sessions_quarantined", 0
+                ),
+                "quarantined_ids": [
+                    str(s) for s in getattr(self.pool, "quarantined", {})
+                ],
+                "breaker_opens": getattr(self.pool, "breaker_opens", 0),
+                "watchdog_failovers": getattr(
+                    self.pool, "watchdog_failovers", 0
+                ),
+                "sessions_poisoned": self.sessions_poisoned,
                 "recovery_errors": [
                     [str(s), msg]
                     for s, msg in getattr(self.pool, "recovery_errors", [])
@@ -366,6 +431,14 @@ class StreamingGateway:
             self._tick()
             return MSG_AUDIO, b"", sid
         if msg_type == MSG_READ:
+            read_degraded = getattr(self.pool, "read_degraded", None)
+            if read_degraded is not None:
+                out, degraded = self._guarded(sid, read_degraded, handle)
+                return (
+                    MSG_AUDIO_DEGRADED if degraded else MSG_AUDIO,
+                    np.asarray(out, np.float32).tobytes(),
+                    sid,
+                )
             out = self._guarded(sid, self.pool.read, handle)
             return MSG_AUDIO, np.asarray(out, np.float32).tobytes(), sid
         if msg_type == MSG_DETACH:
@@ -412,11 +485,22 @@ class GatewayThread:
     ``call(fn)`` runs ``fn(pool)`` ON the gateway thread (blocking for the
     result) — the chaos harness uses it to inject ``kill_shard`` without
     racing the pump loop.
+
+    ``call_timeout`` bounds every blocking wait on the gateway thread
+    (``call()`` results, ``stop()``'s shutdown and join): a wedged event
+    loop surfaces as a ``TimeoutError`` naming the pending operation
+    instead of a silent infinite hang.
     """
 
-    def __init__(self, pool, *, gateway_cls=None, **gateway_kwargs) -> None:
+    def __init__(
+        self, pool, *, gateway_cls=None, call_timeout: float = 60.0,
+        **gateway_kwargs,
+    ) -> None:
         # gateway_cls: a StreamingGateway subclass (fault-injecting test
         # gateways override _dispatch_msg to kill connections mid-request)
+        if call_timeout <= 0:
+            raise ValueError("call_timeout must be > 0")
+        self.call_timeout = float(call_timeout)
         self.gateway = (gateway_cls or StreamingGateway)(pool, **gateway_kwargs)
         self._loop = asyncio.new_event_loop()
         self._started = threading.Event()
@@ -452,9 +536,23 @@ class GatewayThread:
         return self.gateway.pool
 
     def call(self, fn):
-        """Run ``fn(pool)`` on the gateway thread; return its result."""
+        """Run ``fn(pool)`` on the gateway thread; return its result.
+
+        Raises:
+            TimeoutError: the gateway thread did not produce a result
+                within ``call_timeout`` seconds (wedged event loop); the
+                error names the function that was pending.
+        """
         fut = asyncio.run_coroutine_threadsafe(self._call_async(fn), self._loop)
-        return fut.result(timeout=60)
+        try:
+            return fut.result(timeout=self.call_timeout)
+        except concurrent.futures.TimeoutError as exc:
+            fut.cancel()
+            name = getattr(fn, "__name__", repr(fn))
+            raise TimeoutError(
+                f"gateway thread call {name!r} still pending after "
+                f"{self.call_timeout}s — the event loop is wedged"
+            ) from exc
 
     async def _call_async(self, fn):
         return fn(self.gateway.pool)
@@ -462,11 +560,22 @@ class GatewayThread:
     def stop(self) -> None:
         if not self._thread.is_alive():
             return
-        asyncio.run_coroutine_threadsafe(
-            self.gateway.stop(), self._loop
-        ).result(timeout=60)
+        fut = asyncio.run_coroutine_threadsafe(self.gateway.stop(), self._loop)
+        try:
+            fut.result(timeout=self.call_timeout)
+        except concurrent.futures.TimeoutError as exc:
+            fut.cancel()
+            raise TimeoutError(
+                f"gateway stop() still pending after {self.call_timeout}s — "
+                "the event loop is wedged mid-shutdown"
+            ) from exc
         self._loop.call_soon_threadsafe(self._loop.stop)
-        self._thread.join(timeout=60)
+        self._thread.join(timeout=self.call_timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"gateway thread did not join within {self.call_timeout}s "
+                "after stop() completed"
+            )
 
 
 class GatewayClient:
@@ -499,8 +608,18 @@ class GatewayClient:
       failure modes tested here; exactly-once FEED needs an app-level
       sequence number.
 
-    ``GatewayBusyError`` (typed ATTACH load-shed) is NOT retried — the
-    caller owns admission backoff policy; ``retry_after_ms`` is the hint.
+    ``GatewayBusyError`` (typed ATTACH load-shed) is NOT retried by default
+    — the caller owns admission backoff policy; ``retry_after_ms`` is the
+    hint. Opt in with ``retry_busy=N``: the client then honors the BUSY
+    frame's own ``retry_after_ms``, sleeping it (scaled by jitter in
+    [0.5, 1.5) so a herd of shed clients does not retry in lockstep) and
+    re-sending, up to N times within the request deadline.
+
+    A ``MSG_POISONED`` reply raises ``SessionPoisonedError`` and clears
+    ``session_id`` (the gateway unbound the quarantined session); attach
+    the same id again to roll the stream back to its last finite state.
+    ``read()`` sets ``last_degraded`` when the reply was
+    ``MSG_AUDIO_DEGRADED`` (brownout passthrough audio).
     """
 
     def __init__(
@@ -513,11 +632,14 @@ class GatewayClient:
         backoff_base: float = 0.05,
         backoff_cap: float = 2.0,
         reconnect: bool = True,
+        retry_busy: int = 0,
     ) -> None:
         if timeout <= 0:
             raise ValueError("timeout must be > 0")
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if retry_busy < 0:
+            raise ValueError("retry_busy must be >= 0")
         self._host = host
         self._port = int(port)
         self._timeout = float(timeout)
@@ -525,11 +647,14 @@ class GatewayClient:
         self._backoff_base = float(backoff_base)
         self._backoff_cap = float(backoff_cap)
         self._auto_reconnect = bool(reconnect)
+        self._retry_busy = int(retry_busy)
         self._rng = random.Random()
         self._closed = False
         self._sock: Optional[socket.socket] = None
         self.session_id: Optional[str] = None
         self.reconnects = 0  # successful re-connections (observability)
+        self.busy_retries = 0  # BUSY frames waited out (retry_busy mode)
+        self.last_degraded = False  # last read() carried brownout audio
         self._connect(time.monotonic() + self._timeout)
 
     # -- framing / transport -------------------------------------------------
@@ -580,6 +705,16 @@ class GatewayClient:
             raise GatewayBusyError(
                 reply[_BUSY_HEAD.size :].decode("utf-8"), retry_ms
             )
+        if reply_type == MSG_POISONED:
+            info = json.loads(reply.decode("utf-8"))
+            sid = self.session_id
+            self.session_id = None  # the gateway unbound the session
+            raise SessionPoisonedError(
+                info.get("message", "session quarantined"),
+                session_id=sid,
+                good_hops=info.get("good_hops"),
+                good_samples_in=info.get("good_samples_in"),
+            )
         return reply_type, reply
 
     def _reconnect(self, deadline: float, reattach: bool) -> None:
@@ -605,6 +740,7 @@ class GatewayClient:
             self._timeout if timeout is None else timeout
         )
         attempt = 0
+        busy = 0
         while True:
             try:
                 if self._sock is None:
@@ -612,6 +748,17 @@ class GatewayClient:
                         raise ConnectionError("client is closed")
                     self._reconnect(deadline, reattach=msg_type != MSG_ATTACH)
                 return self._raw_request(msg_type, payload, deadline)
+            except GatewayBusyError as e:
+                if busy >= self._retry_busy:
+                    raise
+                # honor the gateway's own hint, jittered so a herd of shed
+                # clients spreads out instead of retrying in lockstep
+                delay = (e.retry_after_ms / 1000.0) * (0.5 + self._rng.random())
+                if time.monotonic() + delay >= deadline:
+                    raise
+                time.sleep(delay)
+                busy += 1
+                self.busy_retries += 1
             except TimeoutError:
                 raise  # the per-request deadline is final: no blind retry
             except (ConnectionError, OSError):
@@ -644,8 +791,13 @@ class GatewayClient:
         self._request(MSG_FEED, arr.tobytes())
 
     def read(self) -> np.ndarray:
-        """Pop all enhanced audio the gateway has for this session."""
-        _, reply = self._request(MSG_READ)
+        """Pop all enhanced audio the gateway has for this session.
+
+        Sets ``last_degraded`` when the reply was ``MSG_AUDIO_DEGRADED`` —
+        the gateway is under brownout level 3 and some of these samples are
+        unenhanced passthrough audio."""
+        rtype, reply = self._request(MSG_READ)
+        self.last_degraded = rtype == MSG_AUDIO_DEGRADED
         return np.frombuffer(reply, np.float32).copy()
 
     def read_until(

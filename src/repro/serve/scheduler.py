@@ -78,6 +78,15 @@ class SchedulerConfig:
             milliseconds of one-off migration pause one freed idle-tier
             slot is worth. A shrink is proposed only when
             ``mean_pause_ms <= slot_value_ms * freed_slots``.
+        brownout_backlog: mean EWMA backlog (hops) PER ACTIVE SESSION at or
+            above which an observation counts as overload pressure for the
+            graceful-brownout ladder (open shard breakers also count as
+            pressure). ``None`` (default) disables the ladder entirely —
+            ``decision.brownout`` stays 0 and nothing degrades.
+        brownout_patience: consecutive pressured (calm) observations
+            required to escalate (de-escalate) the brownout level by one
+            step — hysteresis so a single hot pump never degrades service
+            and a single quiet one never lifts a needed brownout.
 
     Raises:
         ValueError: out-of-range constants.
@@ -91,6 +100,8 @@ class SchedulerConfig:
     shrink_slope: float = 0.0
     shrink_patience: int = 4
     slot_value_ms: float = 5.0
+    brownout_backlog: Optional[float] = None
+    brownout_patience: int = 2
 
     def __post_init__(self) -> None:
         if self.k_max < 1:
@@ -105,6 +116,10 @@ class SchedulerConfig:
             raise ValueError("shrink_patience must be >= 1")
         if self.slot_value_ms < 0:
             raise ValueError("slot_value_ms must be >= 0")
+        if self.brownout_backlog is not None and self.brownout_backlog <= 0:
+            raise ValueError("brownout_backlog must be > 0 (or None)")
+        if self.brownout_patience < 1:
+            raise ValueError("brownout_patience must be >= 1")
 
     @property
     def k_ladder(self) -> Tuple[int, ...]:
@@ -131,6 +146,9 @@ class SchedulerState:
     prev_total: int = 0  # last observed raw total (for the next difference)
     seeded: bool = False  # False until the first observation primes the EWMA
     low_streak: int = 0  # consecutive shrink-eligible decisions (hysteresis)
+    brownout: int = 0  # current graceful-degradation level (0..3)
+    hot_streak: int = 0  # consecutive pressured observations (escalation)
+    cool_streak: int = 0  # consecutive calm observations (de-escalation)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +173,11 @@ class SchedulerObservation:
         mean_pause_ms: measured mean migration pause of past resizes
             (0.0 before any resize — first shrink is assumed cheap until
             measured otherwise).
+        open_breakers: shards in the observer's fleet whose circuit breaker
+            is currently open (0 for standalone pools). Any open breaker
+            counts as brownout pressure: the surviving shards are carrying
+            a dead shard's sessions, so the fleet sheds work BEFORE their
+            backlogs prove it.
     """
 
     backlogs: Tuple[int, ...]
@@ -165,16 +188,20 @@ class SchedulerObservation:
     n_tiers: int = 1
     lower_capacity: int = 0
     mean_pause_ms: float = 0.0
+    open_breakers: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerDecision:
-    """What one observation bought: a dispatch depth and at most one tier
-    move (``grow`` and ``shrink`` are mutually exclusive by construction)."""
+    """What one observation bought: a dispatch depth, at most one tier
+    move (``grow`` and ``shrink`` are mutually exclusive by construction),
+    and the graceful-brownout level the pool should serve at (0 = full
+    service; see ``SessionPool.set_brownout`` for the ladder)."""
 
     k: int
     grow: bool = False
     shrink: bool = False
+    brownout: int = 0
 
 
 def _ladder_round_up(depth: int, ladder: Sequence[int]) -> int:
@@ -244,13 +271,45 @@ def decide(
     if shrink:
         low_streak = 0
 
-    decision = SchedulerDecision(k=k, grow=grow, shrink=shrink)
+    # -- graceful brownout: escalate/de-escalate one rung per patience ------
+    # Pressure = sustained per-session EWMA backlog above the watermark, OR
+    # any open shard breaker (the fleet is serving a dead shard's load).
+    # One rung per ``brownout_patience`` consecutive pressured (calm)
+    # observations, so the ladder is walked, never jumped — and a pool at
+    # brownout >= 1 dispatches with K clamped to 1 (shed the throughput
+    # amplifier first; parking and passthrough are the pool's rungs 2–3).
+    brownout = state.brownout
+    hot_streak, cool_streak = state.hot_streak, state.cool_streak
+    if config.brownout_backlog is None:
+        brownout = hot_streak = cool_streak = 0
+    else:
+        pressured = (
+            obs.open_breakers > 0
+            or level >= config.brownout_backlog * max(obs.num_active, 1)
+        )
+        if pressured:
+            hot_streak, cool_streak = hot_streak + 1, 0
+            if hot_streak >= config.brownout_patience and brownout < 3:
+                brownout += 1
+                hot_streak = 0
+        else:
+            hot_streak, cool_streak = 0, cool_streak + 1
+            if cool_streak >= config.brownout_patience and brownout > 0:
+                brownout -= 1
+                cool_streak = 0
+    if brownout >= 1:
+        k = 1
+
+    decision = SchedulerDecision(k=k, grow=grow, shrink=shrink, brownout=brownout)
     new_state = SchedulerState(
         level=level,
         slope=slope,
         prev_total=total,
         seeded=True,
         low_streak=low_streak,
+        brownout=brownout,
+        hot_streak=hot_streak,
+        cool_streak=cool_streak,
     )
     return decision, new_state
 
@@ -311,6 +370,10 @@ class AdaptiveScheduler:
             "backlog_level": self.state.level,
             "backlog_slope": self.state.slope,
             "k_ladder": list(self.config.k_ladder),
+            "brownout": self.state.brownout,
+            "brownout_decisions": sum(
+                1 for _, d in self.trace if d.brownout > 0
+            ),
         }
 
 

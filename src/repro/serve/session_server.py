@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
+from repro.serve.faults import FaultPlan, InjectedFaultError
 from repro.serve.scheduler import SchedulerObservation
 from repro.serve.streaming_se import (
     StreamState,
@@ -68,6 +69,41 @@ from repro.serve.streaming_se import (
 )
 
 Pytree = dict
+
+
+@jax.jit
+def _finite_slots(state, out) -> jax.Array:
+    """(B,) bool — True where EVERY float leaf of (state, out) is finite.
+
+    The post-collect finite guard: one jitted all-reduce per slot over the
+    new carried state and the step's output, launched right after the step
+    so its (tiny) result rides the readback the collect already pays for.
+    Per-slot, because the batched hop math is row-independent: one slot
+    going NaN proves nothing about its batch neighbours, and the guard's
+    verdict is what quarantines exactly the poisoned slot.
+    """
+    leaves = jax.tree_util.tree_leaves((state, out))
+    batch = leaves[0].shape[0]
+    ok = jnp.ones((batch,), bool)
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            ok = ok & jnp.all(jnp.isfinite(leaf.reshape(batch, -1)), axis=1)
+    return ok
+
+
+@jax.jit
+def _nan_slots(tree, slot_mask):
+    """Overwrite every float leaf of ``tree`` with NaN where ``slot_mask``
+    is True (fault injection's poison writer — the software stand-in for a
+    corrupt frame blowing up a slot's recurrent accumulators)."""
+
+    def poison(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf
+        m = slot_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, jnp.full_like(leaf, jnp.nan), leaf)
+
+    return jax.tree_util.tree_map(poison, tree)
 
 
 @jax.jit
@@ -112,6 +148,54 @@ class PoolFullError(SessionError):
     """
 
 
+class SessionPoisonedError(SessionError):
+    """The session was quarantined by the finite guard.
+
+    A batched step produced a non-finite output or carried state for this
+    session's slot (a poison input chunk blowing up the recurrent
+    accumulators, or an injected fault). The pool detached the session
+    before any non-finite sample could be read — a quarantined session
+    NEVER emits poisoned audio — and released (not deleted) its durable
+    state, so ``repro.serve.durability.recover_session`` with
+    ``max_feed_samples=<good_samples_in>`` rebuilds the stream at its
+    last-good pre-poison point. Other slots in the same batched step are
+    untouched: the hop math is row-independent and the guard's verdict is
+    per-slot.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        session_id: Optional[int] = None,
+        good_hops: Optional[int] = None,
+        good_samples_in: Optional[int] = None,
+    ) -> None:
+        super().__init__(message)
+        self.session_id = session_id
+        self.good_hops = good_hops
+        self.good_samples_in = good_samples_in
+
+
+@dataclasses.dataclass
+class QuarantineRecord:
+    """What the pool remembers about one quarantined session.
+
+    ``good_hops`` / ``good_samples_in`` mark the last state PROVEN finite:
+    the poisoning step's own hops are excluded (its output was suppressed),
+    so durability replay truncated at ``good_samples_in`` fed samples
+    reconstructs the stream exactly as it was before the poison entered.
+    """
+
+    sid: int
+    session: "Session"  # the dead handle (identity for router translation)
+    durable_id: Optional[str]
+    good_hops: int
+    good_samples_in: int
+    stats: "SessionStats"
+    message: str = ""
+
+
 @dataclasses.dataclass
 class SessionStats:
     """Per-session serving accounting."""
@@ -148,6 +232,8 @@ class _Pending:
     counts: np.ndarray  # (B,) int — hops consumed per slot by this step
     t0: float
     dt: Optional[float] = None  # dispatch->ready, set by wait_ready()
+    finite: Optional[jax.Array] = None  # (B,) bool finite-guard verdict
+    degraded: bool = False  # produced in brownout passthrough mode
 
 
 @dataclasses.dataclass
@@ -327,6 +413,29 @@ class SessionPool:
             layer should journal a given stream: hand the manager to the
             outermost pool a client feeds (the sharded router journals at
             the router, not per shard).
+        finite_guard: opt-in poison containment (default off = zero
+            overhead). Every dispatch additionally launches one jitted
+            per-slot ``isfinite`` all-reduce over the step's output AND new
+            carried state (``_finite_slots``); ``collect()`` reads the tiny
+            verdict back alongside the output it already fetches. A slot
+            that fails the check is **quarantined**: its output for that
+            step is suppressed (a quarantined session never emits
+            non-finite audio), the session is detached into
+            ``self.quarantined``, further calls on its handle raise the
+            typed ``SessionPoisonedError``, and its durable files (if any)
+            are released intact so the pre-poison state is recoverable via
+            ``durability.recover_session(..., max_feed_samples=
+            record.good_samples_in)``. Slots sharing the batched step are
+            untouched — the hop math is row-independent.
+        faults: optional ``repro.serve.faults.FaultPlan``. Deterministic
+            fault injection: each ``dispatch()`` first asks the plan
+            whether to raise ``InjectedFaultError`` (before consuming ANY
+            input — the failed call is side-effect-free) and, after
+            launching the step, whether to overwrite stepped slots' output
+            or carried state with NaN (what the finite guard exists to
+            catch). Production pools pass ``None``.
+        fault_tag: name of this pool in the fault plan's schedule (the
+            router tags each shard so a plan targets shards independently).
 
     Raises:
         ValueError: ``capacity < 1``, ``inflight < 1``, ``hops_per_step <
@@ -357,6 +466,9 @@ class SessionPool:
         step_fns: Optional[Dict[Any, Any]] = None,
         ingest_ring: Optional[int] = None,
         durability: Optional[Any] = None,
+        finite_guard: bool = False,
+        faults: Optional[FaultPlan] = None,
+        fault_tag: str = "pool",
     ) -> None:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -397,7 +509,7 @@ class SessionPool:
         self._ring_depth = ingest_ring
         self._steps: Dict[Any, Any] = step_fns if step_fns is not None else {}
         if step_fn is not None:
-            self._steps.setdefault((hops_per_step, ingest_ring), step_fn)
+            self._steps.setdefault((hops_per_step, ingest_ring, False), step_fn)
         self._step = self._step_for(hops_per_step)  # default full-K step
         state = init_stream(params, cfg, capacity)
         self._state: StreamState = (
@@ -438,23 +550,36 @@ class SessionPool:
         self._buf_i = 0
         self._durability = durability
         self._durable_ids: Dict[int, str] = {}  # sid -> durable id
+        self._finite_guard = finite_guard
+        self._faults = faults
+        self._fault_tag = fault_tag
+        # sid -> QuarantineRecord for sessions the finite guard detached
+        self._quarantined: Dict[int, QuarantineRecord] = {}
+        self._fresh_quarantined: List[QuarantineRecord] = []
+        self.quarantined_count = 0
+        # graceful-brownout ladder (0 = full service .. 3 = passthrough);
+        # set per pump by the scheduler's decision via set_brownout()
+        self._brownout = 0
+        self.brownout_hops = 0
+        self._degraded_unread = np.zeros((capacity,), bool)
         # in-flight batched steps launched by dispatch(), drained in FIFO
         # order by collect(); at most ``inflight`` deep
         self._pending: List[_Pending] = []
         self._last_ready_t = 0.0  # when the previous step's output was ready
         self.step_seconds: List[float] = []  # pool-wide per-step latency
 
-    def _step_for(self, k: int):
+    def _step_for(self, k: int, passthrough: bool = False):
         """The compiled step for a ``dispatch(max_hops=k)`` call.
 
         Built lazily per lane count and cached in ``self._steps`` keyed by
-        ``(k, ingest_ring)`` — a dict the caller may share across pools
-        (``step_fns=``) so elastic tiers and co-located shards pay each lane
-        count's XLA compilation once per fleet, not once per pool. Ring
-        pools build the ``from_ring`` gather form; staged pools the packed
-        buffer form.
+        ``(k, ingest_ring, passthrough)`` — a dict the caller may share
+        across pools (``step_fns=``) so elastic tiers and co-located shards
+        pay each lane count's XLA compilation once per fleet, not once per
+        pool. Ring pools build the ``from_ring`` gather form; staged pools
+        the packed buffer form. ``passthrough`` selects the model-free
+        brownout step (same plumbing, ``hop_passthrough`` hop core).
         """
-        key = (k, self._ring_depth)
+        key = (k, self._ring_depth, passthrough)
         step = self._steps.get(key)
         if step is None:
             step = make_stream_hop(
@@ -464,6 +589,7 @@ class SessionPool:
                 prune_granularity=self._prune_granularity,
                 prune_block=self._prune_block, max_hops_per_step=k,
                 from_ring=self._ring_depth, prune_meta=self._prune_meta,
+                passthrough=passthrough,
             )
             self._steps[key] = step
         return step
@@ -521,6 +647,7 @@ class SessionPool:
         self._rings[slot] = _RingBuffer()
         self._out[slot] = []
         self._parked[slot] = False
+        self._degraded_unread[slot] = False
         if self._ring_depth is not None:
             # cursors only: the step masks lanes by hop_counts, so stale
             # device-ring contents from the previous tenant are never read
@@ -552,6 +679,16 @@ class SessionPool:
         return tail
 
     def _check(self, sess: Session) -> None:
+        rec = self._quarantined.get(sess.sid)
+        if rec is not None and rec.session is sess:
+            raise SessionPoisonedError(
+                f"session {sess.sid} was quarantined after a non-finite "
+                f"output/state (last good hop: {rec.good_hops}); its "
+                f"pre-poison state is recoverable via durability replay",
+                session_id=sess.sid,
+                good_hops=rec.good_hops,
+                good_samples_in=rec.good_samples_in,
+            )
         if sess.detached or self._sessions.get(sess.sid) is not sess:
             raise SessionError(f"session {sess.sid} is not attached to this pool")
 
@@ -606,8 +743,10 @@ class SessionPool:
         """
         self._check(sess)
         self.collect()  # fold any in-flight dispatch into the output queues
+        self._check(sess)  # collect may have quarantined this very session
         chunks = self._out[sess.slot]
         self._out[sess.slot] = []
+        self._degraded_unread[sess.slot] = False  # queue drained below
         # a parked slot is always below the bound here: collect() above
         # drained the pipeline and the queue was just popped, so unread == 0
         if self._parked[sess.slot]:
@@ -732,7 +871,15 @@ class SessionPool:
 
         Raises:
             ValueError: ``max_hops`` outside ``[1, hops_per_step]``.
+            InjectedFaultError: the pool's ``FaultPlan`` scheduled a step
+                crash for this dispatch. Raised BEFORE any input is
+                consumed, so the call is side-effect-free and a router can
+                retry or fail the shard over without losing audio.
         """
+        if self._faults is not None and self._faults.step_error(self._fault_tag):
+            raise InjectedFaultError(
+                f"injected dispatch fault ({self._fault_tag})"
+            )
         while len(self._pending) >= self._inflight:
             self._collect_one()
         hop = self.cfg.hop
@@ -742,13 +889,32 @@ class SessionPool:
                 f"max_hops must be in [1, hops_per_step="
                 f"{self.hops_per_step}], got {k}"
             )
+        brownout = self._brownout
+        if brownout >= 1:
+            # level 1+: clamp the fused depth — shed the throughput lever
+            # first, keep per-stream latency and fairness
+            k = 1
+        browned_out = frozenset()
+        if brownout >= 2:
+            # level 2+: park the lowest-backlog half of the backlogged
+            # streams for this dispatch — serve the streams that are
+            # furthest behind, let the rest absorb the overload in their
+            # own ring buffers
+            backlogged = sorted(
+                (self._backlog_hops(s.slot), s.slot)
+                for s in self._sessions.values()
+                if self._backlog_hops(s.slot) > 0
+            )
+            browned_out = frozenset(
+                slot for _, slot in backlogged[: len(backlogged) // 2]
+            )
         use_ring = self._ring_depth is not None
         buf = None if use_ring else self._hop_bufs[self._buf_i]
         counts = np.zeros((self.capacity,), np.int32)
         starts = np.zeros((self.capacity,), np.int32)
         bounded = self._max_unread_hops
         for slot, sess in enumerate(self._slot_session):
-            if sess is None:
+            if sess is None or slot in browned_out:
                 continue
             if use_ring:
                 self._fill_ring(slot)  # top up lanes freed since the feed
@@ -786,7 +952,12 @@ class SessionPool:
         # K=1 steps take the (B,) bool active mask; fused steps take the
         # (B,) int hop_counts vector driving the per-lane scan masks
         lanes = counts.astype(bool) if k == 1 else counts
-        step = self._step_for(k)
+        # level 3: terminal brownout — serve the model-free passthrough
+        # step (unenhanced but real-time audio, tagged degraded) instead of
+        # going silent under a load the model step can no longer sustain
+        step = self._step_for(k, passthrough=brownout >= 3)
+        if brownout:
+            self.brownout_hops += n_hops
         t0 = time.perf_counter()
         if use_ring:
             if self.device is not None:
@@ -807,8 +978,47 @@ class SessionPool:
             else:
                 hops, act = jnp.asarray(view), jnp.asarray(lanes)
             self._state, out = step(self._state, hops, act)
-        self._pending.append(_Pending(out=out, counts=counts, t0=t0))
+        if self._faults is not None:
+            inj = self._faults.poison_slots(
+                self._fault_tag, [int(s) for s in np.flatnonzero(counts)]
+            )
+            if inj:
+                out, self._state = self._inject_poison(inj, out)
+        finite = None
+        if self._finite_guard:
+            finite = _finite_slots(self._state, out)
+        self._pending.append(
+            _Pending(
+                out=out, counts=counts, t0=t0, finite=finite,
+                degraded=brownout >= 3,
+            )
+        )
         return n_hops
+
+    def _inject_poison(self, inj, out):
+        """Apply a ``FaultPlan``'s NaN injection to a just-launched step.
+
+        Returns the (possibly poisoned) ``(out, state)`` pair. Poisoning
+        the OUTPUT models a transiently-corrupt frame; poisoning the
+        CARRIED STATE models the sticky failure mode — a blown recurrent
+        accumulator that would otherwise corrupt every future hop.
+        """
+
+        def mask_for(slots):
+            m = np.zeros((self.capacity,), bool)
+            m[list(slots)] = True
+            return (
+                jax.device_put(m, self.device)
+                if self.device is not None
+                else jnp.asarray(m)
+            )
+
+        state = self._state
+        if inj.poison_out:
+            out = _nan_slots(out, mask_for(inj.poison_out))
+        if inj.poison_state:
+            state = _nan_slots(state, mask_for(inj.poison_state))
+        return out, state
 
     def _mark_ready(self, pending: _Pending) -> None:
         """Block on one step and record its latency WITHOUT pipeline wait.
@@ -850,6 +1060,10 @@ class SessionPool:
         pending = self._pending.pop(0)
         self._mark_ready(pending)
         out = np.asarray(pending.out)
+        # the finite-guard verdict is a (B,) bool computed on-device at
+        # dispatch time; materializing it here amortizes the readback into
+        # the output transfer the collect already pays for
+        finite = None if pending.finite is None else np.asarray(pending.finite)
         self.step_seconds.append(pending.dt)
 
         n_hops = int(pending.counts.sum())
@@ -868,6 +1082,20 @@ class SessionPool:
         for slot in np.flatnonzero(pending.counts):
             c = int(pending.counts[slot])
             sess = self._slot_session[slot]
+            if sess is None:
+                # quarantined by an earlier pending step in this same
+                # collect: the slot is free, suppress this output too
+                continue
+            if finite is not None and not bool(finite[slot]):
+                # poison containment: suppress THIS slot's output (it is
+                # non-finite — it must never reach a reader) and detach the
+                # session into quarantine. Neighbouring slots proceed
+                # normally below: the hop math is row-independent, so the
+                # guard's per-slot verdict is exactly the blast radius.
+                self._quarantine(sess)
+                continue
+            if pending.degraded:
+                self._degraded_unread[slot] = True
             if out.ndim == 3:  # fused (B, K, hop): keep only the live lanes
                 self._out[slot].append(out[slot, :c].reshape(-1))
             else:
@@ -877,6 +1105,111 @@ class SessionPool:
                 1.0 / lane_occ[j] for j in range(c)
             )
         return n_hops
+
+    def _quarantine(self, sess: Session) -> None:
+        """Detach a poisoned session into quarantine (finite-guard path).
+
+        The slot is freed immediately (the next ``attach`` zeroes it via
+        ``reset_slots``, so NaN left in the freed slice can never leak —
+        inactive slots are masked inside the step and never read). Unread
+        output is dropped along with the poisoned step's: nothing that was
+        queued has been acked, and durability replay regenerates it. The
+        durable files are RELEASED, not deleted — the recovery seam.
+
+        ``good_hops``/``good_samples_in`` are the session's counters at
+        detection time: ``stats.hops`` has NOT been advanced for the
+        poisoning step, so they mark the last state proven finite.
+        """
+        slot = sess.slot
+        did = self._durable_ids.pop(sess.sid, None)
+        rec = QuarantineRecord(
+            sid=sess.sid,
+            session=sess,
+            durable_id=did,
+            good_hops=sess.stats.hops,
+            good_samples_in=sess.stats.hops * self.cfg.hop,
+            stats=dataclasses.replace(sess.stats),
+            message="non-finite output/state detected by the finite guard",
+        )
+        sess.detached = True
+        self._slot_session[slot] = None
+        del self._sessions[sess.sid]
+        self._rings[slot] = _RingBuffer()
+        self._out[slot] = []
+        self._parked[slot] = False
+        self._degraded_unread[slot] = False
+        if self._ring_depth is not None:
+            self._ring_start[slot] = 0
+            self._ring_count[slot] = 0
+        if did is not None and self._durability is not None:
+            self._durability.release(did)  # keep the files: recovery needs them
+        self._quarantined[sess.sid] = rec
+        self._fresh_quarantined.append(rec)
+        self.quarantined_count += 1
+
+    @property
+    def quarantined(self) -> Dict[int, QuarantineRecord]:
+        """sid -> ``QuarantineRecord`` for every session the guard detached."""
+        return dict(self._quarantined)
+
+    def take_quarantined(self) -> List[QuarantineRecord]:
+        """Pop the records quarantined since the last call (router harvest).
+
+        The records stay queryable via ``quarantined``; this drains only
+        the fresh-events queue so an outer layer (elastic pool, sharded
+        router) can translate each record to ITS handle exactly once.
+        """
+        fresh, self._fresh_quarantined = self._fresh_quarantined, []
+        return fresh
+
+    def clear_quarantined(self, sid: Optional[int] = None) -> None:
+        """Forget quarantine record(s) (after recovery, or to re-use a sid's
+        diagnostics slot); ``None`` clears all."""
+        if sid is None:
+            self._quarantined.clear()
+        else:
+            self._quarantined.pop(sid, None)
+
+    def set_brownout(self, level: int) -> None:
+        """Set the graceful-degradation level for subsequent dispatches.
+
+        The ladder (normally walked by the adaptive scheduler's
+        ``decide()`` under sustained overload or open breakers, see
+        ``repro.serve.scheduler``):
+
+        - 0 — full service.
+        - 1 — clamp the fused depth to ``max_hops=1`` (shed the
+          throughput amplifier, keep fairness and latency).
+        - 2 — additionally park the lowest-backlog half of the backlogged
+          streams each dispatch (serve whoever is furthest behind).
+        - 3 — passthrough: serve the model-free analysis→synthesis hop.
+          Audio keeps flowing in real time but UNENHANCED, and every
+          ``read_degraded`` containing such audio is flagged (the gateway
+          tags the READ reply) — degraded beats silent.
+
+        Levels clamp to [0, 3]; ``brownout_hops`` counts every hop served
+        at any non-zero level.
+        """
+        self._brownout = max(0, min(3, int(level)))
+
+    @property
+    def brownout(self) -> int:
+        return self._brownout
+
+    def read_degraded(self, sess: Session) -> Tuple[np.ndarray, bool]:
+        """``read()`` plus a brownout flag for the returned audio.
+
+        Returns ``(samples, degraded)`` where ``degraded`` is True iff any
+        of the returned samples were produced by the brownout passthrough
+        step (unenhanced audio). Empty reads are never flagged. The gateway
+        uses this to answer READ with the tagged degraded-audio frame.
+        """
+        self._check(sess)
+        self.collect()
+        self._check(sess)  # collect may have quarantined this very session
+        degraded = bool(self._degraded_unread[sess.slot])
+        out = self.read(sess)
+        return out, degraded and bool(out.size)
 
     def collect(self, proc_share: Optional[float] = None) -> int:
         """Block on every in-flight step (if any) and distribute the output.
@@ -943,7 +1276,9 @@ class SessionPool:
         while True:
             k = None
             if scheduler is not None:
-                k = min(scheduler.observe(self.observation()).k, self.hops_per_step)
+                decision = scheduler.observe(self.observation())
+                self.set_brownout(decision.brownout)
+                k = min(decision.k, self.hops_per_step)
             if not self.dispatch(max_hops=k):
                 break
             steps += 1
@@ -1017,6 +1352,9 @@ class SessionPool:
             "device": str(self.device) if self.device is not None else "default",
             "backend": self.backend,
             "hops_per_step": self.hops_per_step,
+            "quarantined": self.quarantined_count,
+            "brownout": self._brownout,
+            "brownout_hops": self.brownout_hops,
         }
         prune = self._prune_summary()
         if prune is not None:
@@ -1037,6 +1375,7 @@ class SessionPool:
         """
         self._check(sess)
         self.collect()  # the snapshot must include any in-flight step
+        self._check(sess)  # collect may have quarantined this very session
         slot = sess.slot
         state = jax.tree_util.tree_map(lambda leaf: np.asarray(leaf[slot]), self._state)
         ring = self._rings[slot]
@@ -1086,6 +1425,7 @@ class SessionPool:
         """
         self._check(sess)
         self.collect()
+        self._check(sess)  # collect may have quarantined this very session
         slot = sess.slot
         state = jax.tree_util.tree_map(
             lambda leaf: np.asarray(leaf[slot]), self._state
@@ -1131,6 +1471,7 @@ class SessionPool:
         if n <= 0:
             return 0
         self.collect()
+        self._check(sess)  # collect may have quarantined this very session
         slot = sess.slot
         chunks = self._out[slot]
         dropped = 0

@@ -71,6 +71,7 @@ from repro.core.quant import QuantSpec
 from repro.models import tftnn as tft_mod
 from repro.serve.durability import DurabilityError, recover_session
 from repro.serve.elastic_pool import ElasticSessionPool
+from repro.serve.faults import FaultPlan
 from repro.serve.scheduler import (
     AdaptiveScheduler,
     SchedulerConfig,
@@ -78,8 +79,10 @@ from repro.serve.scheduler import (
 )
 from repro.serve.session_server import (
     PoolFullError,
+    QuarantineRecord,
     Session,
     SessionError,
+    SessionPoisonedError,
     SessionPool,
 )
 
@@ -291,6 +294,35 @@ class ShardedSessionPool:
             fresh, ``restart_shard`` drains ``lost_session_ids`` through
             recovery, and ``recover_sessions()`` rebuilds every orphan after
             a full process restart (the gateway calls it on start).
+        finite_guard: forwarded to every shard's pool — one jitted
+            ``isfinite`` all-reduce per stepped slot riding the existing
+            output readback; a non-finite slot is QUARANTINED at collect
+            (never emitted) and harvested to the router, where its record
+            (``quarantined``) carries the last-good hop count. ``attach`` of
+            a quarantined id with durable state recovers the stream up to
+            the pre-poison feed (``max_feed_samples``); other router ops on
+            it raise ``SessionPoisonedError``.
+        faults: optional ``repro.serve.faults.FaultPlan`` threaded into
+            every shard (per-shard tag ``"shard{i}"``) and used here for
+            injected shard stalls — the deterministic chaos lever.
+        breaker_threshold: per-shard circuit breaker. ``None`` (default)
+            keeps the legacy fail-fast fabric: ANY mid-pump failure kills
+            the shard and fails its sessions over immediately. With a
+            threshold N, a dispatch-time failure (admission-time, so no
+            input was consumed — injected step errors raise before touching
+            anything) only marks the shard *suspect* for the rest of the
+            pump; N CONSECUTIVE failures open the breaker (kill + failover).
+            ``restart_shard`` re-arms it **half-open**: the next successful
+            probe/collect closes it, the next failure re-opens it at once.
+            Failures after the step launched (wait/collect) always trip
+            immediately — in-flight state cannot be proven untouched.
+        watchdog_seconds: wall-clock bound on each pump round's
+            dispatch→ready wait, per shard. A shard exceeding it is failed
+            over exactly like a mid-pump death (``watchdog_failovers``) —
+            the step DID complete by then (``wait_ready`` returned), so the
+            export/failover path stays bit-exact; the watchdog exists to
+            stop a wedged device queue (injected ``stall_rate``) from
+            capping the whole fleet's round rate.
 
     Raises:
         ValueError: ``shards < 1`` or empty ``devices``.
@@ -324,6 +356,10 @@ class ShardedSessionPool:
         adaptive=None,
         ingest_ring: Optional[int] = None,
         durability=None,
+        finite_guard: bool = False,
+        faults: Optional[FaultPlan] = None,
+        breaker_threshold: Optional[int] = None,
+        watchdog_seconds: Optional[float] = None,
     ) -> None:
         if devices is None:
             devices = jax.local_devices()
@@ -348,6 +384,13 @@ class ShardedSessionPool:
         self.elastic = tiers is not None
         self._devices = list(devices)
         self._params = params
+        if breaker_threshold is not None and breaker_threshold < 1:
+            raise ValueError("breaker_threshold must be >= 1 (or None)")
+        if watchdog_seconds is not None and watchdog_seconds <= 0:
+            raise ValueError("watchdog_seconds must be > 0 (or None)")
+        self._faults = faults
+        self._breaker_threshold = breaker_threshold
+        self._watchdog = watchdog_seconds
         self._mk = dict(
             quant=quant, donate=donate, backend=backend,
             prune_keep=prune_keep, prune_axis=prune_axis,
@@ -356,7 +399,7 @@ class ShardedSessionPool:
             shrink_fraction=shrink_fraction, shrink_patience=shrink_patience,
             sample_rate=sample_rate, inflight=inflight,
             max_unread_hops=max_unread_hops, on_unparked=on_unparked,
-            ingest_ring=ingest_ring,
+            ingest_ring=ingest_ring, finite_guard=finite_guard,
         )
         self._adaptive = adaptive if adaptive is not None else False
         self._pools: List = [self._make_pool(i) for i in range(shards)]
@@ -377,6 +420,15 @@ class ShardedSessionPool:
         self._pump_failures = [0] * shards  # mid-pump deaths per shard index
         self._failover_counts = [0] * shards  # completed failovers per index
         self.shard_generations = [0] * shards  # bumped by every restart
+        # -- circuit breakers / watchdog / quarantine ------------------------
+        self._breaker = ["closed"] * shards  # closed | half_open | open
+        self._breaker_streak = [0] * shards  # consecutive failures
+        self._suspect: set = set()  # transient failures: skip this pump only
+        self.breaker_opens = 0  # breaker trips (incl. legacy fail-fast kills)
+        self.watchdog_failovers = 0  # shards failed over for exceeding bound
+        # quarantined sessions harvested from shard pools, by client id
+        self.quarantined: Dict[Hashable, QuarantineRecord] = {}
+        self.sessions_quarantined = 0
         self.sessions_failed_over = 0  # re-homed bit-exactly via the wire
         self.sessions_lost = 0  # state died with the shard
         # recent losses, for client notification: bounded (oldest evicted),
@@ -415,6 +467,8 @@ class ShardedSessionPool:
             prune_granularity=m["prune_granularity"],
             prune_block=m["prune_block"],
             step_fns=step_fns, ingest_ring=m["ingest_ring"],
+            finite_guard=m["finite_guard"], faults=self._faults,
+            fault_tag=f"shard{index}",
         )
         if self.elastic:
             return ElasticSessionPool(
@@ -497,6 +551,24 @@ class ShardedSessionPool:
         if session_id in self._sessions:
             raise SessionError(f"session id {session_id!r} is already attached")
         self._failover_pending()  # re-home any dead shard's sessions first
+        rec = self.quarantined.pop(session_id, None)
+        if rec is not None and self._durability is not None and self._durability.has(
+            session_id
+        ):
+            # re-attach of a poisoned stream: recover it from disk, but ONLY
+            # up to the last feed proven finite — the journal tail past
+            # good_samples_in is the poison that got it quarantined
+            try:
+                return self._recover_one(
+                    session_id, max_feed_samples=rec.good_samples_in
+                )
+            except DurabilityError as exc:
+                raise SessionError(
+                    f"quarantined session {session_id!r} could not be "
+                    f"recovered to its pre-poison state: {exc}"
+                ) from exc
+        # rec set, no durability: the quarantine record is dropped and the
+        # id starts a FRESH stream (nothing on disk to roll back to)
         if self._durability is not None and self._durability.has(session_id):
             # durable state exists: this attach is a reconnect after a crash
             # or loss — recover the stream instead of starting a fresh one
@@ -553,6 +625,14 @@ class ShardedSessionPool:
         below fails with a ``SessionError`` naming the loss.
         """
         sid = sess.session_id if isinstance(sess, ShardedSession) else sess
+        rec = self.quarantined.get(sid)
+        if rec is not None:
+            raise SessionPoisonedError(
+                f"session {sid!r} is quarantined: {rec.message}",
+                session_id=sid,
+                good_hops=rec.good_hops,
+                good_samples_in=rec.good_samples_in,
+            )
         handle = self._sessions.get(sid)
         if handle is not None and handle.shard in self._dead:
             self._failover_pending()
@@ -667,48 +747,81 @@ class ShardedSessionPool:
             Number of dispatch rounds in which at least one shard stepped.
         """
         self._failover_pending()
+        self._suspect.clear()  # transient skips last at most one pump
         rounds = 0
         while True:
             t0 = time.perf_counter()
             stepped = 0
             launched = []
             for i, pool in self._live():
+                if i in self._suspect:
+                    continue  # failed this pump below breaker threshold
                 try:
                     sched = self._scheds[i]
                     if sched is None:
                         stepped += pool.dispatch()
                     else:
                         # adaptive: observe this shard, act on grow/shrink
-                        # (elastic shards only), dispatch at the decided K
-                        decision = sched.observe(pool.observation())
+                        # (elastic shards only), dispatch at the decided K;
+                        # the fleet's open-breaker count rides along so the
+                        # controller can walk the brownout ladder
+                        obs = dataclasses.replace(
+                            pool.observation(),
+                            open_breakers=self.open_breakers,
+                        )
+                        decision = sched.observe(obs)
                         if self.elastic:
                             pool.apply_decision(decision)
+                        set_brownout = getattr(pool, "set_brownout", None)
+                        if set_brownout is not None:
+                            set_brownout(decision.brownout)
                         k = min(decision.k, self._mk["hops_per_step"])
                         stepped += pool.dispatch(max_hops=k)
                     launched.append((i, pool))
                 except Exception:
+                    # dispatch is admission-time: nothing was consumed, so
+                    # a breaker below threshold may retry next pump
                     self._pump_failure(i)
             if stepped == 0:
                 break
             ready = []
             for i, pool in launched:
+                tw = time.perf_counter()  # per-shard wait clock: one wedged
+                # shard must not condemn the shards waited on after it
                 try:
+                    if self._faults is not None:
+                        stall = self._faults.stall(f"shard{i}")
+                        if stall:
+                            time.sleep(stall)  # injected wedged device queue
                     pool.wait_ready()
-                    ready.append((i, pool))
                 except Exception:
-                    self._pump_failure(i)
+                    self._pump_failure(i, force=True)
+                    continue
+                if (
+                    self._watchdog is not None
+                    and time.perf_counter() - tw > self._watchdog
+                ):
+                    # the step finished (wait_ready returned) but blew the
+                    # round budget: fail the shard over bit-exactly rather
+                    # than let one wedged queue cap the fleet's round rate
+                    self.watchdog_failovers += 1
+                    self._pump_failure(i, force=True)
+                    continue
+                ready.append((i, pool))
             share = (time.perf_counter() - t0) / stepped
             for i, pool in ready:
                 try:
                     pool.collect(proc_share=share)
+                    self._breaker_success(i)
                 except Exception:
-                    self._pump_failure(i)
+                    self._pump_failure(i, force=True)
             rounds += 1
         if self.elastic and not self._adaptive:
             # legacy watermark heartbeat; adaptive fleets shrink through the
             # scheduler's cost-modeled decisions instead
             for _, pool in self._live():
                 pool.try_shrink()
+        self._harvest_quarantined()
         return rounds
 
     # -- shard health: fault injection, heartbeats, failover ----------------
@@ -745,6 +858,7 @@ class ShardedSessionPool:
         self._dead.add(shard)
         self._corpses[shard] = None if lose_state else corpse
         self._pending_failover.add(shard)
+        self._breaker[shard] = "open"  # admin kill: open, but not a trip
 
     def restart_shard(self, shard: int) -> None:
         """Bring a dead shard back with a FRESH pool (empty, zeroed state).
@@ -768,6 +882,14 @@ class ShardedSessionPool:
         self._pending_failover.discard(shard)
         self._corpses.pop(shard, None)
         self.shard_generations[shard] += 1
+        # re-arm the breaker: HALF-OPEN, so the restarted generation must
+        # pass one probe/collect before it is trusted again (a breaker-less
+        # fabric just goes straight back to closed)
+        self._breaker_streak[shard] = 0
+        self._suspect.discard(shard)
+        self._breaker[shard] = (
+            "half_open" if self._breaker_threshold is not None else "closed"
+        )
         if self._durability is not None:
             # the fresh shard brings capacity back: drain every lost session
             # with durable state through snapshot+journal recovery — the
@@ -794,27 +916,66 @@ class ShardedSessionPool:
         for i, pool in self._live():
             try:
                 pool.shard_stats()
+                self._breaker_success(i)  # half-open probe passed: close
             except Exception:
-                corpse = pool
-                self._pools[i] = _DownShard(i)
-                self._dead.add(i)
-                self._corpses[i] = corpse
-                self._pending_failover.add(i)
-                failed.append(i)
+                # a probe failure means the shard WRAPPER is broken — no
+                # transient grace, regardless of breaker threshold
+                if self._shard_failure(i, force=True):
+                    failed.append(i)
         self._failover_pending()
+        self._harvest_quarantined()
         return failed
 
-    def _pump_failure(self, shard: int) -> None:
-        """A live shard raised mid-pump: record, mark down, re-home now."""
+    @property
+    def open_breakers(self) -> int:
+        """Shards whose circuit breaker is currently open."""
+        return sum(1 for s in self._breaker if s == "open")
+
+    def _breaker_success(self, shard: int) -> None:
+        """A successful collect/probe: reset the streak, close a half-open
+        breaker (the probe it was waiting for)."""
+        self._breaker_streak[shard] = 0
+        if self._breaker[shard] == "half_open":
+            self._breaker[shard] = "closed"
+
+    def _shard_failure(self, shard: int, *, force: bool = False) -> bool:
+        """One failure against shard ``shard``: trip the breaker or not.
+
+        Returns True when the shard was taken down (breaker opened — caller
+        runs failover); False when the failure stays transient (below the
+        closed breaker's threshold): the shard is only marked *suspect*,
+        which skips it for the remainder of the current pump. Transient
+        treatment is safe exactly because it is only applied to
+        admission-time failures (dispatch raises before consuming input).
+        """
+        if self._breaker_threshold is None:
+            force = True  # legacy fail-fast fabric: first failure kills
+        self._breaker_streak[shard] += 1
+        if (
+            not force
+            and self._breaker[shard] == "closed"
+            and self._breaker_streak[shard] < self._breaker_threshold
+        ):
+            self._suspect.add(shard)
+            return False
+        # threshold reached, half-open probe failed, or forced: open + kill
+        self._breaker[shard] = "open"
+        self.breaker_opens += 1
         corpse = self._pools[shard]
         self._pools[shard] = _DownShard(shard)
         self._dead.add(shard)
-        # host wrapper survived the device fault — per-session export below
-        # decides what is still recoverable
+        # host wrapper survived the device fault — per-session export in
+        # failover decides what is still recoverable
         self._corpses[shard] = corpse
-        self._pump_failures[shard] += 1
         self._pending_failover.add(shard)
-        self._failover(shard)
+        return True
+
+    def _pump_failure(self, shard: int, *, force: bool = False) -> None:
+        """A live shard raised mid-pump: record; kill + re-home when the
+        breaker trips (always, with no ``breaker_threshold``)."""
+        self._pump_failures[shard] += 1
+        if self._shard_failure(shard, force=force):
+            self._failover(shard)
 
     def _failover_pending(self) -> None:
         """Re-home the residents of every dead shard not yet failed over."""
@@ -838,12 +999,21 @@ class ShardedSessionPool:
         residents = [h for h in self._sessions.values() if h.shard == shard]
         moved = lost = 0
         for handle in residents:
+            # quarantined in the same pump the shard died: the poison
+            # verdict outlives the shard — adopt the record instead of
+            # counting the session lost (checked again after a failed
+            # export, because export's collect-in-flight is itself a
+            # finite-guard site and may quarantine this very session)
+            if corpse is not None and self._adopt_poisoned(handle, corpse):
+                continue
             blob = None
             if corpse is not None:
                 try:
                     blob = encode_ticket(corpse.export_session(handle.inner))
                 except Exception:
                     blob = None  # this session's state died with the fault
+                if blob is None and self._adopt_poisoned(handle, corpse):
+                    continue
             dst = self._failover_destination(handle.session_id) if blob else None
             if blob is None or dst is None:
                 lost += 1
@@ -876,9 +1046,99 @@ class ShardedSessionPool:
         free, dst = max(frees)
         return dst if free > 0 else None
 
+    # -- fault containment: quarantine harvest, brownout ---------------------
+
+    def _adopt_poisoned(self, handle: "ShardedSession", corpse) -> bool:
+        """Adopt a dead shard's quarantine record for ``handle``, if any.
+
+        Mirrors ``_harvest_quarantined`` for the corpse of a shard that
+        died in the same pump that poisoned the session: re-key by client
+        id, release the durable journal (files kept), record the session
+        as quarantined rather than lost. Returns True when adopted.
+        """
+        rec = getattr(corpse, "quarantined", {}).get(handle.inner.sid)
+        if rec is None or rec.session is not handle.inner:
+            return False
+        del self._sessions[handle.session_id]
+        did = None
+        if self._durability is not None:
+            did = str(handle.session_id)
+            self._durability.release(did)  # keep files: recovery
+        self.quarantined[handle.session_id] = dataclasses.replace(
+            rec, session=handle, durable_id=did
+        )
+        self.sessions_quarantined += 1
+        return True
+
+    def _harvest_quarantined(self) -> None:
+        """Pull fresh pool-level quarantine records up to the router.
+
+        The shard pool already detached the poisoned session and suppressed
+        its non-finite output; here the router re-keys the record by the
+        CLIENT's session id, drops the live handle, and releases the durable
+        journal (files kept) so ``attach`` of the same id can roll the
+        stream back to its last finite state.
+        """
+        for i, pool in self._live():
+            take = getattr(pool, "take_quarantined", None)
+            if take is None:
+                continue
+            for rec in take():
+                handle = None
+                for h in self._sessions.values():
+                    if h.shard == i and h.inner is rec.session:
+                        handle = h
+                        break
+                if handle is None:
+                    continue
+                del self._sessions[handle.session_id]
+                did = None
+                if self._durability is not None:
+                    did = str(handle.session_id)
+                    self._durability.release(did)  # keep files: recovery
+                self.quarantined[handle.session_id] = dataclasses.replace(
+                    rec, session=handle, durable_id=did
+                )
+                self.sessions_quarantined += 1
+
+    def clear_quarantined(self, session_id: Optional[Hashable] = None) -> None:
+        """Forget quarantine record(s) without recovering them."""
+        if session_id is None:
+            self.quarantined.clear()
+        else:
+            self.quarantined.pop(session_id, None)
+
+    def set_brownout(self, level: int) -> None:
+        """Force every live shard onto one degradation-ladder rung (see
+        ``SessionPool.set_brownout``; adaptive fleets walk the ladder
+        per-shard through their controllers instead)."""
+        for _, pool in self._live():
+            setter = getattr(pool, "set_brownout", None)
+            if setter is not None:
+                setter(level)
+
+    def read_degraded(self, sess) -> Tuple[np.ndarray, bool]:
+        """``read`` plus the brownout passthrough flag for the popped audio
+        (True only when brownout level 3 produced any of it)."""
+        handle = self._resolve(sess)
+        pool = self._pools[handle.shard]
+        reader = getattr(pool, "read_degraded", None)
+        if reader is None:
+            return self.read(handle), False
+        out, degraded = reader(handle.inner)
+        if out.size and self._durability is not None:
+            self._durability.record_read(
+                str(handle.session_id), handle.inner.stats.samples_out
+            )
+        return out, degraded
+
     # -- durable recovery (snapshot + journal + replay) ----------------------
 
-    def _recover_one(self, session_id: Hashable) -> ShardedSession:
+    def _recover_one(
+        self,
+        session_id: Hashable,
+        max_feed_samples: Optional[int] = None,
+    ) -> ShardedSession:
         """Rebuild one durable session on a live shard, bit-exactly.
 
         Destination is the ring home (walking around dead shards), falling
@@ -898,7 +1158,12 @@ class ShardedSessionPool:
                 f"a free slot (active={self.num_active}, "
                 f"capacity={self.max_capacity})"
             )
-        inner = recover_session(self._pools[dst], self._durability, str(session_id))
+        inner = recover_session(
+            self._pools[dst],
+            self._durability,
+            str(session_id),
+            max_feed_samples=max_feed_samples,
+        )
         handle = ShardedSession(session_id=session_id, shard=dst, inner=inner)
         self._sessions[session_id] = handle
         try:
@@ -934,7 +1199,13 @@ class ShardedSessionPool:
             session_ids = self._durability.list_sessions()
         recovered: List[ShardedSession] = []
         for sid in session_ids:
-            if sid in self._sessions or not self._durability.has(sid):
+            # a quarantined id is deliberately NOT swept back in: its journal
+            # tail is the poison — only an explicit attach() rolls it back
+            if (
+                sid in self._sessions
+                or sid in self.quarantined
+                or not self._durability.has(sid)
+            ):
                 continue
             try:
                 recovered.append(self._recover_one(sid))
@@ -954,7 +1225,12 @@ class ShardedSessionPool:
           ``pump_all`` skip-don't-raise path),
         - ``shard_failovers`` — completed failovers of this index,
         - ``sessions_failed_over`` / ``sessions_lost`` — fleet totals
-          (repeated on each entry for one-stop scraping).
+          (repeated on each entry for one-stop scraping),
+        - ``breaker`` / ``breaker_streak`` — this shard's circuit-breaker
+          state and consecutive-failure count,
+        - ``breaker_opens`` / ``watchdog_failovers`` /
+          ``sessions_quarantined`` — fleet containment totals (repeated on
+          each entry).
         """
         out = []
         for i, p in enumerate(self._pools):
@@ -965,16 +1241,22 @@ class ShardedSessionPool:
                     "backend": self._mk["backend"],
                     "hops_per_step": self._mk["hops_per_step"],
                     "alive": False,
+                    "quarantined": 0, "brownout": 0, "brownout_hops": 0,
                 }
             else:
                 s = dict(p.shard_stats())
                 s["alive"] = True
             s["pump_failures"] = self._pump_failures[i]
             s["shard_failovers"] = self._failover_counts[i]
+            s["breaker"] = self._breaker[i]
+            s["breaker_streak"] = self._breaker_streak[i]
             s["sessions_failed_over"] = self.sessions_failed_over
             s["sessions_lost"] = self.sessions_lost
             s["sessions_recovered"] = self.sessions_recovered
             s["lost_ids_tracked"] = len(self.lost_session_ids)
+            s["breaker_opens"] = self.breaker_opens
+            s["watchdog_failovers"] = self.watchdog_failovers
+            s["sessions_quarantined"] = self.sessions_quarantined
             if self._scheds[i] is not None:
                 s["scheduler"] = self._scheds[i].stats()
             out.append(s)

@@ -144,6 +144,44 @@ def hop_synthesis(
     return new_state, out
 
 
+def hop_passthrough(
+    state: StreamState,
+    hop_samples: jax.Array,
+    cfg: tft_mod.TFTConfig,
+) -> Tuple[StreamState, jax.Array]:
+    """Model-free identity hop: analysis -> synthesis with a unit mask.
+
+    The graceful-brownout floor. Runs the exact analysis front half and the
+    exact weighted-OLA back half of ``stream_hop`` but skips the TFTNN
+    entirely (``est = spec``), so under terminal overload the server keeps
+    emitting *unenhanced* — but real-time, finite, correctly windowed —
+    audio instead of going silent. The model's recurrent state is carried
+    through untouched: when the brownout lifts, enhancement resumes from
+    whatever recurrent context the stream had (same contract as an inactive
+    masked slot).
+
+    Signature-compatible with ``stream_hop``'s hop core, so
+    ``make_stream_hop(..., passthrough=True)`` reuses the identical
+    masking / fused-scan / ingestion-ring plumbing.
+    """
+    n_fft, hop = cfg.n_fft, cfg.hop
+    analysis, frame_ri = hop_analysis(state, hop_samples, cfg)
+    w = hann(n_fft, frame_ri.dtype)
+    est = frame_ri[..., 0] + 1j * frame_ri[..., 1]
+    y = jnp.fft.irfft(est, n=n_fft, axis=-1) * w
+
+    synthesis = state.synthesis + y
+    wsum = state.wsum + (w * w)[None, :]
+    out = synthesis[:, :hop] / jnp.maximum(wsum[:, :hop], 1e-8)
+    new_state = StreamState(
+        analysis=analysis,
+        synthesis=jnp.concatenate([synthesis[:, hop:], jnp.zeros_like(synthesis[:, :hop])], axis=1),
+        wsum=jnp.concatenate([wsum[:, hop:], jnp.zeros_like(wsum[:, :hop])], axis=1),
+        model=state.model,
+    )
+    return new_state, out
+
+
 def stream_hop(
     params: Pytree,
     cfg: tft_mod.TFTConfig,
@@ -195,6 +233,7 @@ def make_stream_hop(
     max_hops_per_step: int = 1,
     from_ring: Optional[int] = None,
     prune_meta: Optional[dict] = None,
+    passthrough: bool = False,
 ) -> Callable[..., Tuple[StreamState, jax.Array]]:
     """Build the jit-compiled batched hop step shared by server and benchmarks.
 
@@ -273,6 +312,12 @@ def make_stream_hop(
     ``sparsity`` report and per-weight ``skip_stats`` when pruning is
     active — how ``SessionPool.shard_stats()`` gets its skip-rate counters
     without recompiling anything.
+
+    ``passthrough=True`` builds the graceful-brownout step instead: the
+    model-free ``hop_passthrough`` identity hop behind the identical
+    masking / fused-scan / ring plumbing. ``quant`` and the pruning knobs
+    are ignored (there is no model to quantize or prune) and ``backend``
+    only needs to be valid — both backends share the pure-jnp passthrough.
     """
     if max_hops_per_step < 1:
         raise ValueError("max_hops_per_step must be >= 1")
@@ -283,10 +328,19 @@ def make_stream_hop(
         )
     if backend not in ("xla", "pallas"):
         raise ValueError(f"unknown backend {backend!r}: expected 'xla' or 'pallas'")
+    if passthrough:
+        # brownout floor: model-free analysis->synthesis identity hop. No
+        # deploy plan, no weight quantization — there is no model to quantize
+        # or prune — but the masking / fused-scan / ring plumbing below is
+        # shared verbatim, so parking, K>1 fusion, and the ingestion-ring
+        # dispatch all keep working at brownout level 3.
+        def hop(state: StreamState, hops: jax.Array):
+            return hop_passthrough(state, hops, cfg)
+
     # an EXPLICIT prune_keep (even 1.0) routes xla through the deploy plan:
     # keep=1.0 is the "dense, same folded graph" baseline the pruning Pareto
     # divides by, so it must share the sparse points' compilation path
-    if backend == "pallas" or prune_keep is not None:
+    elif backend == "pallas" or prune_keep is not None:
         from repro.serve.deploy import build_deploy_plan, stream_hop_fused
 
         plan = build_deploy_plan(

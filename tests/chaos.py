@@ -29,6 +29,13 @@ Three entry points:
   frame, a mid-byte-corrupted newest snapshot) between incarnations.
   Clients reconnect to the new incarnation with the same session ids and
   every stream must still finish bit-exactly.
+- ``run_chaos_faults(pool, audios, reference, plan=..., storm=...)`` — the
+  compute-plane leg: a seeded ``FaultPlan`` storms the pool mid-stream
+  (injected step crashes, NaN poison, shard stalls), then disarms. Poisoned
+  sessions must be quarantined (never one non-finite sample delivered) and,
+  with durability, recover their pre-poison state on re-attach; breakers
+  opened by the storm must close after ``restart_shard``; and EVERY
+  session — bystander or recovered — must still finish bit-exactly.
 """
 
 from __future__ import annotations
@@ -221,6 +228,177 @@ def run_chaos(
         kills=kills,
         restarts=restarts,
         drops=0,
+    )
+    _verify(result, audios, reference, hop, pool)
+    return result
+
+
+def run_chaos_faults(
+    pool,
+    audios: Dict[str, np.ndarray],
+    reference: Callable[[np.ndarray], np.ndarray],
+    *,
+    plan,
+    storm: Dict[str, float],
+    seed: int = 0,
+    warm_rounds: int = 4,
+    storm_rounds: int = 10,
+    cool_rounds: int = 4,
+    drain_rounds: int = 200,
+) -> ChaosResult:
+    """Storm the compute plane with a ``FaultPlan``, then prove recovery.
+
+    Three phases over one ``ShardedSessionPool`` built with
+    ``faults=plan`` (and, for the full contract, ``finite_guard=True``,
+    a ``breaker_threshold``, a ``watchdog_seconds`` and a durability
+    manager):
+
+    1. **warm** — the plan is disarmed; sessions stream normally.
+    2. **storm** — the ``storm`` dict's rates are written onto the plan
+       (``step_error_rate``/``poison_rate``/``stall_rate``/...); pumps keep
+       running bare: every injected fault must be contained, never raised
+       out of ``pump_all``. Sessions that raise ``SessionPoisonedError``
+       are marked poisoned and left quarantined until the storm ends.
+    3. **heal** — rates back to zero, dead shards restarted (breakers must
+       end CLOSED after the health-check probe), every poisoned id
+       re-attached: with durability the stream is rolled back to
+       ``good_samples_in`` and the harness rewinds its feed cursor to
+       match; without, it restarts from scratch.
+
+    The closing assertions: no session ever received a non-finite sample;
+    the poisoned set exactly matches the pool's quarantine record; and
+    every session's total output — bystanders through failovers, poisoned
+    ones through rollback — is bit-identical to the fault-free reference.
+
+    Returns:
+        ``ChaosResult`` with extra keys ``poisoned`` (sids quarantined
+        mid-storm) and ``recovered`` (sid -> rewind point in samples).
+    """
+    from repro.serve import SessionPoisonedError
+
+    rnd = random.Random(seed)
+    hop = pool.cfg.hop
+    checker = SoakChecker()
+    handles = {sid: pool.attach(sid) for sid in audios}
+    pos = {sid: 0 for sid in audios}
+    outputs = {sid: [] for sid in audios}
+    poisoned: set = set()
+    recovered: Dict[str, int] = {}
+
+    def _arm(on: bool) -> None:
+        for name, value in storm.items():
+            if name.endswith("_rate"):
+                setattr(plan, name, value if on else 0.0)
+            else:  # durations/bounds (e.g. stall_seconds) stay as given
+                setattr(plan, name, value)
+
+    def _feed(sid, chunk) -> bool:
+        try:
+            pool.feed(handles[sid], chunk)
+            return True
+        except SessionPoisonedError:
+            poisoned.add(sid)
+            return False
+
+    def _collect(sid) -> None:
+        try:
+            chunk = pool.read(handles[sid])
+        except SessionPoisonedError:
+            poisoned.add(sid)
+            return
+        if chunk.size:
+            assert np.isfinite(chunk).all(), (
+                f"{sid}: non-finite audio escaped the finite guard"
+            )
+            outputs[sid].append(chunk)
+
+    _arm(False)
+    total_rounds = warm_rounds + storm_rounds + cool_rounds
+    for r in range(total_rounds):
+        if r == warm_rounds:
+            _arm(True)
+        if r == warm_rounds + storm_rounds:
+            _arm(False)
+        for sid in audios:
+            if sid in poisoned or pos[sid] >= audios[sid].size:
+                continue
+            n = rnd.randrange(0, _MAX_CHUNK_HOPS * hop + 1)
+            chunk = audios[sid][pos[sid] : pos[sid] + n]
+            if _feed(sid, chunk):
+                pos[sid] += chunk.size
+        pool.pump_all()  # contained: a storm must never crash the pump
+        for sid in audios:
+            if sid not in poisoned:
+                _collect(sid)
+        checker.check(pool)
+
+    # -- heal: restart dead shards, close breakers, recover the poisoned --
+    _arm(False)
+    for shard in list(pool.dead_shards):
+        pool.restart_shard(shard)
+    pool.check_shards()  # half-open breakers probe back to closed
+    if getattr(pool, "_breaker_threshold", None) is not None:
+        for s in pool.shard_stats():
+            assert s.get("breaker") == "closed", (
+                f"shard {s['shard']}: breaker {s.get('breaker')!r} after "
+                "restart + probe — the breaker never re-closed"
+            )
+    assert poisoned == set(pool.quarantined), (
+        f"quarantine mismatch: harness saw {sorted(poisoned)}, pool holds "
+        f"{sorted(pool.quarantined)}"
+    )
+    durable = getattr(pool, "_durability", None)
+    for sid in sorted(poisoned):
+        rec = pool.quarantined[sid]
+        assert rec.good_samples_in == rec.good_hops * hop
+        handles[sid] = pool.attach(sid)
+        if durable is not None and durable.has(sid):
+            # rolled back to the last finite feed: rewind and re-feed from
+            # there; everything already read stays valid (the replayed
+            # stream resumes at the journal's READ cursor)
+            pos[sid] = rec.good_samples_in
+            recovered[sid] = rec.good_samples_in
+        else:  # nothing on disk: a fresh stream from sample zero
+            pos[sid] = 0
+            outputs[sid] = []
+    assert not pool.quarantined, "attach() must drain the quarantine set"
+
+    # -- flush: finish every schedule and drain the tails ------------------
+    for sid in audios:
+        if pos[sid] < audios[sid].size:
+            pool.feed(handles[sid], audios[sid][pos[sid] :])
+            pos[sid] = audios[sid].size
+    for _ in range(drain_rounds):
+        pool.pump_all()
+        for sid in audios:
+            _collect(sid)
+        checker.check(pool)
+        if all(
+            sum(c.size for c in outputs[sid]) >= _expected_out(audios[sid], hop)
+            for sid in audios
+        ):
+            break
+    for sid in audios:
+        tail = pool.detach(handles[sid])
+        if tail.size:
+            assert np.isfinite(tail).all(), f"{sid}: non-finite tail"
+            outputs[sid].append(tail)
+
+    result = ChaosResult(
+        outputs={
+            sid: (
+                np.concatenate(chunks)
+                if chunks
+                else np.zeros((0,), np.float32)
+            )
+            for sid, chunks in outputs.items()
+        },
+        lost=set(),
+        kills=pool.breaker_opens + pool.watchdog_failovers,
+        restarts=0,
+        drops=0,
+        poisoned=poisoned,
+        recovered=recovered,
     )
     _verify(result, audios, reference, hop, pool)
     return result

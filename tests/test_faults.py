@@ -1,0 +1,485 @@
+"""Fault-containment tests: the injectable fault plane and everything that
+contains what it injects.
+
+Four containment layers, each pinned by deterministic injection
+(``FaultPlan`` — same seed, same schedule) and then composed in the chaos
+matrix at the bottom:
+
+- **finite-guard quarantine** — a poisoned slot (NaN in output or carried
+  state) is detached into quarantine with a typed ``SessionPoisonedError``;
+  bystander slots in the SAME batched step stream on bit-exactly, and with
+  durability the poisoned stream recovers its pre-poison state on
+  re-attach (journal replay capped at ``good_samples_in``).
+- **circuit breakers** — a transient dispatch failure below the threshold
+  marks the shard suspect (skip this pump, retry next) instead of killing
+  it; consecutive failures trip the breaker (kill + bit-exact failover);
+  ``restart_shard`` re-arms half-open and a health-check probe closes it.
+- **step watchdog** — a stalled shard is failed over after the wall-clock
+  bound, exactly once per stall, without touching innocent shards.
+- **graceful brownout** — sustained overload (or open breakers) walks the
+  scheduler's degradation ladder: K clamped, low-backlog sessions parked,
+  finally analysis/synthesis passthrough tagged ``degraded``.
+
+The closing ``run_chaos_faults`` matrix is the acceptance property: under
+a seeded storm of step crashes + poison + stalls, across backends x
+inflight x fused K, every bystander stream is bit-identical to a
+fault-free reference, every poisoned stream recovers via durability, and
+every breaker ends closed.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import tftnn as tft
+from repro.serve import (
+    DurabilityManager,
+    FaultPlan,
+    InjectedFaultError,
+    SchedulerConfig,
+    SchedulerObservation,
+    SchedulerState,
+    SessionPoisonedError,
+    SessionPool,
+    ShardedSessionPool,
+    decide,
+    recover_session,
+)
+from chaos import run_chaos_faults
+
+
+def small_cfg() -> tft.TFTConfig:
+    return dataclasses.replace(
+        tft.tftnn_config(),
+        n_fft=64,
+        hop=16,
+        freq_bins=32,
+        channels=8,
+        att_dim=8,
+        num_heads=2,
+        gru_hidden=8,
+        dilation_rates=(1, 2),
+    )
+
+
+CFG = small_cfg()
+PARAMS = tft.init_tft(jax.random.PRNGKey(0), CFG)
+HOP = CFG.hop
+
+
+def _audio(seed: int, hops: int) -> np.ndarray:
+    return np.asarray(
+        0.3 * jax.random.normal(jax.random.PRNGKey(seed), (hops * HOP,)),
+        np.float32,
+    )
+
+
+def _reference(audio: np.ndarray, backend: str = "xla") -> np.ndarray:
+    pool = SessionPool(PARAMS, CFG, capacity=3, backend=backend)
+    s = pool.attach()
+    pool.feed(s, audio)
+    pool.pump()
+    return pool.detach(s)
+
+
+# -- the fault plane itself -------------------------------------------------
+
+
+def test_fault_plan_deterministic_and_bounded():
+    """Same seed + same call sequence = the identical schedule; bounds cap
+    each fault class; a different seed diverges."""
+
+    def drive(plan):
+        out = []
+        for r in range(40):
+            out.append(plan.step_error("pool"))
+            inj = plan.poison_slots("pool", [0, 1, 2])
+            out.append((inj.poison_out, inj.poison_state))
+            out.append(plan.stall("shard0"))
+            out.append(plan.corrupt_frame(0x02, b"\x00" * 8))
+        return out
+
+    kw = dict(
+        step_error_rate=0.2,
+        poison_rate=0.1,
+        poison_state_rate=0.1,
+        stall_rate=0.2,
+        stall_seconds=0.01,
+        corrupt_rate=0.3,
+        max_poisons=3,
+        max_step_errors=4,
+        max_stalls=2,
+        max_corruptions=5,
+    )
+    a, b = FaultPlan(7, **kw), FaultPlan(7, **kw)
+    assert drive(a) == drive(b)
+    assert a.injected == b.injected
+    assert a.log == b.log
+    assert a.injected["poisoned_out"] + a.injected["poisoned_state"] <= 3
+    assert a.injected["step_errors"] <= 4
+    assert a.injected["stalls"] <= 2
+    assert a.injected["corrupt_frames"] <= 5
+    assert sum(a.injected.values()) > 0, "rates this high must inject"
+    c = FaultPlan(8, **kw)
+    assert drive(c) != drive(a), "a different seed must reschedule"
+    with pytest.raises(ValueError):
+        FaultPlan(0, step_error_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(0, max_poisons=-1)
+
+
+def test_injected_step_error_is_admission_time():
+    """An injected dispatch crash consumes nothing: the retry replays the
+    exact same hops and the stream stays bit-exact."""
+    plan = FaultPlan(1, step_error_rate=1.0, max_step_errors=1)
+    pool = SessionPool(PARAMS, CFG, capacity=2, faults=plan)
+    audio = _audio(5, 6)
+    s = pool.attach()
+    pool.feed(s, audio)
+    with pytest.raises(InjectedFaultError):
+        pool.pump()
+    assert s.stats.hops == 0 and s.stats.samples_in == audio.size
+    pool.pump()  # budget exhausted: the same backlog drains cleanly
+    assert np.array_equal(pool.detach(s), _reference(audio))
+    assert plan.injected["step_errors"] == 1
+
+
+# -- finite-guard quarantine ------------------------------------------------
+
+
+def test_quarantine_poisoned_slot_bystanders_bit_exact():
+    """One poisoned slot is quarantined; the OTHER slot of the same batched
+    step never sees a bad sample and finishes bit-identical."""
+    plan = FaultPlan(3, max_poisons=1)
+    pool = SessionPool(PARAMS, CFG, capacity=2, finite_guard=True, faults=plan)
+    a, b = pool.attach(), pool.attach()
+    audio_a, audio_b = _audio(11, 6), _audio(12, 6)
+    pool.feed(a, audio_a[: 2 * HOP])
+    pool.feed(b, audio_b[: 2 * HOP])
+    pool.pump()
+    got_b = [pool.read(b)]
+    plan.poison_rate = 1.0  # next dispatch poisons (bounded to ONE slot)
+    pool.feed(a, audio_a[2 * HOP :])
+    pool.feed(b, audio_b[2 * HOP :])
+    pool.pump()
+    plan.poison_rate = 0.0
+    poisoned = {rec.sid for rec in pool.quarantined.values()}
+    assert len(poisoned) == 1
+    assert plan.injected["poisoned_out"] == 1
+    victim, bystander = (a, b) if a.sid in poisoned else (b, a)
+    with pytest.raises(SessionPoisonedError) as ei:
+        pool.read(victim)
+    assert ei.value.good_hops == 2
+    assert ei.value.good_samples_in == 2 * HOP
+    # the bystander drains bit-exactly — same steps, untouched lanes
+    pool.pump()
+    got = got_b if bystander is b else []
+    ref = audio_b if bystander is b else audio_a
+    got.append(pool.detach(bystander))
+    out = np.concatenate([c for c in got if c.size])
+    assert np.isfinite(out).all()
+    assert np.array_equal(out, _reference(ref))
+    rec = pool.take_quarantined()[0]
+    assert rec.good_hops == 2 and rec.message
+    assert pool.take_quarantined() == [], "fresh-events queue drains once"
+    assert pool.quarantined_count == 1
+    pool.clear_quarantined(rec.sid)
+    assert not pool.quarantined
+
+
+def test_quarantine_recovers_pre_poison_state(tmp_path):
+    """The durability seam: a quarantined stream re-attaches rolled back to
+    its last finite feed and then finishes bit-identical to a run that was
+    never poisoned."""
+    plan = FaultPlan(4)
+    manager = DurabilityManager(tmp_path, snapshot_every=2)
+    sp = ShardedSessionPool(
+        PARAMS, CFG, 3, shards=2, finite_guard=True, faults=plan,
+        durability=manager,
+    )
+    audio = _audio(21, 8)
+    h = sp.attach("victim")
+    sp.feed(h, audio[: 4 * HOP])
+    sp.pump_all()
+    first = sp.read(h)
+    plan.poison_rate = 1.0
+    sp.feed(h, audio[4 * HOP : 6 * HOP])
+    sp.pump_all()
+    plan.poison_rate = 0.0
+    assert "victim" in sp.quarantined
+    assert sp.sessions_quarantined == 1
+    rec = sp.quarantined["victim"]
+    assert rec.good_hops == 4 and rec.good_samples_in == 4 * HOP
+    with pytest.raises(SessionPoisonedError, match="victim"):
+        sp.feed(h, audio[6 * HOP :])
+    # a recovery sweep must NOT resurrect the poisoned journal tail
+    assert sp.recover_sessions() == []
+    assert "victim" in sp.quarantined
+    # explicit re-attach rolls back to the pre-poison feed...
+    h2 = sp.attach("victim")
+    assert not sp.quarantined
+    assert h2.stats.samples_in == 4 * HOP
+    # ...and the stream finishes bit-exactly from there
+    sp.feed(h2, audio[4 * HOP :])
+    sp.pump_all()
+    out = np.concatenate([first, sp.detach(h2)])
+    assert np.isfinite(out).all()
+    assert np.array_equal(out, _reference(audio))
+
+
+def test_quarantine_without_durability_restarts_fresh():
+    """No disk to roll back to: re-attach of a quarantined id grants a
+    fresh stream under the same id instead of failing forever."""
+    plan = FaultPlan(5, poison_state_rate=1.0, max_poisons=1)
+    sp = ShardedSessionPool(PARAMS, CFG, 2, shards=2, finite_guard=True,
+                            faults=plan)
+    h = sp.attach("u")
+    sp.feed(h, _audio(31, 2))
+    sp.pump_all()
+    assert "u" in sp.quarantined
+    assert plan.injected["poisoned_state"] == 1
+    h2 = sp.attach("u")
+    audio = _audio(32, 4)
+    sp.feed(h2, audio)
+    sp.pump_all()
+    assert np.array_equal(sp.detach(h2), _reference(audio))
+
+
+def test_pool_recover_session_caps_replay_at_poison(tmp_path):
+    """``recover_session(max_feed_samples=...)`` skips snapshot generations
+    past the cap and truncates journal replay at it."""
+    # keep enough generations that one predates the poison point — the
+    # rollback can only reach as far back as the retained chain
+    manager = DurabilityManager(tmp_path, snapshot_every=2, keep=4)
+    pool = SessionPool(PARAMS, CFG, capacity=2, durability=manager)
+    audio = _audio(41, 8)
+    s = pool.attach(durable_id="cap")
+    for i in range(8):  # hop-at-a-time: snapshots land at hops 2, 4, 6, 8
+        pool.feed(s, audio[i * HOP : (i + 1) * HOP])
+        pool.pump()
+    del pool  # crash
+    man2 = DurabilityManager(tmp_path, snapshot_every=2, keep=4)
+    pool2 = SessionPool(PARAMS, CFG, capacity=2, durability=man2)
+    h = recover_session(pool2, man2, "cap", max_feed_samples=5 * HOP)
+    assert h.stats.samples_in == 5 * HOP, (
+        "the hop-6 and hop-8 snapshots are past the cap and must be skipped"
+    )
+    pool2.pump()
+    out = pool2.read(h)
+    assert np.array_equal(out, _reference(audio)[: 5 * HOP])
+
+
+# -- circuit breakers + watchdog --------------------------------------------
+
+
+def test_breaker_transient_suspect_then_trip_then_probe_closed():
+    """The full breaker lifecycle on one shard: suspect (no kill) under the
+    threshold, open on consecutive failures, half-open on restart, closed
+    by the health-check probe."""
+    plan = FaultPlan(6, step_error_rate=1.0, max_step_errors=1)
+    sp = ShardedSessionPool(PARAMS, CFG, 3, shards=2, faults=plan,
+                            breaker_threshold=2)
+    # pin the session to shard 0: the round's FIRST dispatch draws the one
+    # injected error, so it must land on the session's home shard
+    sid, i = None, 0
+    while sid is None:
+        sid = f"s{i}" if sp.route(f"s{i}") == 0 else None
+        i += 1
+    audio = _audio(51, 6)
+    h = sp.attach(sid)
+    shard = h.shard
+    assert shard == 0
+    sp.feed(h, audio[: 3 * HOP])
+    sp.pump_all()  # one injected dispatch error: suspect, NOT dead
+    assert sp.dead_shards == []
+    stats = sp.shard_stats()[shard]
+    assert stats["breaker"] == "closed" and stats["breaker_streak"] == 1
+    assert stats["pump_failures"] == 1 and stats["breaker_opens"] == 0
+    sp.pump_all()  # budget spent: success resets the streak
+    assert sp.shard_stats()[shard]["breaker_streak"] == 0
+    # now a persistent failure with fresh backlog queued: two consecutive
+    # failed pumps trip the breaker
+    sp.feed(h, audio[3 * HOP :])
+    sp._pools[shard].dispatch = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("persistent device fault")
+    )
+    sp.pump_all()
+    assert sp.dead_shards == []
+    sp.pump_all()
+    assert sp.dead_shards == [shard]
+    stats = sp.shard_stats()[shard]
+    assert stats["breaker"] == "open" and stats["breaker_opens"] == 1
+    assert sp.open_breakers == 1
+    assert sp.sessions_failed_over >= 1  # residents re-homed bit-exactly
+    sp.restart_shard(shard)
+    assert sp.shard_stats()[shard]["breaker"] == "half_open"
+    sp.check_shards()  # the probe is the half-open trial call
+    assert sp.shard_stats()[shard]["breaker"] == "closed"
+    assert sp.open_breakers == 0
+    sp.pump_all()
+    assert np.array_equal(sp.detach(h), _reference(audio))
+
+
+def test_watchdog_fails_over_only_the_stalled_shard():
+    """An injected stall past the watchdog bound kills exactly the stalled
+    shard; its sessions finish bit-exactly elsewhere."""
+    plan = FaultPlan(7, stall_rate=1.0, stall_seconds=0.25, max_stalls=1)
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2, faults=plan,
+                            watchdog_seconds=0.05)
+    audios = {f"w{i}": _audio(60 + i, 5) for i in range(3)}
+    handles = {sid: sp.attach(sid) for sid in audios}
+    for sid, audio in audios.items():
+        sp.feed(handles[sid], audio)
+    sp.pump_all()
+    assert sp.watchdog_failovers == 1
+    assert len(sp.dead_shards) == 1
+    assert plan.injected["stalls"] == 1
+    sp.pump_all()
+    for sid, audio in audios.items():
+        assert np.array_equal(sp.detach(handles[sid]), _reference(audio)), sid
+
+
+# -- graceful brownout ------------------------------------------------------
+
+
+def test_brownout_ladder_escalates_and_deescalates():
+    """The control law walks one rung per patience in each direction, and
+    any open breaker counts as pressure."""
+    config = SchedulerConfig(k_max=4, brownout_backlog=4.0,
+                             brownout_patience=2)
+    state = SchedulerState()
+    hot = SchedulerObservation(backlogs=(40, 40), num_active=2, capacity=2)
+    calm = SchedulerObservation(backlogs=(0, 0), num_active=2, capacity=2)
+    levels = []
+    for _ in range(8):
+        decision, state = decide(config, state, hot)
+        levels.append(decision.brownout)
+    assert levels == [0, 1, 1, 2, 2, 3, 3, 3], "one rung per 2 hot obs, cap 3"
+    assert decision.k == 1, "brownout >= 1 clamps the fused depth"
+    # de-escalation waits for the backlog EWMA itself to decay below the
+    # threshold, then steps one rung per patience — give it room
+    for _ in range(30):
+        decision, state = decide(config, state, calm)
+        levels.append(decision.brownout)
+    assert levels[-1] == 0 and decision.brownout == 0
+    assert sorted(levels[8:], reverse=True) == levels[8:], (
+        "de-escalation must walk down monotonically under calm load"
+    )
+    # an open breaker alone (zero backlog) is pressure
+    breaker = SchedulerObservation(backlogs=(0, 0), num_active=2, capacity=2,
+                                   open_breakers=1)
+    for _ in range(2):
+        decision, state = decide(config, state, breaker)
+    assert decision.brownout == 1
+    # no brownout_backlog configured -> the ladder never engages
+    off_cfg = SchedulerConfig(k_max=4)
+    off_state = SchedulerState()
+    for _ in range(8):
+        decision, off_state = decide(off_cfg, off_state, hot)
+    assert decision.brownout == 0
+
+
+def test_brownout_passthrough_serves_degraded_finite_audio():
+    """Level 3: analysis/synthesis passthrough — unenhanced but finite
+    audio, tagged degraded, counted in brownout_hops; level 0 restores the
+    enhanced stream bit-exactly."""
+    pool = SessionPool(PARAMS, CFG, capacity=2)
+    s = pool.attach()
+    audio = _audio(71, 6)
+    pool.set_brownout(3)
+    assert pool.brownout == 3
+    pool.feed(s, audio[: 3 * HOP])
+    pool.pump()
+    chunk, degraded = pool.read_degraded(s)
+    assert degraded and chunk.size == 3 * HOP
+    assert np.isfinite(chunk).all()
+    assert not np.array_equal(chunk, _reference(audio)[: 3 * HOP]), (
+        "passthrough must NOT be the enhanced stream"
+    )
+    assert pool.brownout_hops == 3
+    assert pool.shard_stats()["brownout"] == 3
+    assert pool.shard_stats()["brownout_hops"] == 3
+    pool.set_brownout(0)
+    pool.feed(s, audio[3 * HOP :])
+    pool.pump()
+    chunk, degraded = pool.read_degraded(s)
+    assert not degraded and chunk.size == 3 * HOP
+    assert np.isfinite(chunk).all()
+
+
+def test_sharded_set_brownout_reaches_every_live_shard():
+    sp = ShardedSessionPool(PARAMS, CFG, 2, shards=3)
+    sp.kill_shard(2)
+    sp.set_brownout(2)
+    stats = sp.shard_stats()
+    assert [s["brownout"] for s in stats if s["alive"]] == [2, 2]
+    assert stats[2]["brownout"] == 0  # dead shard: placeholder entry
+    sp.restart_shard(2)
+    sp.set_brownout(0)
+    assert all(s["brownout"] == 0 for s in sp.shard_stats())
+
+
+# -- the acceptance matrix --------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "backend,inflight,k",
+    [
+        ("xla", 1, 1),
+        ("xla", 2, 3),
+        ("pallas", 1, 3),
+        ("pallas", 2, 1),
+    ],
+)
+def test_chaos_faults_matrix(tmp_path, backend, inflight, k):
+    """The tentpole property: a seeded storm of step crashes + poison +
+    stalls, fully contained — bystanders bit-exact, poisoned streams
+    recovered via durability, breakers closed again."""
+    plan = FaultPlan(
+        9,
+        stall_seconds=0.2,
+        max_poisons=2,
+        max_step_errors=2,
+        max_stalls=1,
+    )
+    manager = DurabilityManager(tmp_path, snapshot_every=2)
+    # per-shard capacity >= total sessions: a single-shard death must never
+    # lose a session to capacity shortage on the survivor.  Threshold 3 with
+    # max_step_errors=2 means injected step crashes can at most suspect a
+    # shard — only the (single) watchdog stall kills one, so the fleet never
+    # loses both shards at once and every failover has a live destination.
+    sp = ShardedSessionPool(
+        PARAMS, CFG, 5, shards=2,
+        backend=backend, inflight=inflight, hops_per_step=k,
+        finite_guard=True, faults=plan, durability=manager,
+        breaker_threshold=3, watchdog_seconds=0.05,
+    )
+    audios = {f"m{i}": _audio(80 + i, 8 + i) for i in range(4)}
+    result = run_chaos_faults(
+        sp,
+        audios,
+        lambda a: _reference(a, backend),
+        plan=plan,
+        storm={
+            "step_error_rate": 0.30,
+            "poison_rate": 0.10,
+            "stall_rate": 0.20,
+            "stall_seconds": 0.2,
+        },
+        seed=13,
+        warm_rounds=4,
+        storm_rounds=10,
+        cool_rounds=4,
+    )
+    injected = plan.injected
+    assert injected["poisoned_out"] + injected["poisoned_state"] >= 1, (
+        f"the storm never poisoned anyone: {plan!r}"
+    )
+    assert injected["step_errors"] >= 1
+    assert injected["stalls"] >= 1 and sp.watchdog_failovers >= 1
+    assert result["poisoned"], "no session was quarantined"
+    assert result["recovered"], "no quarantined session recovered from disk"
+    assert sp.sessions_quarantined == len(result["poisoned"])
+    assert not sp.quarantined and sp.dead_shards == []

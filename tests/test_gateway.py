@@ -10,14 +10,30 @@ severed-and-reconnected client connection.
 """
 
 import dataclasses
+import random
+import socket
+import struct
+import time
 
 import jax
 import numpy as np
 import pytest
 
 from repro.models import tftnn as tft
-from repro.serve import SessionError, SessionPool, ShardedSessionPool
-from repro.serve.gateway import GatewayClient, GatewayThread, MSG_ATTACH
+from repro.serve import (
+    FaultPlan,
+    SessionError,
+    SessionPoisonedError,
+    SessionPool,
+    ShardedSessionPool,
+)
+from repro.serve.gateway import (
+    GatewayClient,
+    GatewayThread,
+    MAX_FRAME_BYTES,
+    MSG_ATTACH,
+    MSG_FEED,
+)
 from chaos import run_chaos_gateway
 
 
@@ -214,6 +230,179 @@ def test_gateway_chaos_kills_and_drops(gw):
     assert result["kills"] >= 1
     assert result["drops"] >= 2
     assert result["lost"] == set()
+
+
+# ---------------------------------------------------------------------------
+# protocol hostility: seeded fuzz of malformed frames + hostile payloads.
+# The contract under attack is containment — one bad connection may die, but
+# the server, every other connection, and every other session live on.
+# ---------------------------------------------------------------------------
+
+_HDR = struct.Struct("<IB")
+
+
+def _hostile_attacks(rnd: random.Random):
+    """One hostile connection's worth of attack blobs.
+
+    Each entry is ``(blob, expect_reply)`` — truncated frames never get an
+    answer (the server is still waiting for the rest), so the driver only
+    blocks on a reply where the protocol owes one.
+    """
+    menu = [
+        # unknown message type with a garbage payload -> typed ERROR
+        lambda: (
+            _HDR.pack(24, rnd.randrange(0x06, 0x7F)) + rnd.randbytes(24),
+            True,
+        ),
+        # ATTACH with invalid UTF-8 -> typed ERROR, connection stays usable
+        lambda: (_HDR.pack(4, MSG_ATTACH) + b"\xff\xfe\xfd\xfc", True),
+        # FEED before any ATTACH -> typed ERROR
+        lambda: (_HDR.pack(8, MSG_FEED) + bytes(8), True),
+        # declared length past the frame cap -> ERROR, then the gateway
+        # drops the connection (the byte stream cannot be re-synchronized)
+        lambda: (
+            _HDR.pack(MAX_FRAME_BYTES + 1 + rnd.randrange(1 << 20), MSG_FEED),
+            True,
+        ),
+        # truncated header: a few bytes, then the client vanishes
+        lambda: (_HDR.pack(64, MSG_FEED)[: rnd.randrange(1, 5)], False),
+        # truncated payload: header promises 100 bytes, delivers fewer
+        lambda: (
+            _HDR.pack(100, MSG_FEED) + rnd.randbytes(rnd.randrange(100)),
+            False,
+        ),
+        # pure line noise (whatever length it decodes to, it never arrives)
+        lambda: (rnd.randbytes(rnd.randrange(1, 48)), False),
+    ]
+    return [rnd.choice(menu)() for _ in range(rnd.randrange(1, 4))]
+
+
+def _raw_assault(addr, attacks) -> int:
+    """Fire attack blobs from a raw socket; count frames answered."""
+    answered = 0
+    try:
+        with socket.create_connection(addr, timeout=2.0) as s:
+            for blob, expect_reply in attacks:
+                try:
+                    s.sendall(blob)
+                except OSError:
+                    break  # server already dropped us: contained, move on
+                if not expect_reply:
+                    continue
+                s.settimeout(1.0)
+                try:
+                    if s.recv(1 << 16):
+                        answered += 1
+                except (TimeoutError, OSError):
+                    break
+    except OSError:
+        pass
+    return answered
+
+
+def test_gateway_hostile_frame_fuzz(gw):
+    """Seeded malformed-frame storm: the server answers or drops each bad
+    connection, never dies, and a healthy concurrent stream is bit-exact."""
+    rnd = random.Random(1234)
+    audio = _audio(30, 12)
+    expect = (audio.size // HOP) * HOP
+    answered = 0
+    with GatewayClient(*gw.address) as healthy:
+        healthy.attach("healthy")
+        pos = 0
+        for round_no in range(12):  # interleave: stream a little, attack
+            n = int(rnd.randrange(0, 3 * HOP + 1))
+            if pos < audio.size:
+                healthy.feed(audio[pos : pos + n])
+                pos += n
+            answered += _raw_assault(gw.address, _hostile_attacks(rnd))
+        if pos < audio.size:
+            healthy.feed(audio[pos:])
+        got = healthy.read_until(expect)
+        stats = healthy.stats()
+    assert answered >= 1, "no hostile frame was ever answered"
+    assert np.array_equal(got, _reference(audio)[:expect])
+    # the oversize-length attacks were rejected without killing the server
+    assert stats["frames_rejected"] >= 1
+    assert stats["active"] >= 0  # STATS round-trips: the gateway is alive
+    with GatewayClient(*gw.address) as c:  # and still accepts fresh clients
+        assert c.attach("post-storm")
+
+
+def test_gateway_nan_feed_quarantined_bystander_bit_exact():
+    """A hostile client feeds NaNs; the finite guard quarantines only that
+    session — the bystander's stream is bit-exact and the id is reusable."""
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2, finite_guard=True)
+    g = GatewayThread(sp, pump_interval=0.002)
+    try:
+        audio = _audio(31, 10)
+        expect = (audio.size // HOP) * HOP
+        with GatewayClient(*g.address) as good, GatewayClient(*g.address) as evil:
+            good.attach("bystander")
+            evil.attach("evil")
+            good.feed(audio[: 5 * HOP])
+            evil.feed(np.full(3 * HOP, np.nan, np.float32))
+            poisoned = False
+            for _ in range(200):  # the pump loop quarantines asynchronously
+                try:
+                    evil.read()
+                except SessionPoisonedError as e:
+                    assert e.good_hops == 0  # poisoned from the first hop
+                    poisoned = True
+                    break
+                time.sleep(0.01)
+            assert poisoned, "NaN feed was never quarantined"
+            good.feed(audio[5 * HOP :])
+            got = good.read_until(expect)
+            assert np.array_equal(got, _reference(audio)[:expect])
+            assert np.isfinite(got).all()
+            stats = good.stats()
+            assert stats["sessions_poisoned"] >= 1
+            assert stats["sessions_quarantined"] >= 1
+            # quarantine unbinds the id: the evil client can start fresh
+            assert evil.attach("evil") == "evil"
+            evil.feed(audio[: 2 * HOP])
+            fresh = evil.read_until(2 * HOP)
+            assert np.array_equal(fresh, _reference(audio)[: 2 * HOP])
+    finally:
+        g.stop()
+
+
+def test_gateway_fault_plan_frame_corruption_contained():
+    """Server-side injected frame corruption (the FaultPlan's hostile-client
+    stand-in): every mangled frame is answered or harmless, a retrying
+    client still lands a bit-exact stream."""
+    plan = FaultPlan(3, corrupt_rate=0.0, max_corruptions=8)
+    sp = ShardedSessionPool(PARAMS, CFG, 4, shards=2)
+    g = GatewayThread(sp, pump_interval=0.002, faults=plan)
+    try:
+        audio = _audio(32, 10)
+        expect = (audio.size // HOP) * HOP
+        rnd = random.Random(7)
+        with GatewayClient(*g.address) as c:
+            c.attach("fuzzed")  # attach while disarmed: the id stays clean
+            plan.corrupt_rate = 0.4
+            pos = 0
+            while pos < audio.size:
+                # odd sample counts make every corruption mode detectable
+                # (half or +1 byte of a 4n-byte payload, n odd, is never a
+                # whole float32 array) — so a lost feed is always re-sent
+                n = min(rnd.randrange(1, 3 * HOP, 2), audio.size - pos)
+                for _ in range(20):
+                    try:
+                        c.feed(audio[pos : pos + n])
+                        break
+                    except SessionError:
+                        continue  # mangled frame: the feed never landed
+                else:
+                    pytest.fail("feed never survived the corruption storm")
+                pos += n
+            plan.corrupt_rate = 0.0
+            got = c.read_until(expect)
+        assert plan.injected["corrupt_frames"] >= 1, "storm never fired"
+        assert np.array_equal(got, _reference(audio)[:expect])
+    finally:
+        g.stop()
 
 
 def test_gateway_orphan_ttl_reaps():
